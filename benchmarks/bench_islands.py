@@ -1,0 +1,68 @@
+"""Island-processing internals: AR vs DR, sort keys vs fixed, island order
+(paper §2.3 internal evaluation + Fig. 6 example)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.datasets import mondial_like, mondial_queries
+from repro.core import EngineConfig, HiperfactEngine
+from repro.core.conditions import Rule
+from repro.core.islands import build_islands, evaluate_rule, order_islands
+
+
+def bench_rnl_modes(n_countries=20, cities_per=80):
+    facts = mondial_like(n_countries, cities_per)
+    e = HiperfactEngine(EngineConfig.query1())
+    e.insert_facts(facts)
+    q = mondial_queries()[0]
+    rule = Rule("q", tuple(q))
+    rows = []
+    for rnl in ("AR", "DR"):
+        for sort_mode in ("sortkeys", "fixed"):
+            # warm
+            evaluate_rule(e.store, rule, rnl_mode=rnl, sort_mode=sort_mode)
+            t0 = time.perf_counter()
+            for _ in range(5):
+                b = evaluate_rule(e.store, rule, rnl_mode=rnl,
+                                  sort_mode=sort_mode)
+            dt = (time.perf_counter() - t0) / 5
+            rows.append((f"RNL={rnl}/sort={sort_mode}", dt, b.n))
+    return rows
+
+
+def bench_island_order(n_countries=20, cities_per=80):
+    """Cheapest-island-first vs worst-first: intermediate result sizes."""
+    facts = mondial_like(n_countries, cities_per)
+    e = HiperfactEngine(EngineConfig.query1())
+    e.insert_facts(facts)
+    q = mondial_queries()[0]
+    rule = Rule("q", tuple(q))
+    islands = build_islands(e.store, rule)
+    ordered = order_islands(islands)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        evaluate_rule(e.store, rule, islands=islands)
+    good = (time.perf_counter() - t0) / 5
+    # adversarial: reverse island cost order by inflating the cheap one
+    rev = list(reversed(ordered))
+    for isl in rev:
+        isl.total_cost = -isl.total_cost
+    t0 = time.perf_counter()
+    for _ in range(5):
+        evaluate_rule(e.store, rule, islands=rev)
+    bad = (time.perf_counter() - t0) / 5
+    return [("island_order=planner", good), ("island_order=reversed", bad)]
+
+
+def main():
+    print("config,seconds,rows")
+    for label, dt, n in bench_rnl_modes():
+        print(f"{label},{dt:.5f},{n}")
+    print("config,seconds")
+    for label, dt in bench_island_order():
+        print(f"{label},{dt:.5f}")
+
+
+if __name__ == "__main__":
+    main()

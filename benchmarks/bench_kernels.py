@@ -1,0 +1,66 @@
+"""Fork-join kernel microbenchmarks (paper §2.3 instances).
+
+On this CPU container the Pallas kernels only run under interpret=True
+(not a performance mode), so wall-times compare the *portable jitted XLA
+paths* against host numpy; the Pallas kernels are timed in interpret mode
+purely to confirm they execute (correctness lives in tests/test_kernels).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mergejoin.ops import merge_join_bounded
+from repro.kernels.sortmerge.ops import device_sort
+from repro.kernels.uniquefilter.ops import unique_sorted_bounded
+from repro.core.joins import merge_join_pairs
+
+
+def timeit(fn, *args, repeats=5):
+    fn(*args)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+        isinstance(out, (tuple, list)) else None
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench(n: int = 1 << 16):
+    rng = np.random.RandomState(0)
+    x = rng.randint(0, 1 << 30, n).astype(np.int64)
+    xj = jnp.asarray(x)
+    rows = []
+
+    rows.append(("sort_numpy", timeit(lambda: np.sort(x))))
+    rows.append(("sort_xla_jit", timeit(lambda: device_sort(xj))))
+    rows.append(("sort_pallas_interpret",
+                 timeit(lambda: device_sort(xj[: 1 << 12],
+                                            force_pallas=True,
+                                            interpret=True), repeats=1)))
+
+    l = rng.randint(0, n // 4, n // 2).astype(np.int64)
+    r = rng.randint(0, n // 4, n // 2).astype(np.int64)
+    lj, rj = jnp.asarray(l), jnp.asarray(r)
+    rows.append(("join_numpy", timeit(lambda: merge_join_pairs(l, r))))
+    rows.append(("join_xla_jit",
+                 timeit(lambda: merge_join_bounded(lj, rj, out_cap=1 << 18))))
+
+    rows.append(("unique_numpy", timeit(lambda: np.unique(x))))
+    rows.append(("unique_xla_jit",
+                 timeit(lambda: unique_sorted_bounded(xj))))
+    return rows
+
+
+def main():
+    print("kernel,seconds_per_call")
+    for name, s in bench():
+        print(f"{name},{s:.5f}")
+
+
+if __name__ == "__main__":
+    main()

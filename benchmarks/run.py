@@ -1,0 +1,92 @@
+"""Benchmark entry point: one section per paper table + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default sizes are CPU-container friendly (~2-4 min); --full scales the
+datasets up (the paper's LUBM50/100-class sizes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def section(title: str):
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)), flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    t_start = time.perf_counter()
+
+    section("Table 2 analog: inference (load/infer/query per engine)")
+    from benchmarks import bench_inference
+    scale = 8 if args.full else 1
+    for dname, ename, r in bench_inference.bench(scale=scale):
+        print(f"{dname},{ename},load={r['load_s']:.4f}s,"
+              f"infer={r['infer_s']:.4f}s,query={r['query_s']:.4f}s,"
+              f"inferred={r['inferred']}")
+
+    section("Table 4 analog: query config matrix")
+    from benchmarks import bench_query
+    kw = {} if not args.full else {
+        "mondial_kw": {"n_countries": 60, "cities_per": 120},
+        "dblp_kw": {"n_papers": 20000, "n_authors": 3000}}
+    for dname, label, r in bench_query.bench(**kw):
+        print(f"{dname},{label},load={r['load_s']:.4f}s,"
+              f"query={r['query_s']:.6f}s")
+
+    section("Hiperfact vs Rete scaling")
+    from benchmarks import bench_vs_rete
+    for s, hf, rete in bench_vs_rete.bench(
+            scales=(1, 2, 4) if not args.full else (1, 4, 8)):
+        sp = rete["infer_s"] / max(hf["infer_s"], 1e-9)
+        print(f"scale={s},facts={hf['n_facts']},"
+              f"hiperfact={hf['infer_s']:.4f}s,rete={rete['infer_s']:.4f}s,"
+              f"speedup={sp:.1f}x")
+
+    section("Island processing internals (AR/DR, sort keys, island order)")
+    from benchmarks import bench_islands
+    for label, dt, n in bench_islands.bench_rnl_modes():
+        print(f"{label},{dt:.5f}s,rows={n}")
+    for label, dt in bench_islands.bench_island_order():
+        print(f"{label},{dt:.5f}s")
+
+    section("Fork-join kernel micro (portable XLA paths)")
+    from benchmarks import bench_kernels
+    for name, s in bench_kernels.bench():
+        print(f"{name},{s:.5f}s")
+
+    section("Extensions (paper §5): rank-N query cache + CR compression")
+    from benchmarks import bench_extensions
+    for label, dt, hr in bench_extensions.bench_query_cache():
+        print(f"query-cache,{label},{dt:.5f}s,hit_rate={hr:.2f}")
+    for name, codec, ratio, enc_s in bench_extensions.bench_compression():
+        print(f"compression,{name},{codec},{ratio:.1f}x,{enc_s:.4f}s")
+
+    section("Roofline (from dry-run artifacts, if present)")
+    from benchmarks import roofline
+    for d in ("out/dryrun/single", "out/dryrun/multi"):
+        if os.path.isdir(d) and os.listdir(d):
+            print(f"-- {d}")
+            rows = roofline.report(roofline.load(d))
+            for r in rows:
+                print(f"{r['cell']},bound={r['bottleneck']},"
+                      f"compute={r['compute_s']:.4f}s,"
+                      f"memory={r['memory_s']:.4f}s,"
+                      f"collective={r['collective_s']:.4f}s,"
+                      f"useful={100*r['useful_ratio']:.1f}%,"
+                      f"roofline={100*r['roofline_frac']:.2f}%")
+        else:
+            print(f"-- {d}: no artifacts (run repro.launch.dryrun first)")
+
+    print(f"\nall benches done in {time.perf_counter() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

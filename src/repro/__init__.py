@@ -1,0 +1,13 @@
+"""repro — Hiperfact fact processing + LM systems framework on JAX/TPU.
+
+NOTE: the package enables ``jax_enable_x64`` at import.  The Hiperfact
+device algebra packs fact pairs into sortable int64 lanes (DESIGN.md §2);
+all neural-model code pins its dtypes explicitly (bf16/f32/int32), so the
+flag only widens what is meant to be wide.
+"""
+
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

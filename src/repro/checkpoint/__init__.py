@@ -1,0 +1,5 @@
+"""Checkpointing: sharded, atomic, async, elastic-restorable."""
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,13 @@
+"""Hiperfact core: the paper's contribution (see DESIGN.md §1-2)."""
+
+from repro.core.conditions import (AddAction, Condition, DeleteAction,
+                                   ExternalAction, JoinTest, Rule, Var, cond,
+                                   term)
+from repro.core.engine import EngineConfig, HiperfactEngine, InferStats
+from repro.core.facts import Fact, StringDictionary, ValueType
+
+__all__ = [
+    "AddAction", "Condition", "DeleteAction", "EngineConfig", "ExternalAction",
+    "Fact", "HiperfactEngine", "InferStats", "JoinTest", "Rule",
+    "StringDictionary", "ValueType", "Var", "cond", "term",
+]

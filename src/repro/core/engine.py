@@ -1,0 +1,371 @@
+"""HiperfactEngine — the full inference + query loop (paper Fig. 5).
+
+Pulls together: the rank-1 indexed fact store (§2.2), island fact processing
+(§2.3), and derivation trees (§2.4) into the inference loop of Fig. 1:
+facts modified -> active rules (re-)evaluated level by level -> inferred
+facts written (deduplicated) -> repeat until fixpoint.
+
+Configuration axes mirror the paper's internal evaluation (Table 1):
+index backend (AI/HI/LPIM/LPID) × join (HJ/MJ) × RNL (AR/DR) × result layout
+(CR/RR) × tree execution (PF/SF) × index write (PW/SW) × unique filter
+(SU/HU) × condition ordering (sort keys / fixed sort).  Presets ``infer1``
+(LPIM+HJ/AR/CR+PF/PW/SU) and ``query1`` (AI+MJ/AR/CR+PF/PW/SU) match Table 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.conditions import (AddAction, Condition, DeleteAction,
+                                   ExternalAction, Rule, is_var)
+from repro.core.derivation import DerivationTrees, build_derivation_trees
+from repro.core.facts import (Fact, ValueType, decode_value, encode_value,
+                              facts_to_columns)
+from repro.core.islands import build_islands, evaluate_rule
+from repro.core.joins import Bindings, merge_join_pairs, unique_rows_sorted
+from repro.core.store import FactStore, TypedFactTable
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    index_backend: str = "AI"     # AI | HI | LPIM | LPID
+    join: str = "MJ"              # MJ | HJ
+    rnl: str = "AR"               # AR | DR
+    layout: str = "CR"            # CR | RR
+    tree_exec: str = "PF"         # PF (parallel level queries) | SF
+    index_write: str = "PW"       # PW (parallel per-out-group) | SW
+    unique: str = "SU"            # SU (sort-merge) | HU (incremental hash)
+    sort_mode: str = "sortkeys"   # sortkeys | fixed
+    query_cache: bool = False     # rank-2/3 result cache (paper §5 fut. work)
+    lazy: bool = False            # Defs. 10/11 active-rule pruning
+    max_iterations: int = 1000
+    max_workers: int = 8
+
+    @staticmethod
+    def infer1() -> "EngineConfig":
+        return EngineConfig(index_backend="LPIM", join="HJ", rnl="AR",
+                            layout="CR", tree_exec="PF", index_write="PW",
+                            unique="SU")
+
+    @staticmethod
+    def query1() -> "EngineConfig":
+        return EngineConfig(index_backend="AI", join="MJ", rnl="AR",
+                            layout="CR", tree_exec="PF", index_write="PW",
+                            unique="SU")
+
+    def label(self) -> str:
+        return (f"{self.index_backend}+{self.join}/{self.rnl}/{self.layout}"
+                f"+{self.tree_exec}/{self.index_write}/{self.unique}")
+
+
+@dataclasses.dataclass
+class InferStats:
+    iterations: int = 0
+    rules_evaluated: int = 0
+    rules_skipped_inactive: int = 0
+    rules_skipped_unchanged: int = 0
+    facts_inferred: int = 0
+    facts_deleted: int = 0
+    seconds: float = 0.0
+
+
+def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
+                   vals: np.ndarray) -> np.ndarray:
+    """SU-path bulk dedup against the table: vectorized sorted anti-join on
+    the packed (id, attr) key with exact val verification."""
+    if table.n == 0 or len(ids) == 0:
+        return np.zeros(len(ids), bool)
+    key_new = (ids.astype(np.int64) << 32) | (attrs.astype(np.int64) & 0xFFFFFFFF)
+    key_old = (table.ids.astype(np.int64) << 32) | (
+        table.attrs.astype(np.int64) & 0xFFFFFFFF)
+    li, ri = merge_join_pairs(key_new, key_old)
+    if len(li) == 0:
+        return np.zeros(len(ids), bool)
+    ok = (vals[li] == table.vals[ri]) & table.alive[ri]
+    exists = np.zeros(len(ids), bool)
+    exists[li[ok]] = True
+    return exists
+
+
+class HiperfactEngine:
+    def __init__(self, config: EngineConfig | None = None) -> None:
+        self.config = config or EngineConfig()
+        self.store = FactStore(self.config.index_backend)
+        self.rules: list[Rule] = []
+        self._trees: DerivationTrees | None = None
+        self._type_version: dict[str, int] = {}
+        self._rule_seen_versions: dict[int, dict[str, int]] = {}
+        self.load_seconds = 0.0
+        self.last_infer: InferStats = InferStats()
+        from repro.core.querycache import RankNCache
+        self.query_cache = (RankNCache() if self.config.query_cache
+                            else None)
+
+    # ------------------------------------------------------------------ API
+    def add_rule(self, rule: Rule) -> None:
+        self.rules.append(rule)
+        self._trees = None  # derivation trees are rebuilt on rule changes
+        self._rule_seen_versions.clear()
+
+    def add_rules(self, rules: list[Rule]) -> None:
+        for r in rules:
+            self.add_rule(r)
+
+    def insert_facts(self, facts: list[Fact]) -> int:
+        t0 = time.perf_counter()
+        n = 0
+        for ftype, cols in facts_to_columns(facts, self.store.strings).items():
+            n += self._insert_columns(
+                ftype, cols["id"], cols["attr"], cols["val"], cols["valtype"])
+        self.load_seconds += time.perf_counter() - t0
+        return n
+
+    def insert_columns(self, ftype: str, ids, attrs, vals, valtypes) -> int:
+        t0 = time.perf_counter()
+        n = self._insert_columns(ftype, np.asarray(ids, np.int32),
+                                 np.asarray(attrs, np.int32),
+                                 np.asarray(vals, np.int64),
+                                 np.asarray(valtypes, np.int8))
+        self.load_seconds += time.perf_counter() - t0
+        return n
+
+    def trees(self) -> DerivationTrees:
+        if self._trees is None:
+            self._trees = build_derivation_trees(self.rules)
+        return self._trees
+
+    # ---------------------------------------------------------------- write
+    def _insert_columns(self, ftype: str, ids, attrs, vals, valtypes) -> int:
+        table = self.store.table(ftype)
+        if self.config.unique == "SU":
+            # parallel-sort-merge unique: batch-dedup then anti-join vs table
+            if len(ids) > 1:
+                keep = unique_rows_sorted([ids, attrs, vals])
+                ids, attrs, vals, valtypes = (
+                    ids[keep], attrs[keep], vals[keep], valtypes[keep])
+            exists = _mask_existing(table, ids, attrs, vals)
+            if exists.any():
+                fresh = ~exists
+                ids, attrs, vals, valtypes = (
+                    ids[fresh], attrs[fresh], vals[fresh], valtypes[fresh])
+            n = table.insert(ids, attrs, vals, valtypes, dedup=False)
+        else:  # HU: incremental hashtable dedup inside the table
+            n = table.insert(ids, attrs, vals, valtypes, dedup=True)
+        if n:
+            self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
+        return n
+
+    def _delete_matching(self, ftype: str, ids, attrs, vals) -> int:
+        table = self.store.tables.get(ftype)
+        if table is None or table.n == 0 or len(ids) == 0:
+            return 0
+        key_t = (table.ids.astype(np.int64) << 32) | (
+            table.attrs.astype(np.int64) & 0xFFFFFFFF)
+        key_d = (np.asarray(ids, np.int64) << 32) | (
+            np.asarray(attrs, np.int64) & 0xFFFFFFFF)
+        li, ri = merge_join_pairs(key_d, key_t)
+        if len(li) == 0:
+            return 0
+        ok = (np.asarray(vals, np.int64)[li] == table.vals[ri]) & table.alive[ri]
+        rows = np.unique(ri[ok])
+        if len(rows):
+            table.delete_rows(rows)
+            self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
+        return len(rows)
+
+    # -------------------------------------------------------------- actions
+    def _slot_column(self, slot, bindings: Bindings, n: int,
+                     valtype: ValueType | None) -> np.ndarray:
+        """Materialize one action slot for all binding rows."""
+        if is_var(slot):
+            return np.asarray(bindings.col(slot.name), np.int64)
+        if valtype is None:  # id/attr slot: string handle
+            return np.full(n, self.store.strings.intern(slot), np.int64)
+        return np.full(n, encode_value(slot, valtype, self.store.strings),
+                       np.int64)
+
+    def _run_actions(self, rule: Rule, bindings: Bindings) -> tuple[dict, dict]:
+        """Returns ({ftype: (ids, attrs, vals, valtypes)}, {ftype: (...)}) of
+        adds and deletes derived from the bindings."""
+        adds: dict[str, list] = {}
+        dels: dict[str, list] = {}
+        n = bindings.n
+        for a in rule.actions:
+            if isinstance(a, ExternalAction):
+                a.callback({k: bindings.col(k) for k in bindings.names()})
+                continue
+            if n == 0:
+                continue
+            ids = self._slot_column(a.id, bindings, n, None).astype(np.int32)
+            attrs = self._slot_column(a.attr, bindings, n, None).astype(np.int32)
+            if isinstance(a, AddAction) and a.compute is not None:
+                vals = np.asarray(
+                    a.compute({k: bindings.col(k) for k in bindings.names()}),
+                    np.int64)
+            else:
+                vals = self._slot_column(a.val, bindings, n, a.valtype)
+            valtypes = np.full(n, int(a.valtype), np.int8)
+            bucket = adds if isinstance(a, AddAction) else dels
+            bucket.setdefault(a.fact_type, []).append((ids, attrs, vals, valtypes))
+        cat = lambda parts: tuple(np.concatenate(x) for x in zip(*parts))
+        return ({t: cat(p) for t, p in adds.items()},
+                {t: cat(p) for t, p in dels.items()})
+
+    # ------------------------------------------------------------ inference
+    def _rule_inputs_changed(self, ridx: int) -> bool:
+        seen = self._rule_seen_versions.get(ridx)
+        if seen is None:
+            return True
+        for t in self.rules[ridx].input_types():
+            if self._type_version.get(t, 0) != seen.get(t, 0):
+                return True
+        return False
+
+    def _note_rule_evaluated(self, ridx: int) -> None:
+        self._rule_seen_versions[ridx] = {
+            t: self._type_version.get(t, 0)
+            for t in self.rules[ridx].input_types()}
+
+    def _rl_fn(self):
+        if self.query_cache is None:
+            return None
+        cache = self.query_cache
+        return lambda store, c: cache.lookup(
+            store, c, self._type_version.get(c.fact_type, 0))
+
+    def _eval_one(self, ridx: int) -> tuple[int, dict, dict]:
+        rule = self.rules[ridx]
+        cfg = self.config
+        bindings = evaluate_rule(
+            self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
+            layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
+            rl_fn=self._rl_fn())
+        adds, dels = self._run_actions(rule, bindings)
+        return ridx, adds, dels
+
+    def infer(self) -> InferStats:
+        """Run the inference loop (Fig. 1) to fixpoint."""
+        t0 = time.perf_counter()
+        cfg = self.config
+        trees = self.trees()
+        active = trees.active_set(lazy=cfg.lazy)
+        stats = InferStats()
+        pool = (ThreadPoolExecutor(max_workers=cfg.max_workers)
+                if (cfg.tree_exec == "PF" or cfg.index_write == "PW") else None)
+        try:
+            changed = True
+            while changed and stats.iterations < cfg.max_iterations:
+                changed = False
+                stats.iterations += 1
+                for level in trees.levels:
+                    level_rules = []
+                    for r in level:
+                        if r not in active:
+                            if not self.rules[r].is_query():
+                                stats.rules_skipped_inactive += 1
+                            continue
+                        if self.rules[r].is_query():
+                            continue  # queries run via .query()/.run_queries()
+                        if not self._rule_inputs_changed(r):
+                            stats.rules_skipped_unchanged += 1
+                            continue
+                        level_rules.append(r)
+                    if not level_rules:
+                        continue
+                    # Algorithm 2: islands + sort keys rebuilt per level
+                    # (cardinalities moved); groups own disjoint output types.
+                    groups = trees.out_groups(level_rules, set(level_rules))
+                    results: list[tuple[int, dict, dict]] = []
+                    if pool is not None and cfg.tree_exec == "PF" and len(groups) > 1:
+                        futs = []
+                        for g in groups:
+                            for r in g:
+                                self._note_rule_evaluated(r)
+                                futs.append(pool.submit(self._eval_one, r))
+                        results = [f.result() for f in futs]
+                    else:
+                        for g in groups:
+                            for r in g:
+                                self._note_rule_evaluated(r)
+                                results.append(self._eval_one(r))
+                    stats.rules_evaluated += len(results)
+                    # Writes: PW = concurrent per disjoint fact type;
+                    # SW = sequential in schedule order.
+                    by_type_adds: dict[str, list] = {}
+                    by_type_dels: dict[str, list] = {}
+                    for _, adds, dels in results:
+                        for t, cols in adds.items():
+                            by_type_adds.setdefault(t, []).append(cols)
+                        for t, cols in dels.items():
+                            by_type_dels.setdefault(t, []).append(cols)
+
+                    def _write_type(t: str, parts: list) -> int:
+                        cols = tuple(np.concatenate(x) for x in zip(*parts))
+                        return self._insert_columns(t, *cols)
+
+                    if pool is not None and cfg.index_write == "PW" and len(by_type_adds) > 1:
+                        futs = {t: pool.submit(_write_type, t, p)
+                                for t, p in by_type_adds.items()}
+                        wrote = {t: f.result() for t, f in futs.items()}
+                    else:
+                        wrote = {t: _write_type(t, p)
+                                 for t, p in by_type_adds.items()}
+                    for t, parts in by_type_dels.items():
+                        cols = tuple(np.concatenate(x) for x in zip(*parts))
+                        ndel = self._delete_matching(t, cols[0], cols[1], cols[2])
+                        stats.facts_deleted += ndel
+                        changed |= ndel > 0
+                    n_new = sum(wrote.values())
+                    stats.facts_inferred += n_new
+                    changed |= n_new > 0
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+        stats.seconds = time.perf_counter() - t0
+        self.last_infer = stats
+        return stats
+
+    # --------------------------------------------------------------- query
+    def query(self, conditions: list[Condition], decode: bool = True):
+        """Evaluate an ad-hoc query (a rule with no actions, Def. 10)."""
+        rule = Rule("<adhoc>", tuple(conditions))
+        cfg = self.config
+        bindings = evaluate_rule(
+            self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
+            layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
+            rl_fn=self._rl_fn())
+        if not decode:
+            return bindings
+        return decode_bindings(self.store, conditions, bindings)
+
+
+def var_valtypes(conditions: list[Condition]) -> dict[str, ValueType | None]:
+    """var -> valtype if bound from a <val> slot, None for id/attr (strings)."""
+    from repro.core.store import Component
+
+    out: dict[str, ValueType | None] = {}
+    for c in conditions:
+        for name, comp in c.variables().items():
+            if name not in out:
+                out[name] = c.valtype if comp == Component.VAL else None
+    return out
+
+
+def decode_bindings(store: FactStore, conditions: list[Condition],
+                    bindings: Bindings) -> list[dict]:
+    """Materialize decoded result rows (strings resolved, floats un-punned)."""
+    vts = var_valtypes(conditions)
+    names = [n for n in bindings.names() if not n.startswith("_")]
+    cols = {}
+    for n in names:
+        vt = vts.get(n)
+        lanes = bindings.col(n)
+        if vt is None or vt == ValueType.STRING:
+            cols[n] = [store.strings.lookup_id(int(x)) for x in lanes]
+        else:
+            cols[n] = [decode_value(int(x), vt, store.strings) for x in lanes]
+    return [{n: cols[n][i] for n in names} for i in range(bindings.n)]

@@ -1,0 +1,222 @@
+"""Join-level structures and algorithms (paper §2.3).
+
+* Intermediate join results come in two layouts: columnar ``CR`` (dict of
+  tightly packed per-variable columns — compressible, vector friendly) and
+  row-major ``RR`` (one ``[rows, vars]`` matrix) — the paper benchmarks both.
+* Join algorithms: ``MJ`` (parallel sort-merge join — fork-join instance 2)
+  and ``HJ`` (hash join).  TPU adaptation (see DESIGN.md): HJ keeps the hash
+  as a *bucketizer* and probes with binary search on the hashed keys —
+  pointer-chasing open addressing does not vectorize on TPU.
+* ``SU`` unique filter: the paper's parallel sort-merge unique filter —
+  lexsort + neighbor compare.
+
+Everything here is bulk/vectorized on dense columns — the per-element work is
+exactly what ``kernels/sortmerge`` and ``kernels/mergejoin`` implement as
+Pallas TPU kernels; these numpy forms are their host twins and oracles.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.store import splitmix64
+
+# ---------------------------------------------------------------------------
+# Pair-producing join cores
+
+
+def merge_join_pairs(lkeys: np.ndarray, rkeys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Sort-merge equi-join: all (li, ri) with lkeys[li] == rkeys[ri].
+
+    Sorts the right side once, then resolves every left key with two binary
+    searches; the expansion to pairs is pure index arithmetic (no host loop).
+    """
+    lkeys = np.asarray(lkeys)
+    rkeys = np.asarray(rkeys)
+    if len(lkeys) == 0 or len(rkeys) == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    rorder = np.argsort(rkeys, kind="stable")
+    rsorted = rkeys[rorder]
+    lo = np.searchsorted(rsorted, lkeys, side="left")
+    hi = np.searchsorted(rsorted, lkeys, side="right")
+    counts = hi - lo
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    li = np.repeat(np.arange(len(lkeys), dtype=np.int64), counts)
+    starts = np.cumsum(counts) - counts
+    pos_within = np.arange(total, dtype=np.int64) - starts[li]
+    ri = rorder[lo[li] + pos_within]
+    return li, ri
+
+
+def hash_join_pairs(lkeys: np.ndarray, rkeys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Radix-hash join: bucketize by a 64-bit mix, binary-probe the hashed
+    domain, verify exact key equality on the candidates."""
+    lkeys = np.asarray(lkeys, np.int64)
+    rkeys = np.asarray(rkeys, np.int64)
+    if len(lkeys) == 0 or len(rkeys) == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    lh = splitmix64(lkeys.view(np.uint64)).view(np.int64)
+    rh = splitmix64(rkeys.view(np.uint64)).view(np.int64)
+    li, ri = merge_join_pairs(lh, rh)
+    if len(li) == 0:
+        return li, ri
+    ok = lkeys[li] == rkeys[ri]
+    return li[ok], ri[ok]
+
+
+JOIN_ALGOS = {"MJ": merge_join_pairs, "HJ": hash_join_pairs}
+
+
+def semi_join_rows(rows_keys: np.ndarray, bound_values: np.ndarray) -> np.ndarray:
+    """Mask for ``rows_keys`` that appear in ``bound_values`` (AR-mode RNL:
+    restrict a lookup to values already bound in the join buffer)."""
+    if len(rows_keys) == 0:
+        return np.zeros(0, bool)
+    uniq = np.unique(bound_values)
+    pos = np.searchsorted(uniq, rows_keys)
+    pos = np.clip(pos, 0, len(uniq) - 1)
+    return uniq[pos] == rows_keys
+
+
+def unique_rows_sorted(cols: list[np.ndarray]) -> np.ndarray:
+    """SU unique filter: indices of the first occurrence of each distinct
+    row of ``zip(*cols)`` (lexsort + neighbor compare)."""
+    n = len(cols[0])
+    if n == 0:
+        return np.empty(0, np.int64)
+    order = np.lexsort(tuple(reversed(cols)))
+    # a sorted row is new iff it differs from its predecessor in ANY column
+    diff = np.zeros(n, bool)
+    diff[0] = True
+    for c in cols:
+        cs = c[order]
+        diff[1:] |= cs[1:] != cs[:-1]
+    return np.sort(order[diff])
+
+
+# ---------------------------------------------------------------------------
+# Intermediate join-result layouts (CR vs RR)
+
+
+class Bindings:
+    """Abstract intermediate join result: named variable columns."""
+
+    layout = "?"
+
+    def __init__(self) -> None:
+        raise NotImplementedError
+
+    # interface: n, names(), col(name), select(idx), merged(...)
+
+
+class ColumnarBindings(Bindings):
+    """CR: one tight int64 array per variable (paper's winning layout)."""
+
+    layout = "CR"
+
+    def __init__(self, cols: dict[str, np.ndarray]) -> None:
+        self.cols = {k: np.asarray(v, np.int64) for k, v in cols.items()}
+        self.n = len(next(iter(self.cols.values()))) if self.cols else 0
+
+    @staticmethod
+    def empty() -> "ColumnarBindings":
+        b = ColumnarBindings.__new__(ColumnarBindings)
+        b.cols, b.n = {}, 0
+        return b
+
+    def names(self) -> list[str]:
+        return list(self.cols.keys())
+
+    def col(self, name: str) -> np.ndarray:
+        return self.cols[name]
+
+    def select(self, idx: np.ndarray) -> "ColumnarBindings":
+        return ColumnarBindings({k: v[idx] for k, v in self.cols.items()})
+
+    def merged(self, idx_self: np.ndarray, other: "Bindings",
+               idx_other: np.ndarray) -> "ColumnarBindings":
+        out = {k: v[idx_self] for k, v in self.cols.items()}
+        for k in other.names():
+            if k not in out:
+                out[k] = other.col(k)[idx_other]
+        return ColumnarBindings(out)
+
+
+class RowBindings(Bindings):
+    """RR: one ``[rows, vars]`` int64 matrix (the paper's row layout —
+    kept for the internal evaluation; loses to CR on vector hardware)."""
+
+    layout = "RR"
+
+    def __init__(self, names: list[str], mat: np.ndarray) -> None:
+        self._names = list(names)
+        self.mat = np.asarray(mat, np.int64).reshape(-1, max(1, len(self._names)))
+        self.n = self.mat.shape[0] if self._names else 0
+
+    @staticmethod
+    def from_cols(cols: dict[str, np.ndarray]) -> "RowBindings":
+        names = list(cols.keys())
+        if not names:
+            return RowBindings([], np.empty((0, 1), np.int64))
+        mat = np.stack([np.asarray(cols[k], np.int64) for k in names], axis=1)
+        return RowBindings(names, mat)
+
+    def names(self) -> list[str]:
+        return self._names
+
+    def col(self, name: str) -> np.ndarray:
+        return self.mat[:, self._names.index(name)]
+
+    def select(self, idx: np.ndarray) -> "RowBindings":
+        return RowBindings(self._names, self.mat[idx])
+
+    def merged(self, idx_self: np.ndarray, other: "Bindings",
+               idx_other: np.ndarray) -> "RowBindings":
+        names = list(self._names)
+        blocks = [self.mat[idx_self]]
+        extra = [k for k in other.names() if k not in names]
+        if extra:
+            blocks.append(np.stack([other.col(k)[idx_other] for k in extra], axis=1))
+            names += extra
+        return RowBindings(names, np.concatenate(blocks, axis=1) if len(blocks) > 1
+                           else blocks[0])
+
+
+def make_bindings(cols: dict[str, np.ndarray], layout: str) -> Bindings:
+    if layout == "RR":
+        return RowBindings.from_cols(cols)
+    return ColumnarBindings(cols)
+
+
+def join_bindings(left: Bindings, right: Bindings, keys: list[str],
+                  algo: str = "MJ") -> Bindings:
+    """Equi-join two binding tables on shared variables.
+
+    The first key drives the pair-producing join; remaining keys are verified
+    on the candidate pairs (exact, standard multi-key refinement).
+    If there is no shared key the result is the cross product — the island
+    planner avoids this unless the rule truly is a cross product.
+    """
+    if left.n == 0 or right.n == 0:
+        return left.select(np.empty(0, np.int64))
+    if not keys:
+        li = np.repeat(np.arange(left.n, dtype=np.int64), right.n)
+        ri = np.tile(np.arange(right.n, dtype=np.int64), left.n)
+    else:
+        li, ri = JOIN_ALGOS[algo](left.col(keys[0]), right.col(keys[0]))
+        for k in keys[1:]:
+            if len(li) == 0:
+                break
+            ok = left.col(k)[li] == right.col(k)[ri]
+            li, ri = li[ok], ri[ok]
+    return left.merged(li, right, ri)
+
+
+def dedup_bindings(b: Bindings) -> Bindings:
+    """Project-distinct over all columns (used for final query results)."""
+    if b.n == 0:
+        return b
+    keep = unique_rows_sorted([b.col(k) for k in b.names()])
+    return b.select(keep)

@@ -1,0 +1,64 @@
+"""Rank-2/3 condition-lookup result cache (paper §5 future work:
+"dynamic caching of rank 2 and 3 query results, allowing fine grained
+result [reuse] among queries (including rule conditions)").
+
+RNL lookups (Def. 7) for rank>=2 conditions repeat across rule
+evaluations and fixpoint iterations; their results only change when the
+underlying fact type changes.  The cache keys on the *encoded* constant
+slots (fact type + (component, value) pairs) and is invalidated by the
+store's per-type version counters — the same counters the engine already
+maintains for rule-input change detection, so invalidation is exact, not
+heuristic.
+
+Eviction: bounded LRU (the paper's "fine grained result reuse" without
+unbounded RAM — exactly the P1 critique applied to our own cache).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.conditions import Condition, rl
+from repro.core.store import FactStore
+
+
+class RankNCache:
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._data: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(store: FactStore, c: Condition, version: int) -> tuple | None:
+        consts = c.const_slots(store.strings)
+        if len(consts) < 2:          # rank-1 is the index itself; no caching
+            return None
+        return (c.fact_type, version,
+                tuple(sorted((int(comp), v) for comp, v in consts)))
+
+    def lookup(self, store: FactStore, c: Condition,
+               type_version: int) -> np.ndarray:
+        """RL with caching for CR >= 2 conditions."""
+        key = self._key(store, c, type_version)
+        if key is None:
+            return rl(store, c)
+        hit = self._data.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._data.move_to_end(key)
+            return hit
+        self.misses += 1
+        rows = rl(store, c)
+        self._data[key] = rows
+        if len(self._data) > self.max_entries:
+            self._data.popitem(last=False)
+        return rows
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._data),
+                "hit_rate": self.hits / total if total else 0.0}

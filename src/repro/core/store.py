@@ -1,0 +1,412 @@
+"""Columnar fact store + rank-1 index backends (paper §2.2).
+
+Storage is struct-of-arrays per fact type (strong typing, Def. 1): separate
+namespaces avoid cross-type pattern matches and give the derivation-tree
+executor disjoint write ranges (paper §2.4 "parallel index write").
+
+Three rank-1 index backends mirror the paper's internal evaluation:
+
+* ``AI``   — 3-level sparse-array index  → sorted-permutation index
+             (searchsorted lookups; the TPU-native "tight array" take).
+* ``HI``   — hashtable index             → radix-hash bucketized CSR index.
+* ``LPIM`` — linked pages + memory pool  → sorted base + unsorted tail with
+             page-granular pre-allocation; compaction amortized over pages.
+* ``LPID`` — linked pages, dynamic mem   → same, but storage grows exactly
+             (realloc per batch, no pool).
+
+All backends expose the same API: exact/estimated ``count`` (the input to
+condition cardinality CCar, Def. 6) and ``lookup`` returning row ids.
+"""
+
+from __future__ import annotations
+
+import abc
+import enum
+
+import numpy as np
+
+from repro.core.facts import StringDictionary
+
+PAGE_ROWS = 4096  # paper: pages pre-allocated by a memory pool
+
+
+class Component(enum.IntEnum):
+    ID = 0
+    ATTR = 1
+    VAL = 2
+
+
+_COMP_NAMES = {Component.ID: "id", Component.ATTR: "attr", Component.VAL: "val"}
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized 64-bit mix hash (used for HI bucketing and HJ joins)."""
+    z = x.astype(np.uint64, copy=True)
+    z += np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+class Rank1Index(abc.ABC):
+    """Per-fact-type inverted index over the three triple components."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def rebuild(self, table: "TypedFactTable") -> None: ...
+
+    @abc.abstractmethod
+    def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
+        """Index newly appended rows ``[start, stop)``."""
+
+    @abc.abstractmethod
+    def lookup(self, table: "TypedFactTable", comp: Component, value: int) -> np.ndarray:
+        """Exact row ids whose ``comp`` column equals ``value``."""
+
+    @abc.abstractmethod
+    def count(self, table: "TypedFactTable", comp: Component, value: int) -> int:
+        """(Possibly estimated) cardinality for CCar (Def. 6)."""
+
+    def memory_bytes(self) -> int:
+        return 0
+
+
+class SortedArrayIndex(Rank1Index):
+    """``AI``: per component a sorted copy of the column + permutation.
+
+    Lookup = two binary searches + one contiguous slice of the permutation —
+    the searchsorted analogue of the paper's 3-level sparse array whose leaf
+    is a tight array of matching facts.
+    """
+
+    name = "AI"
+
+    def __init__(self) -> None:
+        self._sorted: dict[Component, np.ndarray] = {}
+        self._perm: dict[Component, np.ndarray] = {}
+
+    def rebuild(self, table: "TypedFactTable") -> None:
+        for comp in Component:
+            col = table.column(comp)
+            perm = np.argsort(col, kind="stable").astype(np.int32)
+            self._perm[comp] = perm
+            self._sorted[comp] = col[perm]
+
+    def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
+        # AI has no incremental form in the paper (it is the load-time
+        # winner / append-time loser): full per-component re-sort.
+        self.rebuild(table)
+
+    def _range(self, comp: Component, value: int) -> tuple[int, int]:
+        s = self._sorted.get(comp)
+        if s is None or len(s) == 0:
+            return 0, 0
+        lo = int(np.searchsorted(s, value, side="left"))
+        hi = int(np.searchsorted(s, value, side="right"))
+        return lo, hi
+
+    def lookup(self, table: "TypedFactTable", comp: Component, value: int) -> np.ndarray:
+        lo, hi = self._range(comp, value)
+        return self._perm[comp][lo:hi] if hi > lo else np.empty(0, np.int32)
+
+    def count(self, table: "TypedFactTable", comp: Component, value: int) -> int:
+        lo, hi = self._range(comp, value)
+        return hi - lo
+
+    def memory_bytes(self) -> int:
+        return sum(a.nbytes for a in self._sorted.values()) + sum(
+            a.nbytes for a in self._perm.values()
+        )
+
+
+class HashIndex(Rank1Index):
+    """``HI``: bucketized CSR index.
+
+    The paper's two-level hashtable is pointer-heavy; the TPU-native
+    adaptation keeps the *hash* (cheap bucketization) but stores each
+    component as rows sorted by bucket id, so a probe is a binary search on
+    bucket boundaries + an equality filter over one dense run.
+    ``count`` returns the bucket size — an upper-bound estimate (documented
+    trade-off: HI trades exact CCar for O(1) maintenance).
+    """
+
+    name = "HI"
+
+    def __init__(self, n_buckets: int = 1 << 12) -> None:
+        self.n_buckets = n_buckets
+        self._bucket_sorted: dict[Component, np.ndarray] = {}
+        self._perm: dict[Component, np.ndarray] = {}
+
+    def _bucket_of(self, values: np.ndarray) -> np.ndarray:
+        return (splitmix64(values.astype(np.int64).view(np.uint64)) % np.uint64(self.n_buckets)).astype(np.int64)
+
+    def rebuild(self, table: "TypedFactTable") -> None:
+        for comp in Component:
+            col = table.column(comp)
+            b = self._bucket_of(col)
+            perm = np.argsort(b, kind="stable").astype(np.int32)
+            self._perm[comp] = perm
+            self._bucket_sorted[comp] = b[perm]
+
+    def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
+        self.rebuild(table)  # CSR append == rebuild; see LPIM for amortization
+
+    def _probe(self, table: "TypedFactTable", comp: Component, value: int) -> np.ndarray:
+        bs = self._bucket_sorted.get(comp)
+        if bs is None or len(bs) == 0:
+            return np.empty(0, np.int32)
+        b = int(self._bucket_of(np.asarray([value]))[0])
+        lo = int(np.searchsorted(bs, b, side="left"))
+        hi = int(np.searchsorted(bs, b, side="right"))
+        return self._perm[comp][lo:hi]
+
+    def lookup(self, table: "TypedFactTable", comp: Component, value: int) -> np.ndarray:
+        rows = self._probe(table, comp, value)
+        if len(rows) == 0:
+            return rows
+        col = table.column(comp)
+        return rows[col[rows] == value]
+
+    def count(self, table: "TypedFactTable", comp: Component, value: int) -> int:
+        return len(self._probe(table, comp, value))
+
+    def memory_bytes(self) -> int:
+        return sum(a.nbytes for a in self._bucket_sorted.values()) + sum(
+            a.nbytes for a in self._perm.values()
+        )
+
+
+class PagedIndex(Rank1Index):
+    """``LPIM``/``LPID``: sorted base + unsorted tail, page-granular growth.
+
+    The paper's linked-pages design avoids per-insert dynamic allocation by
+    drawing pre-allocated pages from a pool (LPIM) or allocating on demand
+    (LPID).  The array analogue: appended rows land in an unsorted *tail*
+    (no data movement); once the tail exceeds ``compact_pages`` pages it is
+    merged into the sorted base (amortized, page-granular).  Lookups combine
+    a binary search over the base with a vectorized filter over the tail.
+    """
+
+    def __init__(self, pooled: bool = True, compact_pages: int = 4) -> None:
+        self.pooled = pooled
+        self.name = "LPIM" if pooled else "LPID"
+        self.compact_rows = compact_pages * PAGE_ROWS
+        self._sorted: dict[Component, np.ndarray] = {}
+        self._perm: dict[Component, np.ndarray] = {}
+        self._base_n = 0
+        self._n = 0
+
+    def rebuild(self, table: "TypedFactTable") -> None:
+        self._n = table.n
+        self._base_n = table.n
+        for comp in Component:
+            col = table.column(comp)
+            perm = np.argsort(col, kind="stable").astype(np.int32)
+            self._perm[comp] = perm
+            self._sorted[comp] = col[perm]
+
+    def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
+        self._n = stop
+        if self._n - self._base_n >= self.compact_rows or not self.pooled:
+            # LPID compacts eagerly (dynamic memory, no pool to hide in);
+            # LPIM defers until a pool page's worth of tail accumulated.
+            self.rebuild(table)
+
+    def _tail_rows(self, table: "TypedFactTable", comp: Component, value: int) -> np.ndarray:
+        if self._n <= self._base_n:
+            return np.empty(0, np.int32)
+        tail = table.column(comp)[self._base_n : self._n]
+        hit = np.nonzero(tail == value)[0].astype(np.int32)
+        return hit + np.int32(self._base_n)
+
+    def _base_range(self, comp: Component, value: int) -> tuple[int, int]:
+        s = self._sorted.get(comp)
+        if s is None or len(s) == 0:
+            return 0, 0
+        lo = int(np.searchsorted(s, value, side="left"))
+        hi = int(np.searchsorted(s, value, side="right"))
+        return lo, hi
+
+    def lookup(self, table: "TypedFactTable", comp: Component, value: int) -> np.ndarray:
+        lo, hi = self._base_range(comp, value)
+        base = self._perm[comp][lo:hi] if hi > lo else np.empty(0, np.int32)
+        tail = self._tail_rows(table, comp, value)
+        return base if len(tail) == 0 else np.concatenate([base, tail])
+
+    def count(self, table: "TypedFactTable", comp: Component, value: int) -> int:
+        lo, hi = self._base_range(comp, value)
+        return (hi - lo) + len(self._tail_rows(table, comp, value))
+
+    def memory_bytes(self) -> int:
+        return sum(a.nbytes for a in self._sorted.values()) + sum(
+            a.nbytes for a in self._perm.values()
+        )
+
+
+INDEX_BACKENDS = {
+    "AI": SortedArrayIndex,
+    "HI": HashIndex,
+    "LPIM": lambda: PagedIndex(pooled=True),
+    "LPID": lambda: PagedIndex(pooled=False),
+}
+
+
+class TypedFactTable:
+    """Append-only columnar table for one fact type + its rank-1 index.
+
+    Deletions (paper actions ``delete``/``replace``) are tombstones in the
+    ``alive`` column; lookups filter them out lazily.
+    Capacity grows in page units (memory-pool discipline) so appends never
+    reallocate per-row.
+    """
+
+    __slots__ = ("ftype", "n", "_cap", "_id", "_attr", "_val", "_valtype",
+                 "_alive", "index", "_key_set")
+
+    def __init__(self, ftype: str, index_backend: str = "AI") -> None:
+        self.ftype = ftype
+        self.n = 0
+        self._cap = PAGE_ROWS
+        self._id = np.empty(self._cap, np.int32)
+        self._attr = np.empty(self._cap, np.int32)
+        self._val = np.empty(self._cap, np.int64)
+        self._valtype = np.empty(self._cap, np.int8)
+        self._alive = np.empty(self._cap, bool)
+        self.index: Rank1Index = INDEX_BACKENDS[index_backend]()
+        # Host-side exact-membership set for incremental dedup (HU path) and
+        # idempotent inserts; the SU path dedups in bulk before reaching here.
+        self._key_set: set[tuple[int, int, int]] = set()
+
+    # -- columns ----------------------------------------------------------
+    def column(self, comp: Component) -> np.ndarray:
+        if comp == Component.ID:
+            return self._id[: self.n]
+        if comp == Component.ATTR:
+            return self._attr[: self.n]
+        return self._val[: self.n]
+
+    @property
+    def ids(self) -> np.ndarray:
+        return self._id[: self.n]
+
+    @property
+    def attrs(self) -> np.ndarray:
+        return self._attr[: self.n]
+
+    @property
+    def vals(self) -> np.ndarray:
+        return self._val[: self.n]
+
+    @property
+    def valtypes(self) -> np.ndarray:
+        return self._valtype[: self.n]
+
+    @property
+    def alive(self) -> np.ndarray:
+        return self._alive[: self.n]
+
+    def _grow_to(self, need: int) -> None:
+        if need <= self._cap:
+            return
+        new_cap = self._cap
+        while new_cap < need:
+            new_cap = new_cap * 2 if new_cap >= PAGE_ROWS else PAGE_ROWS
+        # round up to whole pages (pool discipline)
+        new_cap = ((new_cap + PAGE_ROWS - 1) // PAGE_ROWS) * PAGE_ROWS
+        for name in ("_id", "_attr", "_val", "_valtype", "_alive"):
+            old = getattr(self, name)
+            new = np.empty(new_cap, old.dtype)
+            new[: self.n] = old[: self.n]
+            setattr(self, name, new)
+        self._cap = new_cap
+
+    # -- mutation ---------------------------------------------------------
+    def insert(
+        self,
+        ids: np.ndarray,
+        attrs: np.ndarray,
+        vals: np.ndarray,
+        valtypes: np.ndarray,
+        dedup: bool = True,
+    ) -> int:
+        """Append a batch; returns number of *new* facts inserted."""
+        ids = np.asarray(ids, np.int32)
+        attrs = np.asarray(attrs, np.int32)
+        vals = np.asarray(vals, np.int64)
+        valtypes = np.asarray(valtypes, np.int8)
+        if dedup:
+            ks = self._key_set
+            keep_l = []
+            add = ks.add
+            for k in zip(ids.tolist(), attrs.tolist(), vals.tolist()):
+                if k in ks:
+                    keep_l.append(False)
+                else:
+                    add(k)
+                    keep_l.append(True)
+            keep = np.asarray(keep_l, bool)
+            if not keep.all():
+                ids, attrs, vals, valtypes = (
+                    ids[keep], attrs[keep], vals[keep], valtypes[keep])
+        else:
+            self._key_set.update(zip(ids.tolist(), attrs.tolist(), vals.tolist()))
+        m = len(ids)
+        if m == 0:
+            return 0
+        start = self.n
+        self._grow_to(start + m)
+        self._id[start : start + m] = ids
+        self._attr[start : start + m] = attrs
+        self._val[start : start + m] = vals
+        self._valtype[start : start + m] = valtypes
+        self._alive[start : start + m] = True
+        self.n = start + m
+        self.index.append(self, start, self.n)
+        return m
+
+    def contains(self, iid: int, attr: int, val: int) -> bool:
+        return (int(iid), int(attr), int(val)) in self._key_set
+
+    def delete_rows(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, np.int64)
+        self._alive[rows] = False
+        for r in rows:
+            self._key_set.discard(
+                (int(self._id[r]), int(self._attr[r]), int(self._val[r])))
+
+    def filter_alive(self, rows: np.ndarray) -> np.ndarray:
+        if self.n == 0 or len(rows) == 0:
+            return rows
+        a = self._alive[rows]
+        return rows if a.all() else rows[a]
+
+    def all_rows(self) -> np.ndarray:
+        rows = np.arange(self.n, dtype=np.int32)
+        return self.filter_alive(rows)
+
+    def memory_bytes(self) -> int:
+        per_row = 4 + 4 + 8 + 1 + 1
+        return self._cap * per_row + self.index.memory_bytes()
+
+
+class FactStore:
+    """All fact types: {ftype -> TypedFactTable} + the string dictionary."""
+
+    def __init__(self, index_backend: str = "AI") -> None:
+        self.index_backend = index_backend
+        self.strings = StringDictionary()
+        self.tables: dict[str, TypedFactTable] = {}
+
+    def table(self, ftype: str) -> TypedFactTable:
+        t = self.tables.get(ftype)
+        if t is None:
+            t = TypedFactTable(ftype, self.index_backend)
+            self.tables[ftype] = t
+        return t
+
+    def num_facts(self) -> int:
+        return sum(int(t.alive.sum()) for t in self.tables.values())
+
+    def memory_bytes(self) -> int:
+        return sum(t.memory_bytes() for t in self.tables.values())

@@ -1,0 +1,5 @@
+"""Data layer: deterministic sharded pipelines + Hiperfact fact corpus."""
+
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticLM
+
+__all__ = ["DataConfig", "ShardedLoader", "SyntheticLM"]

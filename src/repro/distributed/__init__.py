@@ -1,0 +1,8 @@
+"""Distribution layer: sharding rules, grad compression, pipeline."""
+
+from repro.distributed.sharding import (activation_hints, batch_shardings,
+                                        shardings_for, sharded_abstract,
+                                        spec_for)
+
+__all__ = ["activation_hints", "batch_shardings", "shardings_for",
+           "sharded_abstract", "spec_for"]

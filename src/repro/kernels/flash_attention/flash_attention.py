@@ -1,0 +1,132 @@
+"""Fused causal flash attention as a Pallas TPU kernel.
+
+The LM substrate's chunked XLA attention (models/layers.py) is the
+portable path; this kernel is the TPU hot-spot version: one kernel
+instance per (batch, kv-head, q-block) grid cell walks the kv blocks in
+VMEM with an online softmax, so the [Sq, Skv] score matrix never
+materializes in HBM.
+
+BlockSpec tiling:
+  q     [B, Hkv, G, Sq, hd]  -> block (1, 1, G, bq, hd)    VMEM
+  k/v   [B, Hkv, Skv, hd]    -> block (1, 1, bk, hd)       VMEM
+  out   like q
+
+The kv block index is the innermost grid axis; (m, l, acc) live in VMEM
+scratch across kv steps (the TPU grid is sequential over the trailing
+axis — the standard Pallas flash pattern).  Blocks fully outside the
+causal band / window skip their FLOPs via ``pl.when``.
+
+Validated under interpret=True against ``ref.py`` (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BQ = 512
+DEF_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, causal: bool, window: int, scale: float):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    q_start = pl.program_id(2) * bq
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    visible = jnp.bool_(True)
+    if causal:  # block not entirely above the diagonal
+        visible &= k_start <= q_start + bq - 1
+    if window > 0:  # block not entirely older than the window
+        visible &= k_start + bk - 1 >= q_start - (window - 1)
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0, 0]                      # [G, bq, hd]
+        k = k_ref[0, 0]                      # [bk, hd]
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [G, bq, bk]
+        if causal or window > 0:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), jnp.bool_)
+            if causal:
+                mask &= qpos >= kpos
+            if window > 0:
+                mask &= qpos - kpos < window
+            s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_ref[...]                   # [G, bq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                        + jax.lax.dot_general(
+                            p, v.astype(jnp.float32),
+                            (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = DEF_BQ, bk: int = DEF_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [B,Sq,Hq,hd]; k,v [B,Skv,Hkv,hd] -> [B,Sq,Hq,hd].
+
+    Sq % bq == 0 and Skv % bk == 0 (callers pad).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    qg = q.reshape(B, Sq, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (B, Hkv, Sq // bq, Skv // bk)
+    scale = 1.0 / math.sqrt(hd)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                          window=window, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd),
+                         lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, hd)

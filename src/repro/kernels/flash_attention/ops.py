@@ -1,0 +1,18 @@
+"""jit'd wrapper: Pallas flash attention on TPU, chunked XLA elsewhere."""
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.models.layers import chunked_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                              "force_pallas", "interpret"))
+def fused_attention(q, k, v, causal: bool = True, window: int = 0,
+                    force_pallas: bool = False, interpret: bool = False):
+    if force_pallas or jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+    return chunked_attention(q, k, v, causal=causal, window=window)

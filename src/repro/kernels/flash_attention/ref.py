@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Sq,Hq,hd]; k,v [B,Skv,Hkv,hd] -> [B,Sq,Hq,hd] (naive softmax)."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q5 = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Sorted equi-join probe as a Pallas TPU kernel (paper fork-join inst. 2).
+
+The parallel sort-merge join's probe phase: for each left key, find the
+``[lo, hi)`` run of equal keys in the sorted right array.  The kernel tiles
+the left side over the grid (fork) and keeps the full sorted right array
+VMEM-resident per launch; the search is a branch-free vectorized binary
+search — log2(M) masked halving steps over the whole left tile at once
+(the VPU analogue of the paper's per-element probes).
+
+Emission (expanding runs into pairs) is pure gather arithmetic and is done
+by the XLA-level wrapper in ``ops.py`` — gathers are already optimal there.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK = 1024
+
+
+def _probe_kernel(l_ref, r_ref, lo_ref, hi_ref, *, m: int):
+    keys = l_ref[...]
+    r = r_ref[...]
+    steps = max(1, (m - 1).bit_length())
+
+    def search(side_right: bool):
+        lo = jnp.zeros(keys.shape, jnp.int32)
+        hi = jnp.full(keys.shape, m, jnp.int32)
+        for _ in range(steps + 1):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            v = r[jnp.clip(mid, 0, m - 1)]
+            go_right = (v <= keys) if side_right else (v < keys)
+            lo = jnp.where(active & go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid, hi)
+        return lo
+
+    lo_ref[...] = search(False)
+    hi_ref[...] = search(True)
+
+
+def probe_sorted(l_keys: jnp.ndarray, r_sorted: jnp.ndarray,
+                 block: int = DEF_BLOCK, interpret: bool = False
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(lo, hi) run bounds in ``r_sorted`` for every left key."""
+    n = l_keys.shape[0]
+    m = r_sorted.shape[0]
+    n_pad = ((n + block - 1) // block) * block
+    big = (jnp.iinfo(l_keys.dtype).max
+           if jnp.issubdtype(l_keys.dtype, jnp.integer) else jnp.inf)
+    lp = jnp.full((n_pad,), big, l_keys.dtype).at[:n].set(l_keys)
+    grid = (n_pad // block,)
+    lo, hi = pl.pallas_call(
+        functools.partial(_probe_kernel, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32)],
+        interpret=interpret,
+    )(lp, r_sorted)
+    return lo[:n], hi[:n]

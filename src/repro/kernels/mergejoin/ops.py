@@ -1,0 +1,42 @@
+"""jit'd sort-merge join built on the Pallas probe kernel.
+
+``merge_join_bounded`` is the fully-jittable fixed-capacity join used by
+the distributed engine; the expansion of (lo, hi) runs into pairs is the
+searchsorted-on-prefix-sums trick (pure index arithmetic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mergejoin.mergejoin import probe_sorted
+from repro.kernels.sortmerge.ops import device_sort_kv
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_cap", "force_pallas", "interpret"))
+def merge_join_bounded(l_keys: jnp.ndarray, r_keys: jnp.ndarray, out_cap: int,
+                       force_pallas: bool = False, interpret: bool = False):
+    """Equi-join -> (li, ri, valid, total).  li/ri index the *original*
+    (unsorted) inputs; up to ``out_cap`` pairs are emitted."""
+    m = r_keys.shape[0]
+    r_sorted, r_perm = device_sort_kv(
+        r_keys, jnp.arange(m, dtype=jnp.int32),
+        force_pallas=force_pallas, interpret=interpret)
+    if force_pallas or jax.default_backend() == "tpu":
+        lo, hi = probe_sorted(l_keys, r_sorted, interpret=interpret)
+    else:
+        lo = jnp.searchsorted(r_sorted, l_keys, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(r_sorted, l_keys, side="right").astype(jnp.int32)
+    counts = (hi - lo).astype(jnp.int64)
+    starts = jnp.cumsum(counts) - counts
+    total = jnp.sum(counts)
+    out_idx = jnp.arange(out_cap, dtype=jnp.int64)
+    row = jnp.clip(jnp.searchsorted(starts, out_idx, side="right") - 1,
+                   0, l_keys.shape[0] - 1)
+    within = out_idx - starts[row]
+    valid = (out_idx < total) & (within < counts[row])
+    ri = r_perm[jnp.clip(lo[row] + within.astype(jnp.int32), 0, m - 1)]
+    li = row.astype(jnp.int32)
+    return (jnp.where(valid, li, -1), jnp.where(valid, ri, -1), valid, total)

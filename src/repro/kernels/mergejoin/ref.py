@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the merge-join probe + bounded join."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def probe_ref(l_keys, r_sorted):
+    return (jnp.searchsorted(r_sorted, l_keys, side="left").astype(jnp.int32),
+            jnp.searchsorted(r_sorted, l_keys, side="right").astype(jnp.int32))
+
+
+def join_pairs_ref(l_keys: np.ndarray, r_keys: np.ndarray):
+    """Nested-loop oracle: all (li, ri) index pairs with equal keys."""
+    out = []
+    for i, a in enumerate(np.asarray(l_keys)):
+        for j, b in enumerate(np.asarray(r_keys)):
+            if a == b:
+                out.append((i, j))
+    return out

@@ -1,0 +1,34 @@
+"""jit'd public wrappers for the fork-join sort kernels.
+
+``device_sort`` / ``device_sort_kv`` pick the Pallas path on TPU and fall
+back to the XLA sort elsewhere (the CPU container runs the kernels only
+under ``interpret=True`` in tests; see DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sortmerge.sortmerge import bitonic_sort, bitonic_sort_kv
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "force_pallas", "interpret"))
+def device_sort(x: jnp.ndarray, block: int = 1024, force_pallas: bool = False,
+                interpret: bool = False) -> jnp.ndarray:
+    if force_pallas or _on_tpu():
+        return bitonic_sort(x, block=block, interpret=interpret)
+    return jnp.sort(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "force_pallas", "interpret"))
+def device_sort_kv(keys: jnp.ndarray, vals: jnp.ndarray, block: int = 1024,
+                   force_pallas: bool = False, interpret: bool = False):
+    if force_pallas or _on_tpu():
+        return bitonic_sort_kv(keys, vals, block=block, interpret=interpret)
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fork-join bitonic sort kernels."""
+
+import jax.numpy as jnp
+
+
+def sort_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sort(x)
+
+
+def sort_kv_ref(keys: jnp.ndarray, vals: jnp.ndarray):
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]

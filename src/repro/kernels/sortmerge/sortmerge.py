@@ -1,0 +1,229 @@
+"""Fork-join parallel sort as a Pallas TPU kernel (paper §2.3, Fig. 8).
+
+TPU adaptation of the paper's AVX2-bitonic fork-join sort: the whole
+network is expressed as compare-exchange passes with XOR partner
+addressing.  For a (padded) power-of-two array and network parameters
+``(k, j)``, element ``i`` exchanges with ``i ^ j``, ascending iff
+``i & k == 0``.
+
+* fork: the array is tiled into VMEM blocks (the paper's L2-sized blocks);
+  passes with ``j < block`` are *intra-block* — a whole ``log²(block)``
+  tail of the network runs in one kernel launch without leaving VMEM
+  (``_block_sort_kernel``).
+* join: passes with ``j >= block`` touch exactly two blocks; the kernel
+  reads its partner block through a second input ref whose BlockSpec
+  index map is ``i ^ (j // block)`` — the cross-block merge is pure
+  BlockSpec wiring, no gathers.
+
+Key-value (id+object) variants carry a payload through every exchange —
+the paper's fork-join instance 4 used by sort keys and columnar join
+results.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK = 1024  # elements per VMEM tile (int64: 8 KiB/tile)
+
+
+def _cmp_exchange(lo_vals, hi_vals, ascending):
+    mn = jnp.minimum(lo_vals, hi_vals)
+    mx = jnp.maximum(lo_vals, hi_vals)
+    return (jnp.where(ascending, mn, mx), jnp.where(ascending, mx, mn))
+
+
+def _cmp_exchange_kv(lo_k, lo_v, hi_k, hi_v, ascending):
+    swap = jnp.where(ascending, lo_k > hi_k, lo_k < hi_k)
+    nlo_k = jnp.where(swap, hi_k, lo_k)
+    nhi_k = jnp.where(swap, lo_k, hi_k)
+    nlo_v = jnp.where(swap, hi_v, lo_v)
+    nhi_v = jnp.where(swap, lo_v, hi_v)
+    return nlo_k, nlo_v, nhi_k, nhi_v
+
+
+# ---------------------------------------------------------------------------
+# Intra-block network: runs all (k, j) passes with j < block in VMEM
+
+
+def _passes_intra(block: int, k_outer: int | None, j_start: int | None):
+    """(k, j) pairs executed inside one block-local launch."""
+    out = []
+    if k_outer is None:  # initial full sort of each block
+        k = 2
+        while k <= block:
+            j = k // 2
+            while j >= 1:
+                out.append((k, j))
+                j //= 2
+            k *= 2
+    else:  # tail of an outer stage: j descends from j_start (< block)
+        j = j_start
+        while j >= 1:
+            out.append((k_outer, j))
+            j //= 2
+    return out
+
+
+def _intra_kernel(x_ref, o_ref, *, block: int, passes: tuple[tuple[int, int], ...]):
+    i0 = (pl.program_id(0) * block).astype(jnp.int32)
+    idx = jnp.arange(block, dtype=jnp.int32)
+    gidx = idx + i0
+    x = x_ref[...]
+    for k, j in passes:
+        px = x[idx ^ j]
+        is_lo = (gidx & j) == 0
+        asc = (gidx & k) == 0
+        lo, hi = _cmp_exchange(jnp.where(is_lo, x, px),
+                               jnp.where(is_lo, px, x), asc)
+        x = jnp.where(is_lo, lo, hi)
+    o_ref[...] = x
+
+
+def _intra_kernel_kv(k_ref, v_ref, ok_ref, ov_ref, *, block: int,
+                     passes: tuple[tuple[int, int], ...]):
+    i0 = (pl.program_id(0) * block).astype(jnp.int32)
+    idx = jnp.arange(block, dtype=jnp.int32)
+    gidx = idx + i0
+    key = k_ref[...]
+    val = v_ref[...]
+    for k, j in passes:
+        pk = key[idx ^ j]
+        pv = val[idx ^ j]
+        is_lo = (gidx & j) == 0
+        asc = (gidx & k) == 0
+        a_k = jnp.where(is_lo, key, pk)
+        a_v = jnp.where(is_lo, val, pv)
+        b_k = jnp.where(is_lo, pk, key)
+        b_v = jnp.where(is_lo, pv, val)
+        lo_k, lo_v, hi_k, hi_v = _cmp_exchange_kv(a_k, a_v, b_k, b_v, asc)
+        key = jnp.where(is_lo, lo_k, hi_k)
+        val = jnp.where(is_lo, lo_v, hi_v)
+    ok_ref[...] = key
+    ov_ref[...] = val
+
+
+# ---------------------------------------------------------------------------
+# Cross-block pass: element i exchanges with i ^ j, j >= block.
+
+
+def _cross_kernel(x_ref, p_ref, o_ref, *, block: int, k: int, j: int):
+    i0 = (pl.program_id(0) * block).astype(jnp.int32)
+    gidx = jnp.arange(block, dtype=jnp.int32) + i0
+    x = x_ref[...]
+    px = p_ref[...]
+    is_lo = (gidx & j) == 0  # uniform across the block (j >= block)
+    asc = (gidx & k) == 0
+    lo, hi = _cmp_exchange(jnp.where(is_lo, x, px), jnp.where(is_lo, px, x), asc)
+    o_ref[...] = jnp.where(is_lo, lo, hi)
+
+
+def _cross_kernel_kv(k_ref, v_ref, pk_ref, pv_ref, ok_ref, ov_ref, *,
+                     block: int, k: int, j: int):
+    i0 = (pl.program_id(0) * block).astype(jnp.int32)
+    gidx = jnp.arange(block, dtype=jnp.int32) + i0
+    key, val = k_ref[...], v_ref[...]
+    pk, pv = pk_ref[...], pv_ref[...]
+    is_lo = (gidx & j) == 0
+    asc = (gidx & k) == 0
+    a_k = jnp.where(is_lo, key, pk)
+    a_v = jnp.where(is_lo, val, pv)
+    b_k = jnp.where(is_lo, pk, key)
+    b_v = jnp.where(is_lo, pv, val)
+    lo_k, lo_v, hi_k, hi_v = _cmp_exchange_kv(a_k, a_v, b_k, b_v, asc)
+    ok_ref[...] = jnp.where(is_lo, lo_k, hi_k)
+    ov_ref[...] = jnp.where(is_lo, lo_v, hi_v)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+
+
+def _launch_plan(n: int, block: int):
+    """Yield ('intra', passes) / ('cross', k, j) launches for size n."""
+    yield ("intra", tuple(_passes_intra(block, None, None)))
+    k = block * 2
+    while k <= n:
+        j = k // 2
+        while j >= block:
+            yield ("cross", k, j)
+            j //= 2
+        yield ("intra", tuple(_passes_intra(block, k, block // 2)))
+        k *= 2
+
+
+def bitonic_sort(x: jnp.ndarray, block: int = DEF_BLOCK,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Sort a 1-D array ascending (paper fork-join instance 1)."""
+    n = x.shape[0]
+    n_pad = max(block, 1 << (n - 1).bit_length())
+    big = jnp.asarray(jnp.iinfo(x.dtype).max if jnp.issubdtype(x.dtype, jnp.integer)
+                      else jnp.inf, x.dtype)
+    xp = jnp.full((n_pad,), big, x.dtype).at[:n].set(x)
+    nblk = n_pad // block
+    grid = (nblk,)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    for step in _launch_plan(n_pad, block):
+        if step[0] == "intra":
+            xp = pl.pallas_call(
+                functools.partial(_intra_kernel, block=block, passes=step[1]),
+                grid=grid, in_specs=[bspec],
+                out_specs=bspec,
+                out_shape=jax.ShapeDtypeStruct((n_pad,), x.dtype),
+                interpret=interpret,
+            )(xp)
+        else:
+            _, k, j = step
+            jb = j // block
+            pspec = pl.BlockSpec((block,), lambda i, jb=jb: (i ^ jb,))
+            xp = pl.pallas_call(
+                functools.partial(_cross_kernel, block=block, k=k, j=j),
+                grid=grid, in_specs=[bspec, pspec],
+                out_specs=bspec,
+                out_shape=jax.ShapeDtypeStruct((n_pad,), x.dtype),
+                interpret=interpret,
+            )(xp, xp)
+    return xp[:n]
+
+
+def bitonic_sort_kv(keys: jnp.ndarray, vals: jnp.ndarray,
+                    block: int = DEF_BLOCK, interpret: bool = False
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Key-value sort (paper fork-join instance 4: id+object sort)."""
+    n = keys.shape[0]
+    n_pad = max(block, 1 << (n - 1).bit_length())
+    bigk = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+    kp = jnp.full((n_pad,), bigk, keys.dtype).at[:n].set(keys)
+    vp = jnp.zeros((n_pad,), vals.dtype).at[:n].set(vals)
+    nblk = n_pad // block
+    grid = (nblk,)
+    bs_k = pl.BlockSpec((block,), lambda i: (i,))
+    bs_v = pl.BlockSpec((block,), lambda i: (i,))
+    for step in _launch_plan(n_pad, block):
+        if step[0] == "intra":
+            kp, vp = pl.pallas_call(
+                functools.partial(_intra_kernel_kv, block=block, passes=step[1]),
+                grid=grid, in_specs=[bs_k, bs_v],
+                out_specs=[bs_k, bs_v],
+                out_shape=[jax.ShapeDtypeStruct((n_pad,), keys.dtype),
+                           jax.ShapeDtypeStruct((n_pad,), vals.dtype)],
+                interpret=interpret,
+            )(kp, vp)
+        else:
+            _, k, j = step
+            jb = j // block
+            ps_k = pl.BlockSpec((block,), lambda i, jb=jb: (i ^ jb,))
+            ps_v = pl.BlockSpec((block,), lambda i, jb=jb: (i ^ jb,))
+            kp, vp = pl.pallas_call(
+                functools.partial(_cross_kernel_kv, block=block, k=k, j=j),
+                grid=grid, in_specs=[bs_k, bs_v, ps_k, ps_v],
+                out_specs=[bs_k, bs_v],
+                out_shape=[jax.ShapeDtypeStruct((n_pad,), keys.dtype),
+                           jax.ShapeDtypeStruct((n_pad,), vals.dtype)],
+                interpret=interpret,
+            )(kp, vp, kp, vp)
+    return kp[:n], vp[:n]

@@ -1,0 +1,42 @@
+"""jit'd SSD: Pallas intra-chunk kernel + XLA inter-chunk recurrence."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ref import ssd_intra_ref
+from repro.kernels.ssd.ssd import ssd_intra
+
+
+@functools.partial(jax.jit, static_argnames=("force_pallas", "interpret"))
+def ssd_chunked(cum, u, B, C, h0=None, force_pallas: bool = False,
+                interpret: bool = False):
+    """Full SSD sequence pass from chunked views.
+
+    cum [b,nc,Q,nh] (within-chunk cumulative log decay); u [b,nc,Q,nh,hp]
+    (dt-weighted inputs); B/C [b,nc,Q,N].  -> (y [b,nc,Q,nh,hp], h_last).
+    """
+    b, nc, Q, nh = cum.shape
+    hp = u.shape[-1]
+    N = B.shape[-1]
+    if force_pallas or jax.default_backend() == "tpu":
+        y_intra, states = ssd_intra(cum, u, B, C, interpret=interpret)
+    else:
+        y_intra, states = ssd_intra_ref(cum, u, B, C)
+    # inter-chunk recurrence over chunk states
+    a_tot = jnp.exp(cum[:, :, -1, :])                     # [b,nc,nh]
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hp, N), jnp.float32)
+
+    def step(h, xs):
+        at, st = xs                                        # [b,nh], [b,nh,hp,N]
+        h_new = at[..., None, None] * h + st
+        return h_new, h                                    # emit state BEFORE chunk
+
+    h_last, h_in = jax.lax.scan(
+        step, h0, (a_tot.swapaxes(0, 1), states.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                             # [b,nc,nh,hp,N]
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", C.astype(jnp.float32),
+                         h_in, jnp.exp(cum))
+    return y_intra + y_inter, h_last

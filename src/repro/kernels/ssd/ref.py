@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(cum, u, B, C):
+    """Mirror of models/mamba2.py chunk math (intra + chunk states)."""
+    b, nc, Q, nh = cum.shape
+    gram = jnp.einsum("bcqn,bckn->bcqk", C.astype(jnp.float32),
+                      B.astype(jnp.float32))
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,Q,K,nh]
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0) \
+        * gram[..., None]
+    y = jnp.einsum("bcqkh,bckhp->bcqhp", M, u.astype(jnp.float32))
+    w = jnp.exp(cum[:, :, -1, None, :] - cum)                # [b,nc,Q,nh]
+    st = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w, u.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    return y, st

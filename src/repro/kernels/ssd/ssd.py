@@ -1,0 +1,83 @@
+"""Mamba-2 SSD intra-chunk kernel (Pallas TPU).
+
+The SSD chunked algorithm splits into (a) a quadratic *intra-chunk* term
+and (b) a linear *inter-chunk* state recurrence.  (b) is a tiny scan that
+XLA handles well; (a) is the FLOPs hot spot — per (batch, chunk, head):
+
+    gram[i,j]  = C_i . B_j                       [Q, Q]   (shared gram
+                                                 via the single B/C group)
+    M[i,j]     = exp(cum_h[i] - cum_h[j]) * gram  (j <= i)
+    y_intra    = M @ u_h                          [Q, hp]
+    state_h    = sum_j exp(cum_h[Q-1] - cum_h[j]) * B_j (x) u_h[j]  [hp, N]
+
+This kernel computes both outputs with everything VMEM-resident per grid
+cell (Q=256, N=128, hp=64 -> gram 256 KiB + operands ~300 KiB).  Grid =
+(batch, n_chunks, n_heads); the B/C blocks are loaded once per (b, c) and
+reused across the head axis by the pipeline.
+
+Validated under interpret=True against ``ref.py`` (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(cum_ref, u_ref, b_ref, c_ref, y_ref, st_ref, *,
+                      Q: int):
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)        # [Q]
+    u = u_ref[0, 0, :, 0, :].astype(jnp.float32)         # [Q, hp]
+    Bm = b_ref[0, 0].astype(jnp.float32)                 # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)                 # [Q, N]
+    gram = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # [Q,Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    M = jnp.where(ii >= jj, gram * decay, 0.0)
+    y = jax.lax.dot_general(M, u, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # [Q,hp]
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    # chunk-end state: sum_j w_j * u_j (x) B_j
+    w = jnp.exp(cum[Q - 1] - cum)                          # [Q]
+    wu = u * w[:, None]                                    # [Q, hp]
+    st = jax.lax.dot_general(wu, Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # [hp,N]
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_intra(cum: jnp.ndarray, u: jnp.ndarray, B: jnp.ndarray,
+              C: jnp.ndarray, interpret: bool = False
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cum [b,nc,Q,nh]; u [b,nc,Q,nh,hp]; B/C [b,nc,Q,N].
+
+    -> (y_intra [b,nc,Q,nh,hp] f32, states [b,nc,nh,hp,N] f32)
+    """
+    b, nc, Q, nh = cum.shape
+    hp = u.shape[-1]
+    N = B.shape[-1]
+    grid = (b, nc, nh)
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_intra_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1), lambda i, j, h: (i, j, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1, hp), lambda i, j, h: (i, j, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, j, h: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, j, h: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hp), lambda i, j, h: (i, j, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, hp, N), lambda i, j, h: (i, j, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, Q, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh, hp, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cum, u, B, C)
+    return y, st

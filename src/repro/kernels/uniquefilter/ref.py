@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the unique-mask kernel."""
+
+import jax.numpy as jnp
+
+
+def unique_mask_ref(x_sorted: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate(
+        [jnp.ones((1,), bool), x_sorted[1:] != x_sorted[:-1]])

@@ -1,0 +1,50 @@
+"""SU unique filter as a Pallas TPU kernel (paper §2.4 deduplication).
+
+On a *sorted* array, an element is first-of-its-run iff it differs from its
+predecessor.  The only cross-tile dependency is one element: tile ``i``
+reads tile ``i-1`` through a second input ref whose BlockSpec index map is
+``max(i-1, 0)`` and compares against its last lane — no gathers, no
+host round trip.  Compaction of the surviving elements is prefix-sum
+arithmetic done by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK = 1024
+
+
+def _unique_mask_kernel(x_ref, prev_ref, m_ref, *, block: int):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    shifted = jnp.concatenate([prev_ref[block - 1:block], x[:-1]])
+    mask = x != shifted
+    # global element 0 is always first-of-run
+    mask = jnp.where((jnp.arange(block) == 0) & (i == 0), True, mask)
+    m_ref[...] = mask
+
+
+def unique_mask_sorted(x: jnp.ndarray, block: int = DEF_BLOCK,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Boolean first-of-run mask for a sorted 1-D array."""
+    n = x.shape[0]
+    n_pad = ((n + block - 1) // block) * block
+    big = (jnp.iinfo(x.dtype).max
+           if jnp.issubdtype(x.dtype, jnp.integer) else jnp.inf)
+    xp = jnp.full((n_pad,), big, x.dtype).at[:n].set(x)
+    grid = (n_pad // block,)
+    mask = pl.pallas_call(
+        functools.partial(_unique_mask_kernel, block=block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (jnp.maximum(i - 1, 0),))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        interpret=interpret,
+    )(xp, xp)
+    return mask[:n]

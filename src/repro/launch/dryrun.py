@@ -1,0 +1,294 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the 512-host-device flag before ANY other import (jax locks the
+device count on first init) — hence the first two lines.
+
+For each cell the driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the arch's step function (train_step for train shapes,
+     prefill/serve_step for inference shapes) with sharded abstract
+     inputs (ShapeDtypeStruct — no allocation),
+  3. ``.lower().compile()`` — failures here are sharding bugs,
+  4. records memory_analysis / cost_analysis / structural HLO roofline
+     terms into a JSON artifact consumed by benchmarks/roofline.py and
+     EXPERIMENTS.md.
+
+The paper's own technique is dry-run as the ``hiperfact-closure`` cell:
+the distributed semi-naive closure step (core/distributed.py) lowered on
+the same meshes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch qwen2-7b
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi            # all
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_EXTRA", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.distributed.sharding import (activation_hints, batch_shardings,
+                                        sharded_abstract)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import SHAPES, applicable_shapes, build_model
+from repro.models.config import ShapeConfig
+from repro.models.model_api import (decode_input_specs, model_cache_spec,
+                                    prefill_input_specs, train_input_specs)
+from repro.models.params import LeafSpec, is_leaf_spec
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import build_train_step
+
+# v5e-class hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def _serve_spec(spec_tree):
+    """Serving params: float leaves stored bf16."""
+    def one(s: LeafSpec):
+        dt = "bfloat16" if s.dtype in ("float32", "bfloat16") else s.dtype
+        return LeafSpec(s.shape, s.axes, s.init, s.scale, dt)
+    return jax.tree.map(one, spec_tree, is_leaf=is_leaf_spec)
+
+
+def build_cell(arch: str, shape_name: str, mesh, pure_shapes: bool = False):
+    """-> (jitted_fn, example_args (abstract), meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    hints = activation_hints(cfg, mesh, shape.global_batch,
+                             "train" if kind == "train" else
+                             ("prefill" if kind == "prefill" else "decode"))
+    model = build_model(cfg, hints)
+
+    if kind == "train":
+        spec = model.spec()
+        params = sharded_abstract(spec, mesh)
+        opt_shardings = jax.tree.map(lambda x: x, params)
+        state = {
+            "params": params,
+            "opt": {
+                "m": params, "v": params,
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            },
+        }
+        inputs = train_input_specs(cfg, shape)
+        bsh = batch_shardings(inputs, mesh, shape.global_batch)
+        batch = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            inputs, bsh)
+        accum = cfg.accum_for.get(shape_name, 1)
+        step = build_train_step(model, OptimizerConfig(), accum)
+        fn = jax.jit(step, donate_argnums=(0,))
+        args = (state, batch)
+    elif kind == "prefill":
+        spec = _serve_spec(model.spec())
+        params = sharded_abstract(spec, mesh)
+        inputs = prefill_input_specs(cfg, shape)
+        bsh = batch_shardings(inputs, mesh, shape.global_batch)
+        batch = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            inputs, bsh)
+
+        def prefill_step(params, batch):
+            toks = batch["tokens"]
+            fk = {k: v for k, v in batch.items() if k != "tokens"}
+            return model.prefill_fn(params, toks, shape.seq_len, **fk)
+
+        # constrain the OUTPUT cache sharding (batch->data, seq->model):
+        # without this XLA infers a model-replicated cache (mistral
+        # prefill: 22 GB/device of output vs 1.5 GB sharded)
+        from repro.distributed.sharding import shardings_for
+        cspec = model_cache_spec(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = shardings_for(cspec, mesh)
+        fn = jax.jit(prefill_step, out_shardings=(None, cache_sh))
+        args = (params, batch)
+    else:  # decode
+        spec = _serve_spec(model.spec())
+        params = sharded_abstract(spec, mesh)
+        cspec = model_cache_spec(cfg, shape.global_batch, shape.seq_len)
+        cache = sharded_abstract(cspec, mesh)
+        tok_sh = batch_shardings(
+            {"tok": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)},
+            mesh, shape.global_batch)["tok"]
+        tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                                   sharding=tok_sh)
+        fn = jax.jit(model.decode_fn, donate_argnums=(2,))
+        args = (params, tok, cache)
+    return fn, args, {"arch": arch, "shape": shape_name, "kind": kind,
+                      "params": cfg.param_count(),
+                      "active_params": cfg.active_param_count()}
+
+
+def build_closure_cell(mesh):
+    """The paper's technique at pod scale: one semi-naive closure step."""
+    from repro.core.distributed import ClosureConfig, closure_step
+    import functools
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ccfg = ClosureConfig(edge_cap=1 << 16, delta_cap=1 << 14,
+                         slot_cap=1 << 7, join_cap=1 << 15)
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod(mesh.devices.shape))
+    spec = P(axis_names)
+    step = functools.partial(closure_step, cfg=ccfg, axis_names=axis_names,
+                             n_dev=n_dev)
+    keys = ("edges", "closure", "delta", "fresh", "overflow")
+    fn = jax.jit(shard_map(step, mesh=mesh,
+                           in_specs=({k: spec for k in keys},),
+                           out_specs={k: spec for k in keys},
+                           check_rep=False))
+    sh = NamedSharding(mesh, spec)
+    state = {
+        "edges": jax.ShapeDtypeStruct((n_dev * ccfg.edge_cap,), jnp.int64,
+                                      sharding=sh),
+        "closure": jax.ShapeDtypeStruct((n_dev * ccfg.edge_cap,), jnp.int64,
+                                        sharding=sh),
+        "delta": jax.ShapeDtypeStruct((n_dev * ccfg.delta_cap,), jnp.int64,
+                                      sharding=sh),
+        "fresh": jax.ShapeDtypeStruct((n_dev,), jnp.int64, sharding=sh),
+        "overflow": jax.ShapeDtypeStruct((n_dev,), jnp.int64, sharding=sh),
+    }
+    return fn, (state,), {"arch": "hiperfact-closure", "shape": "closure_64k",
+                          "kind": "infer", "params": 0, "active_params": 0}
+
+
+def run_cell(fn, args, meta, mesh, out_dir: str, tag: str) -> dict:
+    n_dev = int(np.prod(mesh.devices.shape))
+    t0 = time.perf_counter()
+    lowered = fn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    rec = dict(meta)
+    rec["mesh"] = {"shape": list(mesh.devices.shape),
+                   "axes": list(mesh.axis_names), "devices": n_dev}
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+        }
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                            if isinstance(v, (int, float))
+                            and k in ("flops", "bytes accessed",
+                                      "transcendentals")}
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    h = analyze_hlo(hlo, LINK_BW)
+    rec["hlo"] = {
+        "flops_per_device": h["flops_per_device"],
+        "mem_bytes_per_device": h["mem_bytes_per_device"],
+        "collective_bytes": h["collective_bytes"],
+        "collectives": h["collectives"],
+    }
+    # roofline terms (seconds)
+    rec["roofline"] = {
+        "compute_s": h["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": h["mem_bytes_per_device"] / HBM_BW,
+        "collective_s": h["collective_time_s"],
+    }
+    terms = rec["roofline"]
+    rec["bottleneck"] = max(terms, key=terms.get)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or 'hiperfact'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="out/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    out_dir = os.path.join(args.out, args.mesh)
+
+    cells: list[tuple[str, str]] = []
+    arch_list = ARCH_NAMES if args.arch == "all" else (
+        [] if args.arch == "hiperfact" else [args.arch])
+    for a in arch_list:
+        cfg = get_config(a)
+        shapes = applicable_shapes(cfg) if args.shape == "all" \
+            else [args.shape]
+        for s in shapes:
+            if s not in applicable_shapes(cfg):
+                print(f"SKIP {a} x {s}: inapplicable "
+                      "(full-attention arch at 500k — DESIGN.md §4)")
+                continue
+            cells.append((a, s))
+
+    results = []
+    for a, s in cells:
+        tag = f"{a}__{s}"
+        print(f"=== {tag} [{args.mesh}] ===", flush=True)
+        try:
+            fn, fargs, meta = build_cell(a, s, mesh)
+            rec = run_cell(fn, fargs, meta, mesh, out_dir, tag)
+            print(f"  ok: compile {rec['compile_s']}s  "
+                  f"peak/dev {rec.get('memory', {}).get('peak_bytes_per_device', 0)/2**30:.2f} GiB  "
+                  f"bottleneck {rec['bottleneck']}", flush=True)
+            results.append((tag, "ok"))
+        except Exception as e:  # noqa: BLE001 — report, continue matrix
+            traceback.print_exc()
+            results.append((tag, f"FAIL {e}"))
+
+    if args.arch in ("all", "hiperfact"):
+        tag = "hiperfact-closure"
+        print(f"=== {tag} [{args.mesh}] ===", flush=True)
+        try:
+            fn, fargs, meta = build_closure_cell(mesh)
+            rec = run_cell(fn, fargs, meta, mesh, out_dir, tag)
+            print(f"  ok: compile {rec['compile_s']}s  "
+                  f"bottleneck {rec['bottleneck']}", flush=True)
+            results.append((tag, "ok"))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            results.append((tag, f"FAIL {e}"))
+
+    print("\n==== dry-run summary ====")
+    fails = 0
+    for tag, status in results:
+        print(f"{status:6s} {tag}" if status == "ok" else f"{status}  {tag}")
+        fails += status != "ok"
+    print(f"{len(results) - fails}/{len(results)} cells passed")
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

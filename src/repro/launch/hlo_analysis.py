@@ -1,0 +1,309 @@
+"""Structural HLO analysis for the roofline report.
+
+``compiled.cost_analysis()`` reports FLOPs/bytes for a single execution of
+each computation — it does NOT multiply ``while`` bodies by their trip
+count, so a scan-over-layers model under-reports by ~n_layers x.  And it
+reports no collective traffic at all.  This module parses the optimized
+(post-SPMD) HLO text instead:
+
+* splits the module into computations, builds the call graph
+  (``while`` bodies/conds, ``calls=``/``to_apply=``, conditional branches)
+  and propagates loop multipliers — trip counts come from the while op's
+  ``backend_config known_trip_count`` (present for scan-derived loops),
+  falling back to the largest constant in the condition computation;
+* **FLOPs**: every ``dot``/``convolution`` op anywhere in the graph:
+  ``2 * prod(result_dims) * prod(contracting_dims)`` x multiplier
+  (per-device numbers, since post-SPMD shapes are shard shapes);
+* **memory bytes**: per-op operand+result bytes, counted only at
+  "top-level" computations (entry + loop bodies) so fusion interiors are
+  not double-counted;
+* **collectives**: result bytes per op with a ring cost model.
+
+Per-op collective time on a ring of n devices with per-link bandwidth B:
+    all-gather / reduce-scatter / all-to-all   t = bytes * (n-1)/n / B
+    all-reduce                                 t = 2 * bytes * (n-1)/n / B
+    collective-permute                         t = bytes / B
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|[suf]\d+|c64|c128)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+
+
+def _shape_dims(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _replica_group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    comp: str
+    kind: str          # opcode-ish
+    line: str
+    result_shape: str  # text before opcode
+
+
+class HloModule:
+    def __init__(self, hlo: str):
+        self.comps: dict[str, list[Op]] = {}
+        self.entry = None
+        self.op_shape: dict[str, str] = {}   # op name -> result shape text
+        cur = None
+        for raw in hlo.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                m = _HEADER_RE.match(s)
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if s.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if s == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OPLINE_RE.match(s)
+            if not m:
+                continue
+            name, rest = m.group(1), m.group(2)
+            # result shape is either a (possibly huge) tuple — no nested
+            # parens inside — or a single array literal
+            om = re.match(r"((?:\([^()]*\))|(?:[\w\[\],\{\}\d]+))\s+([\w\-]+)\(",
+                          rest)
+            if om:
+                rshape, opcode = om.group(1), om.group(2)
+            else:
+                rshape, opcode = rest, "unknown"
+            op = Op(name, cur, opcode, s, rshape)
+            self.comps[cur].append(op)
+            self.op_shape[name] = rshape
+        # parameters: register their shapes too
+        for comp, ops in self.comps.items():
+            for op in ops:
+                if op.kind == "parameter":
+                    self.op_shape[op.name] = op.result_shape
+
+    # -- call graph -----------------------------------------------------------
+    def _edges(self, comp: str):
+        """(callee, multiplier, via_loop) triples."""
+        out = []
+        for op in self.comps.get(comp, ()):
+            mw = re.search(r"while\(.*?\), condition=%?([\w\.\-]+), "
+                           r"body=%?([\w\.\-]+)", op.line)
+            if mw:
+                tc = self._trip_count(op.line, mw.group(1))
+                out.append((mw.group(2), tc, True))
+                out.append((mw.group(1), tc, True))
+                continue
+            for mm in re.finditer(
+                    r"(?:calls=|to_apply=)%?([\w\.\-]+)", op.line):
+                out.append((mm.group(1), 1, False))
+            mb = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+            if mb:
+                for b in mb.group(1).split(","):
+                    out.append((b.strip().lstrip("%"), 1, False))
+        return out
+
+    def _trip_count(self, while_line: str, cond: str) -> int:
+        m = re.search(r'known_trip_count[^0-9]*(\d+)', while_line)
+        if m:
+            return int(m.group(1))
+        best = 1
+        for op in self.comps.get(cond, ()):
+            for c in re.findall(r"constant\((\d+)\)", op.line):
+                best = max(best, int(c))
+        return best
+
+    def multipliers(self) -> tuple[dict[str, int], dict[str, bool]]:
+        """comp -> execution count; comp -> reached-only-via-call flag."""
+        mult = {self.entry: 1}
+        via_call: dict[str, bool] = {self.entry: False}
+        stack = [self.entry]
+        seen = set()
+        while stack:
+            name = stack.pop()
+            for callee, k, is_loop in self._edges(name):
+                key = (name, callee)
+                if key in seen or callee not in self.comps:
+                    continue
+                seen.add(key)
+                mult[callee] = max(mult.get(callee, 0), mult[name] * k)
+                vc = via_call.get(name, False) or not is_loop
+                via_call[callee] = via_call.get(callee, True) and vc
+                stack.append(callee)
+        return mult, via_call
+
+    # -- metrics ----------------------------------------------------------------
+    def _operand_names(self, op: Op) -> list[str]:
+        m = re.search(rf"{op.kind}\(([^)]*)\)", op.line)
+        if not m:
+            return []
+        return [t.strip().lstrip("%") for t in m.group(1).split(",")
+                if t.strip().startswith("%")]
+
+    def dot_flops(self, op: Op) -> float:
+        """2 * prod(result) * prod(contracting dims of lhs)."""
+        res = _shape_dims(op.result_shape)
+        if not res:
+            return 0.0
+        out_elems = 1
+        for d in res[0][1]:
+            out_elems *= d
+        k = 1
+        mc = re.search(r"lhs_contracting_dims=\{([^}]*)\}", op.line)
+        ops_names = self._operand_names(op)
+        if mc and ops_names:
+            lhs_shape = _shape_dims(self.op_shape.get(ops_names[0], ""))
+            if lhs_shape:
+                dims = lhs_shape[0][1]
+                for ci in mc.group(1).split(","):
+                    ci = ci.strip()
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * out_elems * k
+
+    def conv_flops(self, op: Op) -> float:
+        res = _shape_dims(op.result_shape)
+        if not res:
+            return 0.0
+        out_elems = 1
+        for d in res[0][1]:
+            out_elems *= d
+        names = self._operand_names(op)
+        k = 1
+        if len(names) >= 2:
+            ker = _shape_dims(self.op_shape.get(names[1], ""))
+            if ker:
+                for d in ker[0][1][:-1]:  # all but output-feature dim
+                    k *= d
+        return 2.0 * out_elems * k
+
+    _FREE_OPS = frozenset({
+        "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+        "while", "conditional", "call", "after-all", "partition-id",
+        "replica-id", "domain",
+    })
+    _SLICE_OPS = frozenset({"dynamic-slice", "slice", "gather"})
+    _UPDATE_OPS = frozenset({"dynamic-update-slice", "scatter"})
+
+    def _op_traffic(self, op: Op) -> float:
+        """Approximate HBM bytes moved by one execution of ``op``.
+
+        Real-hardware model: slices/gathers touch only the slice (not the
+        sliced operand); in-place updates touch only the update; bitcasts
+        and control ops are free; everything else reads its operands and
+        writes its result.  This is an HBM-traffic *estimate* — fusion on
+        the real TPU backend differs from the CPU HLO analyzed here
+        (documented in EXPERIMENTS.md §Roofline).
+        """
+        kind = op.kind
+        if kind in self._FREE_OPS:
+            return 0.0
+        if kind in self._SLICE_OPS:
+            return 2.0 * shape_bytes(op.result_shape)
+        if kind in self._UPDATE_OPS:
+            names = self._operand_names(op)
+            upd = shape_bytes(self.op_shape.get(names[1], "")) \
+                if len(names) > 1 else 0
+            return 2.0 * upd
+        if kind in ("broadcast", "iota", "reshape", "transpose", "copy"):
+            return shape_bytes(op.result_shape) * (2.0 if kind in
+                                                   ("transpose", "copy")
+                                                   else 1.0)
+        if kind == "sort":
+            # TPU sorts are multi-pass networks (~bitonic): charge
+            # log2(n)(log2(n)+1)/2 read+write sweeps, not one.
+            import math
+            b = shape_bytes(op.result_shape)
+            dims = _shape_dims(op.result_shape)
+            n = max((max(d[1], default=1) for d in dims), default=1)
+            if isinstance(n, list):
+                n = max(n, default=1)
+            lg = max(1, math.ceil(math.log2(max(2, n))))
+            return 2.0 * b * lg * (lg + 1) / 2
+        b = shape_bytes(op.result_shape)
+        for on in self._operand_names(op):
+            b += shape_bytes(self.op_shape.get(on, ""))
+        return float(b)
+
+    def analyze(self, link_bw: float = 50e9) -> dict:
+        mult, via_call = self.multipliers()
+        flops = 0.0
+        mem_bytes = 0.0
+        coll: dict[str, dict] = {}
+        for comp, ops in self.comps.items():
+            m = mult.get(comp, 0)
+            if m == 0:
+                continue
+            top_level = not via_call.get(comp, True) or comp == self.entry
+            for op in ops:
+                if op.kind in ("dot",):
+                    flops += m * self.dot_flops(op)
+                elif op.kind in ("convolution",):
+                    flops += m * self.conv_flops(op)
+                if top_level:
+                    mem_bytes += m * self._op_traffic(op)
+                for kind in _COLLECTIVES:
+                    if op.kind == kind or op.kind == kind + "-start":
+                        n = max(2, _replica_group_size(op.line))
+                        bts = shape_bytes(op.result_shape)
+                        f = (n - 1) / n
+                        per = {"all-reduce": 2 * f, "all-gather": f,
+                               "reduce-scatter": f, "all-to-all": f,
+                               "collective-permute": 1.0}[kind]
+                        d = coll.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                                   "time_s": 0.0})
+                        d["count"] += m
+                        d["bytes"] += m * bts
+                        d["time_s"] += m * bts * per / link_bw
+                        break
+        return {
+            "flops_per_device": flops,
+            "mem_bytes_per_device": mem_bytes,
+            "collectives": coll,
+            "collective_bytes": sum(d["bytes"] for d in coll.values()),
+            "collective_time_s": sum(d["time_s"] for d in coll.values()),
+        }
+
+
+def analyze_hlo(hlo: str, link_bw: float = 50e9) -> dict:
+    return HloModule(hlo).analyze(link_bw)

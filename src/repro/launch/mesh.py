@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (dry-run requirement: the 512-device XLA flag
+must be set before the first jax device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over host devices for tests/examples."""
+    return jax.make_mesh(shape, axes)

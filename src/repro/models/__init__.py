@@ -1,0 +1,13 @@
+"""LM substrate: configs, layers, and the 10 assigned architectures."""
+
+from repro.models.config import (ArchConfig, BlockKind, SHAPES, ShapeConfig,
+                                 applicable_shapes)
+from repro.models.model_api import (build_model, input_specs,
+                                    model_cache_spec)
+from repro.models.params import abstract_params, axes_tree, init_params
+
+__all__ = [
+    "ArchConfig", "BlockKind", "SHAPES", "ShapeConfig", "abstract_params",
+    "applicable_shapes", "axes_tree", "build_model", "init_params",
+    "input_specs", "model_cache_spec",
+]

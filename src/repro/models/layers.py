@@ -1,0 +1,408 @@
+"""Core neural layers: norms, RoPE, GQA attention (chunked-flash), MLPs.
+
+Everything is a pure function over explicit param dicts (specs built by the
+matching ``*_spec`` function).  Attention implementations:
+
+* ``full``       — materialized scores; only for short sequences (encoder).
+* ``masked``     — lax.map over q-chunks × lax.scan over kv-chunks with an
+                   online softmax and a causal/window mask.  Simple, but
+                   computes the masked upper triangle (~2x causal FLOPs).
+* ``triangular`` — q-chunks unrolled in Python so each inner kv scan has a
+                   *static* trip count of exactly the chunks its queries can
+                   see (+ window clipping).  Exact causal FLOPs; the HLO is
+                   bigger (one scan per q chunk).  This is the beyond-paper
+                   §Perf default (see EXPERIMENTS.md).
+
+Activation-sharding hints: callers may pass ``shard(x, name)`` callbacks via
+``Hints``; without a mesh these are identity (smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import LeafSpec, normal, ones, zeros
+
+# ---------------------------------------------------------------------------
+# Sharding hints
+
+
+@dataclasses.dataclass(frozen=True)
+class Hints:
+    """Activation sharding constraints, keyed by logical activation name.
+
+    ``apply`` is a no-op for names without a registered PartitionSpec, so
+    model code can annotate unconditionally.  ``kind`` tells layers which
+    step family is being built (train/prefill/decode) — the MoE layer uses
+    it to pick the shard_map EP path for the sequence forms.
+    """
+
+    specs: dict = dataclasses.field(default_factory=dict)
+    mesh: object = None
+    kind: str = "train"
+
+    def apply(self, x: jnp.ndarray, name: str) -> jnp.ndarray:
+        spec = self.specs.get(name)
+        if spec is None or self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NO_HINTS = Hints()
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": ones((d,), (None,))}
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"scale": ones((d,), (None,)), "bias": zeros((d,), (None,))}
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, hd]; positions: [..., S] (int32)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_table(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal positional table [seq, d]."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(10_000.0) / max(1, half - 1)))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Projections
+
+
+def dense_spec(d_in: int, d_out: int, axes: tuple, bias: bool = False,
+               scale: float | None = None) -> dict:
+    out = {"w": normal((d_in, d_out), axes, scale=scale)}
+    if bias:
+        out["b"] = zeros((d_out,), (None,))
+    return out
+
+
+def dense(p: dict, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    w = p["w"].astype(dtype or x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Attention — specs
+
+
+def attention_spec(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    qd, kvd = cfg.q_heads() * hd, cfg.n_kv_heads * hd
+    bias = cfg.qkv_bias or cfg.attn_bias
+    return {
+        "q": dense_spec(d, qd, ("embed", "heads"), bias),
+        "k": dense_spec(d, kvd, ("embed", "kv"), bias),
+        "v": dense_spec(d, kvd, ("embed", "kv"), bias or cfg.attn_bias),
+        "o": dense_spec(qd, d, ("heads", "embed"), cfg.attn_bias,
+                        scale=1.0 / math.sqrt(qd * 2 * cfg.n_layers)),
+    }
+
+
+def project_qkv(p: dict, x: jnp.ndarray, cfg, positions, hints: Hints,
+                rope_on: bool = True):
+    """x [B,S,d] -> q [B,S,Hq,hd], k/v [B,S,Hkv,hd] (+RoPE applied)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(p["q"], x)
+    k = dense(p["k"], x)
+    v = dense(p["v"], x)
+    q = hints.apply(q, "attn_qflat").reshape(B, S, cfg.q_heads(), hd)
+    k = hints.apply(k, "attn_kvflat").reshape(B, S, cfg.n_kv_heads, hd)
+    v = hints.apply(v, "attn_kvflat").reshape(B, S, cfg.n_kv_heads, hd)
+    if rope_on and cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = hints.apply(q, "attn_q")
+    k = hints.apply(k, "attn_kv")
+    v = hints.apply(v, "attn_kv")
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Attention — cores
+
+
+def _scores(q5: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q5 [B,qc,Hkv,G,hd] x k [B,kc,Hkv,hd] -> [B,Hkv,G,qc,kc] (f32)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q5, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _apply_v(probs: jnp.ndarray, v: jnp.ndarray, dtype) -> jnp.ndarray:
+    """probs [B,Hkv,G,qc,kc] x v [B,kc,Hkv,hd] -> [B,qc,Hkv,G,hd]."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(dtype), v)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Materialized attention (short sequences only)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    q5 = q.reshape(B, Sq, Hkv, G, hd)
+    s = _scores(q5, k) / math.sqrt(hd)
+    if bias is not None:
+        s = s + bias
+    Skv = k.shape[1]
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        ki = jnp.arange(Skv)[None, :]
+        m = qi >= ki
+        if window > 0:
+            m &= qi - ki < window
+        s = jnp.where(m, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _apply_v(p, v, q.dtype)
+    return o.reshape(B, Sq, Hq, hd)
+
+
+def _online_step(carry, kv_chunk, q5, mask_fn, hd):
+    """One kv-chunk online-softmax update.  carry: (m, l, acc)."""
+    m, l, acc = carry
+    k_c, v_c, k_start = kv_chunk
+    s = _scores(q5, k_c) / math.sqrt(hd)            # [B,Hkv,G,qc,kc]
+    s = mask_fn(s, k_start)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # guard fully-masked rows (m == -inf): scale factor 0
+    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v_c.astype(jnp.float32))
+    return (m_new, l_new, acc_new), None
+
+
+def _finish(m, l, acc, B, qc, Hkv, G, hd, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,Hkv,G,qc,hd]
+    out = jnp.moveaxis(out, 3, 1)                    # [B,qc,Hkv,G,hd]
+    return out.reshape(B, qc, Hkv * G, hd).astype(dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      impl: str = "triangular") -> jnp.ndarray:
+    """Flash-style chunked attention in pure XLA (see module docstring).
+
+    q [B,Sq,Hq,hd]; k,v [B,Skv,Hkv,hd]; Sq must divide into q_chunk, Skv
+    into kv_chunk (model code pads sequence lengths to multiples).
+    """
+    B, Sq0, Hq, hd = q.shape
+    Skv0, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, Sq0)
+    kv_chunk = min(kv_chunk, Skv0)
+    offset = Skv0 - Sq0  # queries sit at the END of the kv range (prefill=0)
+    # pad both sides to chunk multiples; padded kv keys are masked below
+    Sq = -(-Sq0 // q_chunk) * q_chunk
+    Skv = -(-Skv0 // kv_chunk) * kv_chunk
+    if Sq != Sq0:
+        q = jnp.pad(q, ((0, 0), (0, Sq - Sq0), (0, 0), (0, 0)))
+    if Skv != Skv0:
+        k = jnp.pad(k, ((0, 0), (0, Skv - Skv0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv - Skv0), (0, 0), (0, 0)))
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+
+    k_st = k.reshape(B, nk, kv_chunk, Hkv, hd)
+    v_st = v.reshape(B, nk, kv_chunk, Hkv, hd)
+    kstarts = jnp.arange(nk, dtype=jnp.int32) * kv_chunk
+
+    def make_mask_fn(q_start):
+        def mask_fn(s, k_start):
+            qi = (jnp.arange(q_chunk) + q_start + offset)[:, None]
+            ki = (jnp.arange(kv_chunk) + k_start)[None, :]
+            m = ki < Skv0                      # mask kv padding
+            if causal:
+                m &= qi >= ki
+            if window > 0:
+                m &= qi - ki < window
+            return jnp.where(m, s, -jnp.inf)
+        return mask_fn
+
+    @jax.checkpoint
+    def one_q_chunk(q_c, q_start, ks, vs, kstarts_s):
+        """Attend one query chunk against the given stacked kv chunks."""
+        q5 = q_c.reshape(B, q_chunk, Hkv, G, hd)
+        m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, hd), jnp.float32)
+        # the per-kv-step body is itself rematerialized so the scan's VJP
+        # never stores the [kv_steps, ..., qc, kc] score stack (flash bwd)
+        step = jax.checkpoint(functools.partial(
+            _online_step, q5=q5, mask_fn=make_mask_fn(q_start), hd=hd))
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      (ks, vs, kstarts_s))
+        return _finish(m, l, acc, B, q_chunk, Hkv, G, hd, q.dtype)
+
+    if impl == "masked" or not causal:
+        # one scan over ALL kv chunks per q chunk; mask hides invisible ones
+        ks_all = k_st.swapaxes(0, 1)
+        vs_all = v_st.swapaxes(0, 1)
+
+        def body(q_start):
+            q_c = jax.lax.dynamic_slice_in_dim(q, q_start, q_chunk, 1)
+            return one_q_chunk(q_c, q_start, ks_all, vs_all, kstarts)
+        outs = jax.lax.map(body, jnp.arange(nq, dtype=jnp.int32) * q_chunk)
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, hd)
+        return out[:, :Sq0]
+
+    # triangular: unrolled q chunks, static kv ranges (exact causal FLOPs)
+    outs = []
+    for i in range(nq):
+        q_start = i * q_chunk
+        # kv chunks visible to the LAST query of this chunk (clamped)
+        hi = min(nk, (q_start + q_chunk - 1 + offset) // kv_chunk + 1)
+        lo = 0
+        if window > 0:
+            # earliest kv the FIRST query of this chunk can still see
+            lo = max(0, (q_start + offset - (window - 1)) // kv_chunk)
+        lo = min(lo, max(hi - 1, 0))
+        hi = max(hi, lo + 1)
+        q_c = jax.lax.slice_in_dim(q, q_start, q_start + q_chunk, axis=1)
+        outs.append(one_q_chunk(
+            q_c, jnp.int32(q_start), k_st[:, lo:hi].swapaxes(0, 1),
+            v_st[:, lo:hi].swapaxes(0, 1), kstarts[lo:hi]))
+    out = jnp.concatenate(outs, axis=1).reshape(B, Sq, Hq, hd)
+    return out[:, :Sq0]
+
+
+def attention(q, k, v, cfg, *, causal: bool = True, window: int = 0,
+              hints: Hints = NO_HINTS) -> jnp.ndarray:
+    """Dispatch on sequence length: full for short, chunked otherwise."""
+    if (cfg.pad_q_heads or cfg.repeat_kv) and q.shape[2] != k.shape[2]:
+        # TP-padded heads: use the repeated-KV (MHA) layout so every
+        # attention tensor keeps the clean padded head dim (16-shardable);
+        # the grouped [Hkv, G] reshape would split the sharded dim.
+        G = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = hints.apply(k, "attn_q")
+        v = hints.apply(v, "attn_q")
+    Sq, Skv = q.shape[1], k.shape[1]
+    if Skv <= min(1024, cfg.kv_chunk) and Sq == Skv:
+        out = full_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, window=window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            impl="triangular" if causal else "masked")
+    return hints.apply(out, "attn_out")
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a cache) — partial/combinable form
+
+
+def decode_attention_partial(q, k_cache, v_cache, valid_mask):
+    """q [B,Hq,hd]; caches [B,S,Hkv,hd]; valid_mask [B,S] bool.
+
+    Returns unnormalized (o [B,Hq,hd] f32, m [B,Hq], l [B,Hq]) so partials
+    over a sharded S can be LSE-combined (flash-decoding).
+    """
+    B, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    q5 = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", q5, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid_mask[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return (o.reshape(B, Hq, hd), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def combine_decode_partials(o, m, l, axis_name=None):
+    """LSE-combine partials (optionally psum over a shard_map axis)."""
+    if axis_name is not None:
+        m_g = jax.lax.pmax(m, axis_name)
+        scale = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
+        l_g = jax.lax.psum(l * scale, axis_name)
+        o_g = jax.lax.psum(o * scale[..., None], axis_name)
+    else:
+        m_g, l_g, o_g = m, l, o
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, dtype):
+    o, m, l = decode_attention_partial(q, k_cache, v_cache, valid_mask)
+    return combine_decode_partials(o, m, l).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def mlp_spec(cfg, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    down_scale = 1.0 / math.sqrt(ff * 2 * cfg.n_layers)
+    if cfg.mlp == "swiglu":
+        return {
+            "gate": dense_spec(d, ff, ("embed", "mlp")),
+            "up": dense_spec(d, ff, ("embed", "mlp")),
+            "down": dense_spec(ff, d, ("mlp", "embed"), scale=down_scale),
+        }
+    return {
+        "in": dense_spec(d, ff, ("embed", "mlp"), bias=cfg.attn_bias),
+        "out": dense_spec(ff, d, ("mlp", "embed"), bias=cfg.attn_bias,
+                          scale=down_scale),
+    }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+        h = hints.apply(h, "mlp_hidden")
+        return dense(p["down"], h)
+    h = jax.nn.gelu(dense(p["in"], x), approximate=True)
+    h = hints.apply(h, "mlp_hidden")
+    return dense(p["out"], h)

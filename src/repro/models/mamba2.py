@@ -1,0 +1,175 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu 2024) with a single B/C group::
+
+    h_t = a_t h_{t-1} + dt_t * B_t (x) x_t        a_t = exp(dt_t * A_h)
+    y_t = C_t . h_t + D_h * x_t
+
+computed per chunk of Q positions: a quadratic *intra-chunk* term
+(the part ``kernels/ssd`` implements as a Pallas kernel) plus an
+*inter-chunk* state recurrence carried by ``lax.scan``.  Decode is the
+O(1)-state single-step recurrence — mamba2 runs ``long_500k``.
+
+Layout: x is split into ``nh`` heads of ``hp = ssm_head_dim``; state is
+``[B, nh, hp, N]`` with heads sharded over the ``model`` mesh axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Hints, NO_HINTS, apply_norm, dense, dense_spec
+from repro.models.params import LeafSpec, normal, ones, zeros
+
+
+def dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_spec(cfg) -> dict:
+    d = cfg.d_model
+    di, nh, hp, N = dims(cfg)
+    conv_ch = di + 2 * N          # conv runs over (x, B, C)
+    w = 4
+    return {
+        # fused input projection -> [z, x, B, C, dt]
+        "in_z": dense_spec(d, di, ("embed", "mlp")),
+        "in_x": dense_spec(d, di, ("embed", "mlp")),
+        "in_bc": dense_spec(d, 2 * N, ("embed", None)),
+        "in_dt": dense_spec(d, nh, ("embed", None)),
+        "conv_w": zeros((w, conv_ch), (None, None)),
+        "conv_b": zeros((conv_ch,), (None,)),
+        "a_log": LeafSpec((nh,), (None,), "ssm_a"),
+        "dt_bias": LeafSpec((nh,), (None,), "dt_bias"),
+        "d_skip": ones((nh,), (None,)),
+        "norm": {"scale": ones((di,), ("mlp",))},
+        "out": dense_spec(di, d, ("mlp", "embed")),
+    }
+
+
+def _conv(u, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(u)
+    for j in range(W):
+        y = y + pad[:, j: j + u.shape[1], :] * w[j]
+    return jax.nn.silu(y + b)
+
+
+def _project(p, x, cfg):
+    """-> z [B,S,di], xc/Bc/Cc (post conv+silu), dt [B,S,nh] (f32)."""
+    di, nh, hp, N = dims(cfg)
+    z = dense(p["in_z"], x)
+    xi = dense(p["in_x"], x)
+    bc = dense(p["in_bc"], x)
+    dt = dense(p["in_dt"], x).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    conv_in = jnp.concatenate([xi, bc], axis=-1)
+    return z, conv_in, dt
+
+
+def _split_conv(conv_out, cfg):
+    di, nh, hp, N = dims(cfg)
+    xc = conv_out[..., :di]
+    Bc = conv_out[..., di: di + N].astype(jnp.float32)
+    Cc = conv_out[..., di + N:].astype(jnp.float32)
+    return xc, Bc, Cc
+
+
+def apply_ssd(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS,
+              state0=None, return_state: bool = False):
+    """Sequence form (train/prefill). x [B,S,d] -> y [B,S,d]."""
+    B, S0, d = x.shape
+    di, nh, hp, N = dims(cfg)
+    Q = min(cfg.ssm_chunk, S0)
+    S = -(-S0 // Q) * Q
+    if S != S0:  # pad; dt is zeroed on the pad so the state is untouched
+        x = jnp.pad(x, ((0, 0), (0, S - S0), (0, 0)))
+    nc = S // Q
+
+    z, conv_in, dt = _project(p, x, cfg)
+    if S != S0:
+        dt = dt * (jnp.arange(S) < S0).astype(dt.dtype)[None, :, None]
+    if state0 is not None:
+        W = p["conv_w"].shape[0]
+        ext = jnp.concatenate([state0["conv"], conv_in], axis=1)
+        conv_out = _conv(ext, p["conv_w"], p["conv_b"])[:, W - 1:, :]
+    else:
+        conv_out = _conv(conv_in, p["conv_w"], p["conv_b"])
+    xc, Bc, Cc = _split_conv(conv_out, cfg)
+    xh = xc.reshape(B, S, nh, hp)
+    xh = hints.apply(xh, "ssm_heads")
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # [nh]
+    dlog = dt * A                                              # [B,S,nh]
+    u = (dt[..., None] * xh.astype(jnp.float32))               # [B,S,nh,hp]
+
+    # chunk views
+    dlog_c = dlog.reshape(B, nc, Q, nh)
+    u_c = u.reshape(B, nc, Q, nh, hp)
+    B_cn = Bc.reshape(B, nc, Q, N)
+    C_cn = Cc.reshape(B, nc, Q, N)
+    cum = jnp.cumsum(dlog_c, axis=2)                           # [B,nc,Q,nh]
+
+    h_init = (jnp.zeros((B, nh, hp, N), jnp.float32) if state0 is None
+              else state0["ssm"])
+
+    def chunk_step(h, inp):
+        dlq, cq, uq, Bq, Cq = inp   # [B,Q,nh], [B,Q,nh], [B,Q,nh,hp], [B,Q,N]x2
+        # intra-chunk (the Pallas-kernel part): masked decay-weighted gram
+        gram = jnp.einsum("bqn,bkn->bqk", Cq, Bq)              # [B,Q,Q]
+        decay = cq[:, :, None, :] - cq[:, None, :, :]          # [B,Q,K,nh]
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        M = jnp.where(mask[None, :, :, None],
+                      jnp.exp(decay), 0.0) * gram[..., None]   # [B,Q,K,nh]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", M, uq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", Cq, h, jnp.exp(cq))
+        # state update: h' = a_total * h + sum_j exp(cum_Q - cum_j) B_j u_j
+        a_tot = jnp.exp(cq[:, -1, :])                          # [B,nh]
+        w_j = jnp.exp(cq[:, -1, None, :] - cq)                 # [B,Q,nh]
+        dh = jnp.einsum("bqh,bqhp,bqn->bhpn", w_j, uq, Bq)
+        h_new = a_tot[:, :, None, None] * h + dh
+        return h_new, y_intra + y_inter
+
+    xs = (dlog_c.swapaxes(0, 1), cum.swapaxes(0, 1), u_c.swapaxes(0, 1),
+          B_cn.swapaxes(0, 1), C_cn.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h_init, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, nh, hp)
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+
+    # gated RMSNorm + output projection
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm(p["norm"], y.astype(x.dtype), "rmsnorm")
+    out = dense(p["out"], y)[:, :S0]
+    if return_state:
+        W = p["conv_w"].shape[0]
+        return out, {"ssm": h_last, "conv": conv_in[:, S0 - (W - 1): S0, :]}
+    return out
+
+
+def ssd_decode_step(p: dict, x: jnp.ndarray, cfg, state):
+    """One-token recurrence. x [B,1,d]; state {ssm [B,nh,hp,N], conv [B,W-1,ch]}."""
+    B = x.shape[0]
+    di, nh, hp, N = dims(cfg)
+    z, conv_in, dt = _project(p, x, cfg)                  # S=1
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)
+    W = p["conv_w"].shape[0]
+    cv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype))
+    cv = jax.nn.silu(cv + p["conv_b"].astype(x.dtype))[:, None, :]
+    xc, Bc, Cc = _split_conv(cv, cfg)
+    xh = xc.reshape(B, nh, hp).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A)                              # [B,nh]
+    u = dt[:, 0, :, None] * xh                             # [B,nh,hp]
+    h = (a[:, :, None, None] * state["ssm"]
+         + jnp.einsum("bhp,bn->bhpn", u, Bc[:, 0]))
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0], h)
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, 1, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm(p["norm"], y.astype(x.dtype), "rmsnorm")
+    out = dense(p["out"], y)
+    return out, {"ssm": h, "conv": window[:, 1:, :]}

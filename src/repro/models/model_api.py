@@ -1,0 +1,81 @@
+"""Unified model API + per-(arch, shape) input specs.
+
+``build_model(cfg)`` returns an object exposing ``spec() / loss_fn /
+prefill_fn / decode_fn``; ``input_specs(cfg, shape)`` returns the
+ShapeDtypeStruct stand-ins the dry-run lowers against (weak-type-correct,
+shardable, zero allocation).  Modality frontends are stubs: VLM cells get
+precomputed patch embeddings, audio cells get precomputed frames.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.encdec import EncDecLM, encdec_cache_spec
+from repro.models.layers import Hints, NO_HINTS
+from repro.models.params import abstract_params
+from repro.models.transformer import DecoderLM, cache_spec
+
+
+def build_model(cfg: ArchConfig, hints: Hints = NO_HINTS):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, hints)
+    return DecoderLM(cfg, hints)
+
+
+def model_cache_spec(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    if cfg.family == "encdec":
+        return encdec_cache_spec(cfg, batch, max_len)
+    return cache_spec(cfg, batch, max_len)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """VLM cells: patches occupy the front of the assigned sequence length."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    St = text_len(cfg, S)
+    out = {"tokens": _sds((B, St), "int32"), "labels": _sds((B, St), "int32")}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), "float32")
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), "float32")
+    return out
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    St = text_len(cfg, S)
+    out = {"tokens": _sds((B, St), "int32")}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), "float32")
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), "float32")
+    return out
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """decode shapes lower ``serve_step``: one new token + a cache of
+    seq_len capacity (per the assignment)."""
+    B, S = shape.global_batch, shape.seq_len
+    cspec = model_cache_spec(cfg, B, S)
+    return {"tok": _sds((B,), "int32"),
+            "cache": abstract_params(cspec)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,261 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort-based dispatch.
+
+TPU/SPMD design (DESIGN.md §5): experts are sharded over the ``model`` mesh
+axis (EP).  Token->expert routing is expressed as dense, static-shape array
+algebra — sort by expert id, position-in-run arithmetic, capacity-bounded
+scatter into an ``[E, C, d]`` buffer — exactly the Hiperfact "sorted-array
+algebra instead of pointer chasing" discipline applied to MoE dispatch.
+GSPMD turns the data-sharded -> expert-sharded buffer handoff into an
+all-to-all.
+
+Tokens beyond an expert's capacity ``C = ceil(T*k/E * capacity_factor)``
+are dropped (their combine weight contributes 0) — the standard
+capacity-factor trade-off, noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Hints, NO_HINTS, dense_spec
+from repro.models.params import normal
+
+
+def moe_spec(cfg) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    down_scale = 1.0 / math.sqrt(ff * 2 * cfg.n_layers)
+    ax3 = ("experts", "embed", "mlp")
+    ax3T = ("experts", "mlp", "embed")
+    out = {
+        "router": dense_spec(d, E, ("embed", None)),
+        "gate": normal((E, d, ff), ax3),
+        "up": normal((E, d, ff), ax3),
+        "down": normal((E, ff, d), ax3T, scale=down_scale),
+    }
+    return out
+
+
+def capacity(cfg, tokens_per_device_batch: int) -> int:
+    c = int(tokens_per_device_batch * cfg.top_k / cfg.n_experts
+            * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 (sublane alignment)
+
+
+def apply_moe(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatcher: explicit shard_map EP path on a mesh with a model axis
+    (sequence forms), portable GSPMD path otherwise.
+
+    §Perf note (EXPERIMENTS.md): the GSPMD path's global argsort/scatter
+    made XLA replicate the dispatch buffers and all-reduce expert grads
+    (27 TB/step for dbrx train_4k); the shard_map path reduces MoE comms
+    to two all_to_alls over `model` + the FSDP weight gathers.
+    """
+    mesh = hints.mesh
+    if (mesh is not None and "model" in getattr(mesh, "axis_names", ())
+            and hints.kind in ("train", "prefill")
+            and mesh.shape["model"] > 1
+            and cfg.n_experts % mesh.shape["model"] == 0):
+        return _moe_shard_map(p, x, cfg, hints)
+    return _moe_gspmd(p, x, cfg, hints)
+
+
+def _moe_gspmd(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,d] -> (y [B,S,d], aux_loss scalar).
+
+    The dispatch math is global-shape; sharding constraints route the
+    buffer to expert shards (E over 'model') and back.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, d)
+
+    # -- routing (f32 for a stable softmax) --------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    top_w, top_e = jax.lax.top_k(probs, k)                     # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # -- sort-based dispatch ------------------------------------------------
+    C = capacity(cfg, T)
+    e_flat = top_e.reshape(T * k)
+    order = jnp.argsort(e_flat)                                # stable
+    e_sorted = e_flat[order]
+    # position within each expert's run of the sorted pair list
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=e_sorted.dtype))
+    pos_in_e = jnp.arange(T * k) - starts[e_sorted]
+    kept = pos_in_e < C
+    slot = jnp.where(kept, e_sorted * C + pos_in_e, E * C)     # E*C = drop
+    tok_sorted = order // k                                    # token of pair
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[slot].set(xf[tok_sorted], mode="drop")
+    buf = buf.reshape(E, C, d)
+    buf = hints.apply(buf, "moe_buffer")                       # E -> model
+
+    # -- expert FFN (swiglu) ------------------------------------------------
+    dt = x.dtype
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(dt)))
+         * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(dt)))
+    h = hints.apply(h, "moe_hidden")
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(dt))
+    y_buf = hints.apply(y_buf, "moe_buffer").reshape(E * C, d)
+
+    # -- combine -------------------------------------------------------------
+    y_sorted = jnp.where(kept[:, None],
+                         y_buf[jnp.minimum(slot, E * C - 1)], 0.0)
+    inv = jnp.argsort(order)
+    y_pairs = y_sorted[inv].reshape(T, k, d)
+    y = jnp.einsum("tkd,tk->td", y_pairs, top_w.astype(dt))
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit EP dispatch (shard_map over the mesh)
+
+
+def _route_and_pack(xf, top_e, E_loc: int, ms: int, Cs: int):
+    """Sort pairs by (dest shard, expert); pack into [ms, Cs, ...] buffers.
+
+    Returns (send_x, send_e, order, kept, slot) — the inverse mapping
+    (order/kept/slot) is reused to unpack the returned activations.
+    """
+    T, k = top_e.shape
+    e_flat = top_e.reshape(T * k)
+    order = jnp.argsort(e_flat)               # grouped by expert => by dest
+    e_s = e_flat[order]
+    dest_s = e_s // E_loc
+    starts = jnp.searchsorted(dest_s, jnp.arange(ms, dtype=dest_s.dtype))
+    pos = jnp.arange(T * k) - starts[dest_s]
+    kept = pos < Cs
+    slot = jnp.where(kept, dest_s * Cs + pos, ms * Cs)
+    send_x = jnp.zeros((ms * Cs, xf.shape[1]), xf.dtype)
+    send_x = send_x.at[slot].set(xf[order // k], mode="drop")
+    send_e = jnp.full((ms * Cs,), E_loc, jnp.int32)  # E_loc = invalid marker
+    send_e = send_e.at[slot].set((e_s % E_loc).astype(jnp.int32),
+                                 mode="drop")
+    return send_x, send_e, order, kept, slot
+
+
+def _local_expert_ffn(rx, re, gw, uw, dw, E_loc: int, C2: int):
+    """Second (local) dispatch by expert id + the expert matmuls."""
+    Trecv, d = rx.shape
+    order2 = jnp.argsort(re)                   # invalid ids (E_loc) sort last
+    re_s = re[order2]
+    starts2 = jnp.searchsorted(re_s, jnp.arange(E_loc, dtype=re_s.dtype))
+    pos2 = jnp.arange(Trecv) - starts2[jnp.clip(re_s, 0, E_loc - 1)]
+    kept2 = (re_s < E_loc) & (pos2 < C2)
+    slot2 = jnp.where(kept2, re_s * C2 + pos2, E_loc * C2)
+    buf = jnp.zeros((E_loc * C2, d), rx.dtype)
+    buf = buf.at[slot2].set(rx[order2], mode="drop").reshape(E_loc, C2, d)
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gw))
+         * jnp.einsum("ecd,edf->ecf", buf, uw))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, dw).reshape(E_loc * C2, d)
+    y2 = jnp.where(kept2[:, None],
+                   y_buf[jnp.minimum(slot2, E_loc * C2 - 1)], 0.0)
+    y_recv = jnp.zeros((Trecv, d), rx.dtype).at[order2].set(
+        y2.astype(rx.dtype))
+    return y_recv
+
+
+def _moe_shard_map(p: dict, x: jnp.ndarray, cfg, hints: Hints
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import spec_for
+
+    mesh = hints.mesh
+    ms = int(mesh.shape["model"])
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names
+                    and mesh.shape[a] > 1)
+    all_axes = dp_axes + ("model",)
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // ms
+    B, S, d = x.shape
+
+    # residual-stream sharding: batch over dp, seq over model (SP)
+    x_spec = hints.specs.get("residual", P(None, None, None))
+    w_specs = {name: spec_for(tuple(int(v) for v in p[name]["w"].shape)
+                              if name == "router" else p[name].shape,
+                              _AXES[name], mesh)
+               for name in ("router", "gate", "up", "down")}
+
+    def local_fn(router_w, gate_w, up_w, down_w, x_loc):
+        dt = x_loc.dtype
+        # FSDP gather of the embed dim, in bf16 (halves gather bytes)
+        def gather(w, axis):
+            for a in dp_axes:
+                w = jax.lax.all_gather(w, a, axis=axis, tiled=True)
+            return w
+
+        router = gather(router_w.astype(jnp.float32), 0)       # [d, E]
+        gw = gather(gate_w.astype(dt), 1)                       # [E_loc,d,ff]
+        uw = gather(up_w.astype(dt), 1)
+        dw = gather(down_w.astype(dt), 2)                       # [E_loc,ff,d]
+
+        Bl, Sl, _ = x_loc.shape
+        T = Bl * Sl
+        xf = x_loc.reshape(T, d)
+        logits = xf.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        # aux load-balance loss over the GLOBAL token population
+        me_sum = jax.lax.psum(probs.sum(0), all_axes)
+        ce_sum = jax.lax.psum(
+            jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32).sum(0),
+            all_axes)
+        n_tok = jax.lax.psum(jnp.float32(T), all_axes)
+        aux = E * jnp.sum((me_sum / n_tok) * (ce_sum / n_tok))
+
+        Cs = max(8, -(-int(T * k / ms * cfg.capacity_factor) // 8) * 8)
+        send_x, send_e, order, kept, slot = _route_and_pack(
+            xf, top_e, E_loc, ms, Cs)
+
+        a2a = lambda v: jax.lax.all_to_all(
+            v.reshape(ms, Cs, *v.shape[1:]), "model",
+            split_axis=0, concat_axis=0, tiled=True)
+        rx = a2a(send_x).reshape(ms * Cs, d)
+        re = a2a(send_e[:, None])[..., 0].reshape(ms * Cs)
+
+        C2 = max(8, -(-int(ms * Cs * cfg.capacity_factor / E_loc) // 8) * 8)
+        y_recv = _local_expert_ffn(rx, re, gw, uw, dw, E_loc, C2)
+
+        yb = a2a(y_recv).reshape(ms * Cs, d)
+        y_sorted = jnp.where(kept[:, None],
+                             yb[jnp.minimum(slot, ms * Cs - 1)], 0.0)
+        y_pairs = jnp.zeros((T * k, d), dt).at[order].set(
+            y_sorted.astype(dt))
+        y = jnp.einsum("tkd,tk->td", y_pairs.reshape(T, k, d),
+                       top_w.astype(dt))
+        return y.reshape(Bl, Sl, d), aux
+
+    y, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(w_specs["router"], w_specs["gate"], w_specs["up"],
+                  w_specs["down"], x_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )(p["router"]["w"], p["gate"], p["up"], p["down"], x)
+    return y, aux
+
+
+_AXES = {
+    "router": ("embed", None),
+    "gate": ("experts", "embed", "mlp"),
+    "up": ("experts", "embed", "mlp"),
+    "down": ("experts", "mlp", "embed"),
+}

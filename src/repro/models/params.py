@@ -1,0 +1,123 @@
+"""Parameter specs: shapes + dtypes + logical sharding axes + initializers.
+
+A model is described as a pytree of ``LeafSpec``; from it we derive
+(a) abstract params (ShapeDtypeStruct — the dry-run path, zero allocation),
+(b) concrete initialized params (smoke tests / real training), and
+(c) the logical-axes pytree consumed by ``repro.distributed.sharding``.
+
+Logical axis vocabulary (mapped to mesh axes by divisibility-aware rules):
+  embed   — d_model dims                  -> FSDP over (pod, data)
+  mlp     — feed-forward hidden           -> TP over model
+  heads   — flattened (n_heads*head_dim)  -> TP over model
+  kv      — flattened (n_kv*head_dim)     -> TP over model
+  vocab   — vocabulary                    -> TP over model
+  experts — MoE expert dim                -> EP over model
+  layers  — stacked scan dim              -> never sharded
+  (None)  — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | rglru_a | ssm_a | dt_bias
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf_spec(x) -> bool:
+    return isinstance(x, LeafSpec)
+
+
+def _map_specs(fn: Callable, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_leaf_spec)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct pytree — for .lower() without allocation."""
+    return _map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), spec_tree)
+
+
+def axes_tree(spec_tree):
+    return _map_specs(lambda s: s.axes, spec_tree)
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_leaf_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_leaf_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def _init_leaf(spec: LeafSpec, key) -> jnp.ndarray:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * spec.scale).astype(dt)
+    if spec.init == "rglru_a":
+        # RG-LRU Λ init: a = sigmoid(Λ) uniform in [0.9, 0.999] (paper init)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(u / (1.0 - u)).astype(dt)
+    if spec.init == "ssm_a":
+        # mamba2 A init: -uniform[1, 16] stored as log
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if spec.init == "dt_bias":
+        # mamba dt bias: softplus^-1 of uniform[1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dt)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(spec_tree, rng):
+    """Concrete initialization. Each leaf gets a fold_in'd key (stable in
+    tree-definition order — checkpoint/restart reproducible)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_leaf_spec)
+    keys = jax.random.split(rng, max(1, len(leaves)))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def normal(shape, axes, scale=None, dtype="float32") -> LeafSpec:
+    if scale is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    return LeafSpec(tuple(shape), tuple(axes), "normal", scale, dtype)
+
+
+def zeros(shape, axes, dtype="float32") -> LeafSpec:
+    return LeafSpec(tuple(shape), tuple(axes), "zeros", dtype=dtype)
+
+
+def ones(shape, axes, dtype="float32") -> LeafSpec:
+    return LeafSpec(tuple(shape), tuple(axes), "ones", dtype=dtype)
+
+
+def stacked(n: int, spec_tree):
+    """Prepend a ``layers`` scan dim to every leaf of a per-layer spec."""
+    return _map_specs(
+        lambda s: LeafSpec((n, *s.shape), ("layers", *s.axes), s.init,
+                           s.scale, s.dtype), spec_tree)

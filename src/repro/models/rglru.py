@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin-style).
+
+The recurrent block: dual linear branches (gate + recurrent), a short
+causal depthwise conv, and the Real-Gated LRU::
+
+    r_t = sigmoid(W_a u_t + b_a)          recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+    out = W_o (gelu(gate_branch) * h)
+
+Sequence form uses ``jax.lax.associative_scan`` (log-depth on TPU);
+decode is the single-step recurrence with an O(1) state — which is why
+recurrentgemma runs the ``long_500k`` shape (DESIGN.md §4).
+The recurrence runs in f32 for stability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Hints, NO_HINTS, dense, dense_spec
+from repro.models.params import LeafSpec, zeros
+
+RGLRU_C = 8.0
+
+
+def rglru_spec(cfg) -> dict:
+    d = cfg.d_model
+    dr = d  # lru width = d_model for the assigned config
+    w = cfg.rglru_conv_width
+    return {
+        "in_x": dense_spec(d, dr, ("embed", "mlp")),
+        "in_gate": dense_spec(d, dr, ("embed", "mlp")),
+        "conv_w": zeros((w, dr), (None, "mlp")),
+        "conv_b": zeros((dr,), ("mlp",)),
+        "w_a": dense_spec(dr, dr, ("mlp", "mlp")),
+        "w_i": dense_spec(dr, dr, ("mlp", "mlp")),
+        "lam": LeafSpec((dr,), ("mlp",), "rglru_a"),
+        "out": dense_spec(dr, d, ("mlp", "embed")),
+    }
+
+
+def _causal_depthwise_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """u [B,S,dr], w [W,dr]: y_t = sum_j w_j * u_{t-W+1+j} + b."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(u)
+    for j in range(W):
+        y = y + pad[:, j: j + u.shape[1], :] * w[j]
+    return y + b
+
+
+def _gates(p: dict, u: jnp.ndarray):
+    """a_t (decay) and gated input for the LRU, in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["w_a"], uf))
+    i = jax.nn.sigmoid(dense(p["w_i"], uf))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated
+
+
+def _linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """h_t = a_t h_{t-1} + b_t along axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS,
+                h0: jnp.ndarray | None = None, conv0: jnp.ndarray | None = None,
+                return_state: bool = False):
+    """Sequence form. x [B,S,d] -> y [B,S,d] (+ optional final state)."""
+    gate = jax.nn.gelu(dense(p["in_gate"], x), approximate=True)
+    u = dense(p["in_x"], x)
+    u = hints.apply(u, "mlp_hidden")
+    if conv0 is not None:  # prefill continuation: prepend conv history
+        W = cfg.rglru_conv_width
+        ext = jnp.concatenate([conv0, u], axis=1)
+        u = _causal_depthwise_conv(ext, p["conv_w"], p["conv_b"])[:, W - 1:, :]
+    else:
+        u = _causal_depthwise_conv(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, u)
+    h = _linear_scan(a, b, h0)
+    y = dense(p["out"], (gate.astype(jnp.float32) * h).astype(x.dtype))
+    if return_state:
+        W = cfg.rglru_conv_width
+        conv_state = dense(p["in_x"], x)[:, -(W - 1):, :]
+        return y, (h[:, -1, :], conv_state)
+    return y
+
+
+def rglru_decode_step(p: dict, x: jnp.ndarray, cfg, state):
+    """One-token step. x [B,1,d]; state = (h [B,dr] f32, conv [B,W-1,dr])."""
+    h_prev, conv_prev = state
+    gate = jax.nn.gelu(dense(p["in_gate"], x), approximate=True)
+    u_new = dense(p["in_x"], x)                          # [B,1,dr]
+    window = jnp.concatenate([conv_prev, u_new], axis=1)  # [B,W,dr]
+    u = jnp.einsum("bwd,wd->bd", window, p["conv_w"].astype(x.dtype))
+    u = (u + p["conv_b"].astype(x.dtype))[:, None, :]
+    a, b = _gates(p, u)
+    h = a[:, 0] * h_prev + b[:, 0]
+    y = dense(p["out"], (gate[:, 0].astype(jnp.float32) * h).astype(x.dtype))
+    return y[:, None, :], (h, window[:, 1:, :])

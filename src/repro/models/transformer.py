@@ -1,0 +1,475 @@
+"""Generic decoder-only LM covering dense / MoE / hybrid / SSM / VLM families.
+
+Structure: token embedding (+ optional precomputed modality embeddings),
+``lax.scan`` over stacked homogeneous blocks (hybrid patterns scan over
+repeating *groups*), final norm, and a seq-chunked cross-entropy head that
+never materializes the full ``[B,S,V]`` logits tensor.
+
+Three entry points per model (all pure functions of the params pytree):
+  ``loss_fn``      — training loss (chunked CE + MoE aux)
+  ``prefill_fn``   — forward over a prompt, returns last-position logits +
+                     a decode cache sized ``max_len``
+  ``decode_fn``    — one-token serve step against the cache
+
+Remat: each block application is wrapped in ``jax.checkpoint`` (policy:
+save nothing) so the scan stores only per-layer block inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, BlockKind
+from repro.models.layers import (Hints, NO_HINTS, apply_mlp, apply_norm,
+                                 attention, decode_attention, dense,
+                                 layernorm_spec, mlp_spec, project_qkv,
+                                 rmsnorm_spec, sinusoidal_table)
+from repro.models.mamba2 import (apply_ssd, dims as ssm_dims, mamba2_spec,
+                                 ssd_decode_step)
+from repro.models.moe import apply_moe, moe_spec
+from repro.models.params import LeafSpec, normal, stacked
+from repro.models.rglru import apply_rglru, rglru_decode_step, rglru_spec
+from repro.models.layers import attention_spec
+
+# ---------------------------------------------------------------------------
+# Specs
+
+
+def _norm_spec(cfg):
+    return rmsnorm_spec(cfg.d_model) if cfg.norm == "rmsnorm" \
+        else layernorm_spec(cfg.d_model)
+
+
+def block_spec(cfg: ArchConfig, kind: BlockKind) -> dict:
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN):
+        return {"ln1": _norm_spec(cfg), "attn": attention_spec(cfg),
+                "ln2": _norm_spec(cfg), "mlp": mlp_spec(cfg)}
+    if kind == BlockKind.MOE:
+        return {"ln1": _norm_spec(cfg), "attn": attention_spec(cfg),
+                "ln2": _norm_spec(cfg), "moe": moe_spec(cfg)}
+    if kind == BlockKind.SSM:
+        return {"ln": _norm_spec(cfg), "ssm": mamba2_spec(cfg)}
+    if kind == BlockKind.RECURRENT:
+        return {"ln1": _norm_spec(cfg), "rglru": rglru_spec(cfg),
+                "ln2": _norm_spec(cfg), "mlp": mlp_spec(cfg)}
+    raise ValueError(kind)
+
+
+def _layer_groups(cfg: ArchConfig) -> tuple[list[BlockKind], int, list[BlockKind]]:
+    """(group_pattern, n_groups, tail_kinds).  Uniform archs: group = 1 block."""
+    kinds = cfg.block_kinds()
+    if cfg.pattern:
+        g = [BlockKind(p) for p in cfg.pattern]
+        n = len(kinds) // len(g)
+        tail = kinds[n * len(g):]
+        return g, n, tail
+    return [kinds[0]], len(kinds), []
+
+
+def model_spec(cfg: ArchConfig) -> dict:
+    group, n_groups, tail = _layer_groups(cfg)
+    gspec = {f"b{i}": block_spec(cfg, k) for i, k in enumerate(group)}
+    spec: dict[str, Any] = {
+        "embed": normal((cfg.padded_vocab(), cfg.d_model), ("vocab", "embed"),
+                        scale=0.02),
+        "blocks": stacked(n_groups, gspec),
+        "final_norm": _norm_spec(cfg),
+    }
+    if tail:
+        spec["tail"] = [block_spec(cfg, k) for k in tail]
+    if not cfg.tie_embeddings:
+        spec["head"] = normal((cfg.d_model, cfg.padded_vocab()),
+                              ("embed", "vocab"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Block application — train/prefill sequence form
+
+
+def _attn_part(p, h, cfg, positions, hints, window):
+    x = apply_norm(p["ln1"], h, cfg.norm)
+    q, k, v = project_qkv(p["attn"], x, cfg, positions, hints)
+    a = attention(q, k, v, cfg, causal=True, window=window, hints=hints)
+    B, S = a.shape[:2]
+    return h + dense(p["attn"]["o"], a.reshape(B, S, -1)), (k, v)
+
+
+def apply_block(p: dict, h: jnp.ndarray, kind: BlockKind, cfg: ArchConfig,
+                positions, hints: Hints, collect_cache: bool = False,
+                max_len: int = 0):
+    """-> (h', aux, cache_entry) — cache entry only when collect_cache."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN, BlockKind.MOE):
+        window = cfg.window if kind == BlockKind.LOCAL_ATTN else 0
+        h, (k, v) = _attn_part(p, h, cfg, positions, hints, window)
+        x2 = apply_norm(p["ln2"], h, cfg.norm)
+        if kind == BlockKind.MOE:
+            y, aux = apply_moe(p["moe"], x2, cfg, hints)
+        else:
+            y = apply_mlp(p["mlp"], x2, cfg, hints)
+        h = h + y
+        if collect_cache:
+            cache = _attn_cache_from_prefill(k, v, kind, cfg, max_len)
+    elif kind == BlockKind.SSM:
+        x = apply_norm(p["ln"], h, cfg.norm)
+        if collect_cache:
+            y, st = apply_ssd(p["ssm"], x, cfg, hints, return_state=True)
+            cache = st
+        else:
+            y = apply_ssd(p["ssm"], x, cfg, hints)
+        h = h + y
+    elif kind == BlockKind.RECURRENT:
+        x = apply_norm(p["ln1"], h, cfg.norm)
+        if collect_cache:
+            y, (hstate, conv) = apply_rglru(p["rglru"], x, cfg, hints,
+                                            return_state=True)
+            cache = {"h": hstate, "conv": conv}
+        else:
+            y = apply_rglru(p["rglru"], x, cfg, hints)
+        h = h + y
+        x2 = apply_norm(p["ln2"], h, cfg.norm)
+        h = h + apply_mlp(p["mlp"], x2, cfg, hints)
+    else:
+        raise ValueError(kind)
+    h = hints.apply(h, "residual")
+    return h, aux, cache
+
+
+def _attn_cache_from_prefill(k, v, kind, cfg, max_len):
+    """Build the decode cache entry from prefill K/V."""
+    B, S = k.shape[:2]
+    if kind == BlockKind.LOCAL_ATTN:
+        W = cfg.window
+        pos = jnp.arange(S, dtype=jnp.int32)
+        if S >= W:
+            kw, vw, pw = k[:, S - W:], v[:, S - W:], pos[S - W:]
+        else:
+            pad = W - S
+            kw = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+            vw = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+            pw = jnp.pad(pos, (pad, 0), constant_values=-1)
+        # ring layout: entry for absolute position p lives at slot p % W
+        slots = jnp.where(pw >= 0, pw % W, jnp.arange(W))
+        kr = jnp.zeros_like(kw).at[:, slots].set(kw)
+        vr = jnp.zeros_like(vw).at[:, slots].set(vw)
+        pr = jnp.full((W,), -1, jnp.int32).at[slots].set(pw)
+        return {"k": kr, "v": vr,
+                "pos": jnp.broadcast_to(pr, (B, W))}
+    if S < max_len:
+        k = jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Block application — decode (one token)
+
+
+def apply_block_decode(p: dict, h: jnp.ndarray, kind: BlockKind,
+                       cfg: ArchConfig, cache: dict, lens: jnp.ndarray,
+                       hints: Hints):
+    """h [B,1,d]; lens [B] = tokens already in cache. -> (h', cache')."""
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN, BlockKind.MOE):
+        x = apply_norm(p["ln1"], h, cfg.norm)
+        q, k, v = project_qkv(p["attn"], x, cfg, lens[:, None], hints)
+        B = h.shape[0]
+        if kind == BlockKind.LOCAL_ATTN:
+            W = cfg.window
+            slot = lens % W
+            kc = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+            pc = cache["pos"].at[jnp.arange(B), slot].set(lens)
+            valid = (pc >= 0) & (pc >= (lens - W + 1)[:, None]) \
+                & (pc <= lens[:, None])
+            cache = {"k": kc, "v": vc, "pos": pc}
+        else:
+            S = cache["k"].shape[1]
+            kc = cache["k"].at[jnp.arange(B), lens].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(B), lens].set(v[:, 0])
+            valid = jnp.arange(S)[None, :] <= lens[:, None]
+            cache = {"k": kc, "v": vc}
+        a = decode_attention(q[:, 0], kc, vc, valid, h.dtype)
+        h = h + dense(p["attn"]["o"], a.reshape(B, 1, -1)[..., 0, :])[:, None, :]
+        x2 = apply_norm(p["ln2"], h, cfg.norm)
+        if kind == BlockKind.MOE:
+            y, _ = apply_moe(p["moe"], x2, cfg, hints)
+        else:
+            y = apply_mlp(p["mlp"], x2, cfg, hints)
+        h = h + y
+    elif kind == BlockKind.SSM:
+        x = apply_norm(p["ln"], h, cfg.norm)
+        y, cache = ssd_decode_step(p["ssm"], x, cfg, cache)
+        h = h + y
+    elif kind == BlockKind.RECURRENT:
+        x = apply_norm(p["ln1"], h, cfg.norm)
+        y, st = rglru_decode_step(p["rglru"], x, cfg,
+                                  (cache["h"], cache["conv"]))
+        cache = {"h": st[0], "conv": st[1]}
+        h = h + y
+        x2 = apply_norm(p["ln2"], h, cfg.norm)
+        h = h + apply_mlp(p["mlp"], x2, cfg, hints)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+
+
+def block_cache_spec(cfg: ArchConfig, kind: BlockKind, B: int, max_len: int):
+    dt = cfg.dtype
+    if kind in (BlockKind.ATTN, BlockKind.MOE):
+        sh = (B, max_len, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("batch", "cache_seq", None, None)
+        return {"k": LeafSpec(sh, ax, "zeros", dtype=dt),
+                "v": LeafSpec(sh, ax, "zeros", dtype=dt)}
+    if kind == BlockKind.LOCAL_ATTN:
+        sh = (B, cfg.window, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("batch", None, None, None)
+        return {"k": LeafSpec(sh, ax, "zeros", dtype=dt),
+                "v": LeafSpec(sh, ax, "zeros", dtype=dt),
+                "pos": LeafSpec((B, cfg.window), ("batch", None), "zeros",
+                                dtype="int32")}
+    if kind == BlockKind.SSM:
+        di, nh, hp, N = ssm_dims(cfg)
+        ch = di + 2 * N
+        return {"ssm": LeafSpec((B, nh, hp, N), ("batch", "heads3", None, None),
+                                "zeros", dtype="float32"),
+                "conv": LeafSpec((B, 3, ch), ("batch", None, None), "zeros",
+                                 dtype=dt)}
+    if kind == BlockKind.RECURRENT:
+        dr = cfg.d_model
+        W = cfg.rglru_conv_width
+        return {"h": LeafSpec((B, dr), ("batch", "mlp"), "zeros",
+                              dtype="float32"),
+                "conv": LeafSpec((B, W - 1, dr), ("batch", None, "mlp"),
+                                 "zeros", dtype=dt)}
+    raise ValueError(kind)
+
+
+def cache_spec(cfg: ArchConfig, B: int, max_len: int) -> dict:
+    group, n_groups, tail = _layer_groups(cfg)
+    gspec = {f"b{i}": block_cache_spec(cfg, k, B, max_len)
+             for i, k in enumerate(group)}
+    out = {"layers": stacked(n_groups, gspec),
+           "lens": LeafSpec((B,), ("batch",), "zeros", dtype="int32")}
+    if tail:
+        out["tail"] = [block_cache_spec(cfg, k, B, max_len) for k in tail]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trunk
+
+
+def _embed_tokens(params, tokens, cfg, hints):
+    h = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    return hints.apply(h, "residual")
+
+
+def _add_positional(h, cfg, offset: int = 0):
+    if cfg.pos == "sinusoidal":
+        tab = sinusoidal_table(h.shape[1] + offset, h.shape[-1])
+        h = h + tab[offset:].astype(h.dtype)
+    return h
+
+
+def trunk(params: dict, h: jnp.ndarray, cfg: ArchConfig, positions,
+          hints: Hints, collect_cache: bool = False, max_len: int = 0):
+    """Scan the block stack. -> (h, aux, cache|None)."""
+    group, n_groups, tail = _layer_groups(cfg)
+
+    def group_body(carry, gp):
+        hh, aux = carry
+        caches = {}
+        for i, kind in enumerate(group):
+            hh, a, c = apply_block(gp[f"b{i}"], hh, kind, cfg, positions,
+                                   hints, collect_cache, max_len)
+            aux = aux + a
+            if collect_cache:
+                caches[f"b{i}"] = c
+        return (hh, aux), caches if collect_cache else None
+
+    body = group_body if collect_cache else jax.checkpoint(group_body)
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params["blocks"])
+    tail_caches = []
+    for i, kind in enumerate(tail):
+        h, a, c = apply_block(params["tail"][i], h, kind, cfg, positions,
+                              hints, collect_cache, max_len)
+        aux = aux + a
+        tail_caches.append(c)
+    cache = None
+    if collect_cache:
+        cache = {"layers": caches}
+        if tail:
+            cache["tail"] = tail_caches
+    return h, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked CE)
+
+
+def chunked_ce(h: jnp.ndarray, head_w: jnp.ndarray, labels: jnp.ndarray,
+               chunk: int, hints: Hints = NO_HINTS, n_vocab: int = 0):
+    """h [B,S,d] vs labels [B,S] (-1 = ignore) -> (sum_nll, n_valid).
+
+    ``n_vocab``: real vocab size; logits for padded ids (vocab-TP padding,
+    config.vocab_pad) are masked out of the softmax."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, l_c = xs
+        logits = jnp.einsum("bsd,dv->bsv", h_c, head_w.astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = hints.apply(logits, "logits")
+        if n_vocab and n_vocab < logits.shape[-1]:
+            logits = jnp.where(jnp.arange(logits.shape[-1]) < n_vocab,
+                               logits, -jnp.inf)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(l_c, 0)[..., None], axis=-1)[..., 0]
+        valid = l_c >= 0
+        nll = jnp.where(valid, lse - picked, 0.0)
+        return (tot + nll.sum().astype(jnp.float32),
+                cnt + valid.sum().astype(jnp.int32)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hc, lc))
+    return tot, cnt
+
+
+# ---------------------------------------------------------------------------
+# Public model API
+
+
+class DecoderLM:
+    """Decoder-only model family wrapper (pure-function methods)."""
+
+    def __init__(self, cfg: ArchConfig, hints: Hints = NO_HINTS):
+        self.cfg = cfg
+        self.hints = hints
+
+    # -- params ------------------------------------------------------------
+    def spec(self) -> dict:
+        return model_spec(self.cfg)
+
+    def head_w(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    # -- forward ------------------------------------------------------------
+    def hidden(self, params, tokens, patches=None, collect_cache=False,
+               max_len: int = 0):
+        cfg, hints = self.cfg, self.hints
+        h = _embed_tokens(params, tokens, cfg, hints)
+        if patches is not None:
+            h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+            h = hints.apply(h, "residual")
+        h = _add_positional(h, cfg)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, aux, cache = trunk(params, h, cfg, positions, hints,
+                              collect_cache, max_len)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        return h, aux, cache
+
+    def loss_fn(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        """batch: {tokens [B,S], labels [B,S], patches? [B,P,d]}."""
+        cfg = self.cfg
+        h, aux, _ = self.hidden(params, batch["tokens"],
+                                batch.get("patches"))
+        labels = batch["labels"]
+        if "patches" in batch:   # no loss on modality positions
+            P = batch["patches"].shape[1]
+            pad = jnp.full((labels.shape[0], P), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        tot, cnt = chunked_ce(h, self.head_w(params), labels,
+                              cfg.logit_chunk, self.hints, cfg.vocab)
+        loss = tot / jnp.maximum(cnt, 1)
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux / max(1, cfg.n_layers)
+        return loss, {"nll": tot, "tokens": cnt, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def prefill_fn(self, params, tokens, max_len: int, patches=None):
+        """-> (last-position logits [B,V], cache)."""
+        h, _, cache = self.hidden(params, tokens, patches,
+                                  collect_cache=True, max_len=max_len)
+        last = h[:, -1, :]
+        logits = (last @ self.head_w(params).astype(h.dtype))[
+            :, : self.cfg.vocab]
+        S = h.shape[1]
+        cache["lens"] = jnp.full((tokens.shape[0],), S, jnp.int32)
+        return logits, cache
+
+    def decode_fn(self, params, tok: jnp.ndarray, cache: dict):
+        """tok [B] int32 -> (logits [B,V], cache')."""
+        cfg, hints = self.cfg, self.hints
+        group, n_groups, tail = _layer_groups(cfg)
+        lens = cache["lens"]
+        h = params["embed"].astype(jnp.dtype(cfg.dtype))[tok][:, None, :]
+        if cfg.pos == "sinusoidal":
+            # absolute position = lens (per sequence)
+            d = h.shape[-1]
+            tab = sinusoidal_table(int(cache_max_len(cache)) + 1, d)
+            h = h + tab[lens][:, None, :].astype(h.dtype)
+
+        # The stacked cache rides in the scan CARRY (not xs/ys) so XLA's
+        # while-loop buffer reuse updates it in place — with xs/ys the old
+        # and new cache coexist and decode peak memory doubles.
+        n_groups = jax.tree.leaves(params["blocks"])[0].shape[0]
+
+        def group_body(carry, xs):
+            hh, cl = carry
+            gp, idx = xs
+            gc = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                       keepdims=False), cl)
+            new_c = {}
+            for i, kind in enumerate(group):
+                hh, c = apply_block_decode(gp[f"b{i}"], hh, kind, cfg,
+                                           gc[f"b{i}"], lens, hints)
+                new_c[f"b{i}"] = c
+            cl = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0), cl, new_c)
+            return (hh, cl), None
+
+        (h, new_layers), _ = jax.lax.scan(
+            group_body, (h, cache["layers"]),
+            (params["blocks"], jnp.arange(n_groups, dtype=jnp.int32)))
+        new_cache = {"layers": new_layers, "lens": lens + 1}
+        if tail:
+            new_tail = []
+            for i, kind in enumerate(tail):
+                h, c = apply_block_decode(params["tail"][i], h, kind, cfg,
+                                          cache["tail"][i], lens, hints)
+                new_tail.append(c)
+            new_cache["tail"] = new_tail
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = (h[:, 0, :] @ self.head_w(params).astype(h.dtype))
+        return logits[:, :cfg.vocab], new_cache
+
+
+def cache_max_len(cache) -> int:
+    """Static cache capacity (from the stacked attn K buffer)."""
+    for leaf in jax.tree.leaves(cache["layers"]):
+        if leaf.ndim >= 3:
+            return leaf.shape[2]
+    return 0

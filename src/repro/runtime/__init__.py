@@ -1,0 +1,6 @@
+"""Runtime: heartbeat/straggler monitoring + restart policy."""
+
+from repro.runtime.monitor import (HeartbeatMonitor, MonitorConfig,
+                                   RestartPolicy, StepTimer)
+
+__all__ = ["HeartbeatMonitor", "MonitorConfig", "RestartPolicy", "StepTimer"]

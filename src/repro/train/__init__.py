@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, step builder, trainer loop."""
+
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import (build_dp_compressed_step,
+                                    build_train_step, init_compressed_state,
+                                    init_train_state)
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["OptimizerConfig", "Trainer", "TrainerConfig",
+           "build_dp_compressed_step", "build_train_step",
+           "init_compressed_state", "init_opt_state", "init_train_state"]

@@ -1,0 +1,100 @@
+"""AdamW + schedules, hand-rolled (no external deps).
+
+State layout mirrors params (m, v per leaf, all f32) so the sharding
+rules for params apply unchanged to optimizer state — FSDP shards the
+optimizer exactly like the weights (ZeRO).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_schedule(cfg: OptimizerConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * (step + 1) / max(1, cfg.warmup_steps)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+    return lr
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _decay_mask(path: tuple) -> bool:
+    """No weight decay on norms / biases / 1-D params."""
+    name = "/".join(str(getattr(k, 'key', k)) for k in path)
+    return not any(t in name for t in ("scale", "bias", "lam", "a_log",
+                                       "dt_bias", "d_skip"))
+
+
+def adamw_update(params, grads, opt, cfg: OptimizerConfig):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    sched = cosine_schedule(cfg)
+    step = opt["step"] + 1
+    lr = sched(opt["step"])
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    decay_flags = {tuple(path): _decay_mask(path) for path, _ in flat_p}
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if decay_flags.get(tuple(path), True):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, opt["m"], opt["v"])
+    # unzip the 3-tuples
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_opt = {"m": new_m, "v": new_v, "step": step}
+    return new_p, new_opt, {"lr": lr, "grad_norm": gnorm}

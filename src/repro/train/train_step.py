@@ -1,0 +1,139 @@
+"""Train step builder: loss + grad + microbatch accumulation + AdamW.
+
+``build_train_step(model, opt_cfg, accum)`` returns a pure
+``step(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings from ``repro.distributed.sharding``.  Microbatch
+accumulation splits the global batch along dim 0 and lax.scan's over
+microbatches (grads accumulate in f32); this is what lets the 123B-class
+cells fit the per-chip activation budget (DESIGN.md §5).
+
+Optional cross-pod int8 error-feedback gradient compression
+(``compress_pod=True``): gradients reduce in full precision inside a pod
+(GSPMD) and in int8 across pods (shard_map over ``pod``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compression import compressed_grad_reduce
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+
+
+def init_train_state(params) -> dict:
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def _split_micro(batch: dict, n: int):
+    def re(x):
+        B = x.shape[0]
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def build_train_step(model, opt_cfg: OptimizerConfig, accum: int = 1) -> Callable:
+    loss_fn = model.loss_fn
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            micro = _split_micro(batch, accum)
+
+            def body(carry, mb):
+                acc_g, acc_l = carry
+                loss, _, grads = grads_of(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+                return (acc_g, acc_l + loss), None
+
+            # grad accumulators inherit the params' sharding via data
+            # dependence.  (§Perf it-10: hypothesized that zeros(shape)
+            # was replicated and forced per-microbatch all-reduces —
+            # REFUTED, the compiled HLO is identical either way; XLA
+            # already propagated the sharding.  Kept as the more robust
+            # spelling.)
+            zeros = jax.tree.map(
+                lambda p: (p * 0).astype(jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt_cfg)
+        new_state = dict(state, params=new_params, opt=new_opt)
+        out_metrics = {"loss": loss, **opt_metrics, **metrics}
+        return new_state, out_metrics
+
+    return step
+
+
+def build_dp_compressed_step(model, opt_cfg: OptimizerConfig, mesh,
+                             axis: str = "data") -> Callable:
+    """Pure-DP train step with int8 error-feedback gradient all-reduce.
+
+    Params are replicated over ``axis``; the batch is sharded; each shard
+    computes local grads and the cross-shard reduction goes through
+    ``compressed_grad_reduce`` (8x fewer all-reduce bytes, error carried
+    forward).  State gains a ``grad_residual`` tree.  This is the explicit
+    shard_map form of the multi-pod "compress the slow axis" trick; the
+    FSDP path keeps full-precision GSPMD reductions (DESIGN.md §5).
+    """
+    from jax.experimental.shard_map import shard_map
+    loss_fn = model.loss_fn
+
+    def step(state, batch):
+        def shard_fn(state, batch):
+            params = state["params"]
+            # residual shard arrives [1, ...]; work with the inner view
+            res_in = jax.tree.map(lambda r: r[0], state["grad_residual"])
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads, res = compressed_grad_reduce(grads, res_in, axis)
+            loss = jax.lax.pmean(loss, axis)
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, state["opt"], opt_cfg)
+            new_state = dict(state, params=new_params, opt=new_opt,
+                             grad_residual=jax.tree.map(
+                                 lambda r: r[None], res))
+            return new_state, {"loss": loss, **opt_metrics}
+
+        def state_spec(path_free_state):
+            sp = jax.tree.map(lambda _: P(), path_free_state)
+            sp["grad_residual"] = jax.tree.map(
+                lambda _: P(axis), path_free_state["grad_residual"])
+            return sp
+
+        state_specs = state_spec(state)
+        batch_specs = jax.tree.map(lambda _: P(axis), batch)
+        out = shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(state_specs, batch_specs),
+            out_specs=(state_specs,
+                       {"loss": P(), "lr": P(), "grad_norm": P()}),
+            check_rep=False)(state, batch)
+        return out
+
+    return step
+
+
+def init_compressed_state(params, n_dev: int) -> dict:
+    """Residuals are per-device: stored stacked [n_dev, ...], axis-sharded."""
+    st = init_train_state(params)
+    st["grad_residual"] = jax.tree.map(
+        lambda p: jnp.zeros((n_dev, *p.shape), jnp.float32), params)
+    return st

@@ -1,0 +1,109 @@
+"""Trainer: the fault-tolerant training loop.
+
+Wires together: model + sharding rules + train step + data loader +
+checkpoint manager + heartbeat monitor.  Restart-safe by construction:
+state is (checkpointed params/opt, step index); the data pipeline is a
+pure function of the step, so a restart resumes bit-identically from the
+last committed checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.sharding import (activation_hints, batch_shardings,
+                                        shardings_for)
+from repro.models import build_model, init_params
+from repro.models.params import abstract_params
+from repro.runtime import HeartbeatMonitor, StepTimer
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import build_train_step, init_train_state
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    seed: int = 0
+    accum: int = 1
+
+
+class Trainer:
+    def __init__(self, arch_cfg, loader, opt_cfg: OptimizerConfig,
+                 tcfg: TrainerConfig, mesh=None, global_batch: int = 8):
+        self.cfg = arch_cfg
+        self.tcfg = tcfg
+        self.loader = loader
+        self.mesh = mesh
+        hints = (activation_hints(arch_cfg, mesh, global_batch, "train")
+                 if mesh is not None else None)
+        from repro.models.layers import NO_HINTS
+        self.model = build_model(arch_cfg, hints or NO_HINTS)
+        self.step_fn = build_train_step(self.model, opt_cfg, tcfg.accum)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+        self.monitor = HeartbeatMonitor()
+        self._jit_step = None
+        self.global_batch = global_batch
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self):
+        params = init_params(self.model.spec(), jax.random.PRNGKey(
+            self.tcfg.seed))
+        state = init_train_state(params)
+        if self.mesh is not None:
+            sh = shardings_for(self.model.spec(), self.mesh)
+            state["params"] = jax.tree.map(jax.device_put, state["params"], sh)
+            state["opt"]["m"] = jax.tree.map(jax.device_put,
+                                             state["opt"]["m"], sh)
+            state["opt"]["v"] = jax.tree.map(jax.device_put,
+                                             state["opt"]["v"], sh)
+        return state
+
+    def maybe_restore(self, state):
+        start = 0
+        if self.ckpt is not None:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                log.info("restoring checkpoint step %d", latest)
+                state = self.ckpt.restore(latest, state)
+                start = latest
+        return state, start
+
+    # -- loop ------------------------------------------------------------------
+    def run(self, state=None):
+        if state is None:
+            state = self.init_state()
+        state, start = self.maybe_restore(state)
+        step_fn = jax.jit(self.step_fn, donate_argnums=(0,))
+        timer = StepTimer()
+        losses = []
+        for step in range(start, self.tcfg.steps):
+            batch = self.loader(step)
+            batch = jax.tree.map(jax.numpy.asarray, batch)
+            timer.start()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = timer.stop()
+            losses.append(loss)
+            self.monitor.heartbeat("worker0", step)
+            if step % self.tcfg.log_every == 0:
+                log.info("step %d loss %.4f (%.0f ms)", step, loss, dt * 1e3)
+            if self.ckpt is not None and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save_async(step + 1, state)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {step}")
+        if self.ckpt is not None:
+            self.ckpt.save(self.tcfg.steps, state)
+            self.ckpt.wait()
+        return state, losses

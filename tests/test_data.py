@@ -1,0 +1,42 @@
+"""Data pipeline: determinism, shard disjointness, fact-derived corpus."""
+
+import numpy as np
+
+from repro.data import DataConfig, ShardedLoader, SyntheticLM
+from repro.data.factsource import FactCorpusSource
+
+
+def test_step_indexed_determinism():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=3)
+    a = SyntheticLM(cfg).batch(7)
+    b = SyntheticLM(cfg).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_shards_partition_global_batch():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8, seed=0)
+    src = SyntheticLM(cfg)
+    full = src.batch(3, 0, 1)
+    parts = [src.batch(3, s, 4) for s in range(4)]
+    stacked = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(full["tokens"], stacked)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=50, seq_len=16, global_batch=2, seed=0)
+    b = SyntheticLM(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_fact_corpus_deterministic_and_derived():
+    src = FactCorpusSource(vocab=256, seq_len=16, global_batch=4, seed=1)
+    a = src.batch(2)
+    b = FactCorpusSource(vocab=256, seq_len=16, global_batch=4,
+                         seed=1).batch(2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    assert (a["tokens"] >= 0).all() and (a["tokens"] < 256).all()
+    # the engine actually inferred a closure larger than the raw edges
+    assert src.engine.last_infer.facts_inferred > 0

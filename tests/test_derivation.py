@@ -1,0 +1,61 @@
+"""Derivation trees (paper §2.4): levels, out-groups, active rules."""
+
+from repro.core.conditions import AddAction, Rule, cond, term
+from repro.core.derivation import build_derivation_trees
+
+
+def r(name, in_types, out_types):
+    conds = tuple(cond(t, "?x", "p", "?y") for t in in_types)
+    acts = tuple(AddAction(t, term("?x"), "q", term("?y"))
+                 for t in out_types)
+    return Rule(name, conds, acts)
+
+
+def test_levels_topological():
+    rules = [r("a", ["A"], ["B"]), r("b", ["B"], ["C"]),
+             r("c", ["C"], []), r("d", ["A"], ["D"])]
+    t = build_derivation_trees(rules)
+    level_of = {ri: li for li, lv in enumerate(t.levels) for ri in lv}
+    assert level_of[0] < level_of[1] < level_of[2]
+    assert t.rule_type(0) == "DERIVATION_RULE"
+    assert t.rule_type(2) == "QUERY"
+    assert t.rule_type(3) == "QUERY"  # no children
+
+
+def test_cycles_collapse_to_one_level():
+    rules = [r("fwd", ["A"], ["B"]), r("bwd", ["B"], ["A"]),
+             r("q", ["B"], [])]
+    t = build_derivation_trees(rules)
+    level_of = {ri: li for li, lv in enumerate(t.levels) for ri in lv}
+    assert level_of[0] == level_of[1]  # SCC collapsed
+    assert any(len(scc) == 2 for scc in t.sccs)
+
+
+def test_active_rules_def11():
+    rules = [r("used", ["A"], ["B"]), r("unused", ["A"], ["Z"]),
+             r("mid", ["B"], ["C"]), r("q", ["C"], [])]
+    t = build_derivation_trees(rules)
+    act = t.active_set(lazy=True)
+    assert 0 in act and 2 in act and 3 in act
+    assert 1 not in act
+    assert t.active_set(lazy=False) == {0, 1, 2, 3}
+
+
+def test_out_groups_disjoint():
+    rules = [r("r0", ["A"], ["B"]), r("r1", ["A"], ["B", "C"]),
+             r("r2", ["A"], ["D"]), r("r3", ["A"], ["E"])]
+    t = build_derivation_trees(rules)
+    groups = t.out_groups([0, 1, 2, 3], {0, 1, 2, 3})
+    # r0/r1 share output type B -> same group; r2, r3 separate
+    by_rule = {}
+    for gi, g in enumerate(groups):
+        for ri in g:
+            by_rule[ri] = gi
+    assert by_rule[0] == by_rule[1]
+    assert len({by_rule[0], by_rule[2], by_rule[3]}) == 3
+    # groups' write sets pairwise disjoint
+    outs = [set().union(*(rules[ri].output_types() for ri in g))
+            for g in groups]
+    for i in range(len(outs)):
+        for j in range(i + 1, len(outs)):
+            assert not (outs[i] & outs[j])

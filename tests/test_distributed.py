@@ -1,0 +1,135 @@
+"""Distributed paths on 8 host devices (subprocess: device count is locked
+at first jax init, so each test gets its own process)."""
+
+import pytest
+
+
+def test_closure_matches_host_oracle(subproc):
+    subproc("""
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.distributed import DistributedClosure, ClosureConfig
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ('data', 'model'))
+rng = np.random.RandomState(0)
+src = rng.randint(0, 30, 60); dst = rng.randint(0, 30, 60)
+
+# host oracle: warshall-ish closure
+pairs = set(zip(src.tolist(), dst.tolist()))
+changed = True
+while changed:
+    changed = False
+    for (a, b) in list(pairs):
+        for (c, d) in list(pairs):
+            if b == c and (a, d) not in pairs:
+                pairs.add((a, d)); changed = True
+
+dc = DistributedClosure(mesh, ClosureConfig(edge_cap=1<<12, delta_cap=1<<10,
+                                            slot_cap=1<<8, join_cap=1<<12))
+got, iters = dc.run(src, dst)
+want = sorted((int(a) << 32) | int(b) for a, b in pairs)
+assert sorted(got.tolist()) == want, (len(got), len(want))
+print('closure ok', len(want), 'pairs in', iters, 'iters')
+""")
+
+
+def test_dp_compressed_step_close_to_exact(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models import build_model, init_params
+from repro.train import (OptimizerConfig, build_dp_compressed_step,
+                         build_train_step, init_compressed_state,
+                         init_train_state)
+
+mesh = jax.make_mesh((8,), ('data',))
+cfg = get_config('yi-6b', smoke=True)
+model = build_model(cfg)
+params = init_params(model.spec(), jax.random.PRNGKey(0))
+opt = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+
+B, S = 8, 32
+batch = {'tokens': jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                      cfg.vocab).astype(jnp.int32),
+         'labels': jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                      cfg.vocab).astype(jnp.int32)}
+exact = jax.jit(build_train_step(model, opt))
+s1, m1 = exact(init_train_state(params), batch)
+comp = jax.jit(build_dp_compressed_step(model, opt, mesh, axis='data'))
+s2, m2 = comp(init_compressed_state(params, 8), batch)
+assert abs(float(m1['loss']) - float(m2['loss'])) < 1e-3
+# parameter updates close (int8 quantization noise is small per step)
+rel = []
+for a, b in zip(jax.tree.leaves(s1['params']), jax.tree.leaves(s2['params'])):
+    d = float(jnp.max(jnp.abs(a - b)))
+    s = float(jnp.max(jnp.abs(a))) + 1e-9
+    rel.append(d / s)
+assert max(rel) < 0.35, max(rel)   # one AdamW step, bounded drift
+print('compressed step ok, max rel drift', max(rel))
+""")
+
+
+def test_pipeline_matches_sequential(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ('pod',))
+L, B, D = 8, 8, 16
+rng = np.random.RandomState(0)
+W = jnp.asarray(rng.randn(L, D, D) * 0.2, jnp.float32)
+
+def block(w, h):
+    return jnp.tanh(h @ w)
+
+h0 = jnp.asarray(rng.randn(B, D), jnp.float32)
+want = h0
+for i in range(L):
+    want = block(W[i], want)
+got = pipeline_apply(block, W, h0, mesh=mesh, n_stages=4, n_micro=4,
+                     axis='pod')
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+print('pipeline ok')
+""")
+
+
+def test_sharded_train_matches_single_device(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.distributed.sharding import (activation_hints, batch_shardings,
+                                        shardings_for)
+from repro.models import build_model, init_params
+from repro.models.layers import NO_HINTS
+from repro.train import OptimizerConfig, build_train_step, init_train_state
+
+cfg = get_config('qwen2-7b', smoke=True)
+opt = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+B, S = 8, 64
+batch = {'tokens': jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                      cfg.vocab).astype(jnp.int32),
+         'labels': jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                      cfg.vocab).astype(jnp.int32)}
+
+# single-logical-device result
+model0 = build_model(cfg, NO_HINTS)
+params = init_params(model0.spec(), jax.random.PRNGKey(0))
+s0, m0 = jax.jit(build_train_step(model0, opt))(init_train_state(params),
+                                                batch)
+
+# 2x4 mesh FSDP+TP
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+hints = activation_hints(cfg, mesh, B, 'train')
+model1 = build_model(cfg, hints)
+sh = shardings_for(model0.spec(), mesh)
+p1 = jax.tree.map(jax.device_put, params, sh)
+state1 = init_train_state(p1)
+bsh = batch_shardings(batch, mesh, B)
+b1 = jax.tree.map(jax.device_put, batch, bsh)
+s1, m1 = jax.jit(build_train_step(model1, opt))(state1, b1)
+assert abs(float(m0['loss']) - float(m1['loss'])) < 2e-3, \
+    (float(m0['loss']), float(m1['loss']))
+for a, b in zip(jax.tree.leaves(s0['params']), jax.tree.leaves(s1['params'])):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-3)
+print('sharded == single-device ok')
+""")

@@ -1,0 +1,203 @@
+"""Hiperfact engine semantics: config matrix ≡ Rete oracle ≡ each other.
+
+The paper's Table 1 configuration axes must all produce identical
+inference results — only performance may differ.  Hypothesis drives
+random rulesets/fact sets against the Rete baseline.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, Fact, HiperfactEngine, Rule
+from repro.core.conditions import AddAction, DeleteAction, cond, term
+from repro.core.rete_baseline import ReteEngine
+from repro.core.rulesets import rdfs_plus_rules
+
+CONFIGS = [
+    EngineConfig.infer1(),
+    EngineConfig.query1(),
+    EngineConfig(index_backend="HI", join="HJ", rnl="DR", layout="RR",
+                 tree_exec="SF", index_write="SW", unique="HU"),
+    EngineConfig(index_backend="LPID", join="MJ", rnl="DR", layout="CR",
+                 sort_mode="fixed"),
+    EngineConfig(index_backend="AI", join="HJ", rnl="AR", layout="RR",
+                 unique="HU", sort_mode="fixed"),
+]
+
+
+def kg_facts():
+    return [
+        Fact("Schema", "A", "subClassOf", "B"),
+        Fact("Schema", "B", "subClassOf", "C"),
+        Fact("Schema", "C", "subClassOf", "D"),
+        Fact("Schema", "knows", "characteristic", "symmetric"),
+        Fact("Schema", "partOf", "characteristic", "transitive"),
+        Fact("Data", "x", "type", "A"),
+        Fact("Data", "y", "type", "B"),
+        Fact("Data", "x", "knows", "y"),
+        Fact("Data", "p1", "partOf", "p2"),
+        Fact("Data", "p2", "partOf", "p3"),
+        Fact("Data", "p3", "partOf", "p4"),
+    ]
+
+
+def query_set(engine, conditions):
+    rows = engine.query(conditions)
+    return {tuple(sorted(r.items())) for r in rows}
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: c.label())
+def test_config_matrix_matches_rete(cfg):
+    e = HiperfactEngine(cfg)
+    e.add_rules(rdfs_plus_rules())
+    e.insert_facts(kg_facts())
+    e.infer()
+
+    r = ReteEngine()
+    for rr in rdfs_plus_rules():
+        r.add_rule(rr)
+    r.insert(kg_facts())
+    r.infer()
+
+    queries = [
+        [cond("Data", "?x", "type", "D")],
+        [cond("Data", "?a", "partOf", "?b")],
+        [cond("Data", "?a", "knows", "?b")],
+        [cond("Data", "?x", "type", "?t"),
+         cond("Data", "?x", "knows", "?y")],
+    ]
+    for q in queries:
+        got = query_set(e, q)
+        want = {tuple(sorted(m.items())) for m in r.query(q)}
+        assert got == want, q
+
+
+def test_fixpoint_counts_stable():
+    for cfg in CONFIGS:
+        e = HiperfactEngine(cfg)
+        e.add_rules(rdfs_plus_rules())
+        e.insert_facts(kg_facts())
+        s1 = e.infer()
+        s2 = e.infer()  # second call: nothing new
+        assert s2.facts_inferred == 0
+        assert s1.facts_inferred > 0
+
+
+def test_join_tests_def9():
+    e = HiperfactEngine(EngineConfig.query1())
+    from repro.core.facts import ValueType
+    facts = [Fact("AgeClass", "kid", "minAge", 0, ValueType.UINT32),
+             Fact("AgeClass", "adult", "minAge", 18, ValueType.UINT32),
+             Fact("Person", "p1", "age", 7, ValueType.UINT32),
+             Fact("Person", "p2", "age", 30, ValueType.UINT32)]
+    e.insert_facts(facts)
+    rows = e.query([
+        cond("AgeClass", "?ac", "minAge", "?m", ValueType.UINT32),
+        cond("Person", "?p", "age", "?a", ValueType.UINT32,
+             tests=[("?a", ">=", "?m")]),
+    ])
+    got = {(r["ac"], r["p"]) for r in rows}
+    assert got == {("kid", "p1"), ("kid", "p2"), ("adult", "p2")}
+
+
+def test_delete_action():
+    e = HiperfactEngine(EngineConfig.infer1())
+    e.insert_facts([Fact("T", "a", "flag", "on"),
+                    Fact("T", "b", "flag", "off")])
+    e.add_rule(Rule("del-off", (cond("T", "?x", "flag", "off"),),
+                    (DeleteAction("T", term("?x"), "flag", "off"),)))
+    e.infer()
+    assert query_set(e, [cond("T", "?x", "flag", "off")]) == set()
+    assert len(query_set(e, [cond("T", "?x", "flag", "on")])) == 1
+
+
+def test_lazy_rule_skipping():
+    """Defs. 10/11: derivation rules with no query below them are skipped."""
+    rules = [
+        Rule("derive-used", (cond("A", "?x", "p", "?y"),),
+             (AddAction("B", term("?x"), "q", term("?y")),)),
+        Rule("derive-unused", (cond("A", "?x", "p", "?y"),),
+             (AddAction("C", term("?x"), "r", term("?y")),)),
+        Rule("query-b", (cond("B", "?x", "q", "?y"),)),  # QUERY node
+    ]
+    e = HiperfactEngine(EngineConfig(lazy=True))
+    e.add_rules(rules)
+    e.insert_facts([Fact("A", "a1", "p", "v1")])
+    stats = e.infer()
+    assert stats.rules_skipped_inactive > 0
+    assert query_set(e, [cond("B", "?x", "q", "?y")]) \
+        == {(("x", "a1"), ("y", "v1"))}
+    # C was never derived (lazy)
+    assert query_set(e, [cond("C", "?x", "r", "?y")]) == set()
+
+
+def test_incremental_monotonic_inference():
+    """Interactive exploration: inserting more facts later converges to the
+    same closure as inserting everything upfront."""
+    all_facts = kg_facts()
+    e1 = HiperfactEngine(EngineConfig.infer1())
+    e1.add_rules(rdfs_plus_rules())
+    e1.insert_facts(all_facts)
+    e1.infer()
+
+    e2 = HiperfactEngine(EngineConfig.infer1())
+    e2.add_rules(rdfs_plus_rules())
+    e2.insert_facts(all_facts[:5])
+    e2.infer()
+    e2.insert_facts(all_facts[5:])
+    e2.infer()
+
+    q = [cond("Data", "?x", "type", "?t")]
+    assert query_set(e1, q) == query_set(e2, q)
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+
+
+@st.composite
+def random_kg(draw):
+    n_ent = draw(st.integers(2, 8))
+    n_cls = draw(st.integers(2, 5))
+    ents = [f"e{i}" for i in range(n_ent)]
+    classes = [f"c{i}" for i in range(n_cls)]
+    facts = []
+    for i in range(n_cls - 1):
+        if draw(st.booleans()):
+            facts.append(Fact("Schema", classes[i], "subClassOf",
+                              classes[i + 1]))
+    for e in ents:
+        facts.append(Fact("Data", e, "type",
+                          classes[draw(st.integers(0, n_cls - 1))]))
+    n_edges = draw(st.integers(0, 10))
+    for _ in range(n_edges):
+        a = ents[draw(st.integers(0, n_ent - 1))]
+        b = ents[draw(st.integers(0, n_ent - 1))]
+        facts.append(Fact("Data", a, "linksTo", b))
+    if draw(st.booleans()):
+        facts.append(Fact("Schema", "linksTo", "characteristic",
+                          "transitive"))
+    return facts
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_kg(), st.sampled_from(range(len(CONFIGS))))
+def test_property_engine_equals_rete(facts, cfg_idx):
+    rules = rdfs_plus_rules()
+    e = HiperfactEngine(CONFIGS[cfg_idx])
+    e.add_rules(rules)
+    e.insert_facts(facts)
+    e.infer()
+
+    r = ReteEngine()
+    for rr in rules:
+        r.add_rule(rr)
+    r.insert(facts)
+    r.infer()
+
+    for q in ([cond("Data", "?x", "type", "?t")],
+              [cond("Data", "?a", "linksTo", "?b")]):
+        got = query_set(e, q)
+        want = {tuple(sorted(m.items())) for m in r.query(q)}
+        assert got == want

@@ -1,0 +1,87 @@
+"""Paper §5 future-work extensions: rank-N query cache + compression."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, Fact, HiperfactEngine
+from repro.core.compress import (CompressedBindings, decode_column,
+                                 encode_column, rle_count, rle_equals)
+from repro.core.conditions import cond
+from repro.core.rulesets import rdfs_plus_rules
+
+
+# -- compression ---------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(-2**40, 2**40), max_size=60))
+def test_codec_roundtrip(xs):
+    a = np.asarray(xs, np.int64)
+    c = encode_column(a)
+    np.testing.assert_array_equal(decode_column(c), a)
+
+
+def test_codec_choices():
+    runs = np.repeat(np.asarray([5, 9, 5], np.int64), 500)
+    assert encode_column(runs).codec == "rle"
+    sorted_ids = np.arange(0, 10_000, 1, np.int64) + 2**40
+    assert encode_column(sorted_ids).codec == "delta"
+    rnd = np.random.RandomState(0).randint(-2**60, 2**60, 100)
+    assert encode_column(rnd).codec == "raw"
+
+
+def test_rle_direct_ops():
+    a = np.repeat(np.asarray([3, 7, 3, 9], np.int64), [4, 2, 3, 1])
+    c = encode_column(a)
+    assert c.codec == "rle"
+    np.testing.assert_array_equal(rle_equals(c, 3), a == 3)
+    assert rle_count(c, 3) == 7
+
+
+def test_compressed_bindings_smaller_on_join_output():
+    # join outputs: key column has runs, row ids near-sorted
+    key = np.repeat(np.arange(100, dtype=np.int64), 50)
+    rid = np.arange(5000, dtype=np.int64) + 2**40  # wide ids: delta wins
+    cb = CompressedBindings({"k": key, "r": rid})
+    assert cb.nbytes() < (key.nbytes + rid.nbytes) / 3
+    np.testing.assert_array_equal(cb.col("k"), key)
+    np.testing.assert_array_equal(cb.col("r"), rid)
+    assert cb.codecs() == {"k": "rle", "r": "delta"}
+
+
+# -- rank-N query cache -------------------------------------------------------
+
+
+def _engine(query_cache: bool):
+    e = HiperfactEngine(EngineConfig(query_cache=query_cache))
+    e.add_rules(rdfs_plus_rules())
+    e.insert_facts([
+        Fact("Schema", "A", "subClassOf", "B"),
+        Fact("Schema", "B", "subClassOf", "C"),
+        Fact("Data", "x", "type", "A"),
+        Fact("Data", "y", "type", "B"),
+    ])
+    e.infer()
+    return e
+
+
+def test_query_cache_correct_and_hits():
+    e0 = _engine(False)
+    e1 = _engine(True)
+    q = [cond("Data", "x", "type", "?t")]   # rank-2 condition
+    want = sorted(r["t"] for r in e0.query(q))
+    for _ in range(4):
+        got = sorted(r["t"] for r in e1.query(q))
+        assert got == want
+    st = e1.query_cache.stats()
+    assert st["hits"] >= 3
+
+
+def test_query_cache_invalidation_on_write():
+    e = _engine(True)
+    q = [cond("Data", "x", "type", "?t")]
+    before = {r["t"] for r in e.query(q)}
+    e.insert_facts([Fact("Data", "x", "type", "Z")])
+    e.infer()
+    after = {r["t"] for r in e.query(q)}
+    assert "Z" in after and after > before  # stale cache would miss Z

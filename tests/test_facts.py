@@ -1,0 +1,73 @@
+"""Fact model: value encoding roundtrips, string dictionary, conditions."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conditions import JoinTest, cond
+from repro.core.facts import (StringDictionary, ValueType, decode_lane_array,
+                              decode_value, encode_lane_array, encode_value)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(allow_nan=False, width=32))
+def test_float_roundtrip(x):
+    s = StringDictionary()
+    lane = encode_value(x, ValueType.FLOAT, s)
+    got = decode_value(lane, ValueType.FLOAT, s)
+    assert got == np.float32(x) or (math.isinf(x))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(allow_nan=False))
+def test_double_roundtrip(x):
+    s = StringDictionary()
+    assert decode_value(encode_value(x, ValueType.DOUBLE, s),
+                        ValueType.DOUBLE, s) == x
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**64 - 1))
+def test_uint64_roundtrip(x):
+    s = StringDictionary()
+    assert decode_value(encode_value(x, ValueType.UINT64, s),
+                        ValueType.UINT64, s) == x
+
+
+def test_string_dictionary_stable_handles():
+    s = StringDictionary()
+    a = s.intern("alpha")
+    b = s.intern("beta")
+    assert s.intern("alpha") == a
+    assert s.lookup_id(b) == "beta"
+    assert len(s) == 2
+    arr = s.intern_many(["beta", "gamma", "alpha"])
+    assert arr.tolist() == [b, 2, a]
+
+
+def test_lane_array_roundtrip():
+    vals = np.asarray([0.5, -1.25, 3e9])
+    lanes = encode_lane_array(vals, ValueType.DOUBLE)
+    np.testing.assert_array_equal(decode_lane_array(lanes, ValueType.DOUBLE),
+                                  vals)
+
+
+def test_condition_rank_and_vars():
+    c = cond("City", "?id", "name", "?x")
+    assert c.rank() == 1
+    assert set(c.variables()) == {"id", "x"}
+    c3 = cond("City", "c1", "name", "NY")
+    assert c3.rank() == 3 and not c3.variables()
+    ct = cond("P", "?p", "age", "?a", ValueType.UINT32,
+              tests=[("?a", ">=", "?m")])
+    assert ct.tests == (JoinTest("a", ">=", "m"),)
+
+
+def test_join_test_float_ordering():
+    """Def. 9 tests compare decoded values, not bit patterns."""
+    t = JoinTest("a", "<", "b")
+    a = encode_lane_array(np.asarray([-1.0, 2.0]), ValueType.DOUBLE)
+    b = encode_lane_array(np.asarray([1.0, 1.0]), ValueType.DOUBLE)
+    np.testing.assert_array_equal(t.apply(a, b, ValueType.DOUBLE),
+                                  [True, False])

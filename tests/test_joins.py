@@ -1,0 +1,74 @@
+"""Join-level structures vs nested-loop oracles (paper §2.3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.joins import (ColumnarBindings, RowBindings, dedup_bindings,
+                              hash_join_pairs, join_bindings,
+                              make_bindings, merge_join_pairs,
+                              semi_join_rows, unique_rows_sorted)
+
+arrays = st.lists(st.integers(-5, 5), min_size=0, max_size=40)
+
+
+def nested_loop(l, r):
+    return sorted((i, j) for i, a in enumerate(l)
+                  for j, b in enumerate(r) if a == b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(arrays, arrays)
+def test_merge_join_vs_nested_loop(l, r):
+    li, ri = merge_join_pairs(np.asarray(l, np.int64), np.asarray(r, np.int64))
+    assert sorted(zip(li.tolist(), ri.tolist())) == nested_loop(l, r)
+
+
+@settings(max_examples=60, deadline=None)
+@given(arrays, arrays)
+def test_hash_join_vs_merge_join(l, r):
+    la = np.asarray(l, np.int64)
+    ra = np.asarray(r, np.int64)
+    mi = sorted(zip(*(x.tolist() for x in merge_join_pairs(la, ra))))
+    hi = sorted(zip(*(x.tolist() for x in hash_join_pairs(la, ra))))
+    assert mi == hi
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays)
+def test_unique_rows_sorted_vs_numpy(xs):
+    a = np.asarray(xs, np.int64)
+    keep = unique_rows_sorted([a]) if len(a) else np.empty(0, np.int64)
+    got = sorted(a[keep].tolist()) if len(a) else []
+    assert got == sorted(np.unique(a).tolist())
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays, arrays)
+def test_semi_join(keys, bound):
+    k = np.asarray(keys, np.int64)
+    b = np.asarray(bound, np.int64)
+    if len(k) == 0:
+        return
+    mask = semi_join_rows(k, b) if len(b) else np.zeros(len(k), bool)
+    want = np.isin(k, b)
+    assert (mask == want).all()
+
+
+def test_cr_rr_layouts_agree():
+    cols = {"x": np.asarray([1, 2, 3, 1]), "y": np.asarray([4, 5, 6, 4])}
+    cr = make_bindings(cols, "CR")
+    rr = make_bindings(cols, "RR")
+    assert isinstance(cr, ColumnarBindings) and isinstance(rr, RowBindings)
+    other = make_bindings({"x": np.asarray([1, 3]),
+                           "z": np.asarray([7, 8])}, "CR")
+    other_rr = make_bindings({"x": np.asarray([1, 3]),
+                              "z": np.asarray([7, 8])}, "RR")
+    jc = join_bindings(cr, other, ["x"], "MJ")
+    jr = join_bindings(rr, other_rr, ["x"], "HJ")
+    got_c = sorted(zip(jc.col("x").tolist(), jc.col("y").tolist(),
+                       jc.col("z").tolist()))
+    got_r = sorted(zip(jr.col("x").tolist(), jr.col("y").tolist(),
+                       jr.col("z").tolist()))
+    assert got_c == got_r == [(1, 4, 7), (1, 4, 7), (3, 6, 8)]
+    dc = dedup_bindings(jc)
+    assert dc.n == 2

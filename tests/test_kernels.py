@@ -1,0 +1,187 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mergejoin.mergejoin import probe_sorted
+from repro.kernels.mergejoin.ops import merge_join_bounded
+from repro.kernels.mergejoin.ref import join_pairs_ref, probe_ref
+from repro.kernels.sortmerge.ops import device_sort, device_sort_kv
+from repro.kernels.sortmerge.ref import sort_kv_ref, sort_ref
+from repro.kernels.ssd.ops import ssd_chunked
+from repro.kernels.ssd.ref import ssd_intra_ref
+from repro.kernels.ssd.ssd import ssd_intra
+from repro.kernels.uniquefilter.ops import unique_sorted_bounded
+from repro.kernels.uniquefilter.uniquefilter import unique_mask_sorted
+
+RNG = np.random.RandomState(42)
+
+
+# -- sortmerge ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [0, 1, 7, 64, 100, 1000, 2048])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int64])
+def test_bitonic_sort_sweep(n, dtype):
+    if n == 0:
+        return
+    x = jnp.asarray(RNG.randint(-1000, 1000, n), dtype)
+    got = device_sort(x, block=64, force_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(sort_ref(x)))
+
+
+@pytest.mark.parametrize("n", [5, 64, 300, 1024])
+def test_bitonic_sort_kv_sweep(n):
+    k = jnp.asarray(RNG.randint(0, 50, n), jnp.int64)
+    v = jnp.arange(n, dtype=jnp.int32)
+    gk, gv = device_sort_kv(k, v, block=64, force_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(gk),
+                                  np.asarray(jnp.sort(k)))
+    # payload consistency: every (key, value) pair must exist in the input
+    pairs = set(zip(np.asarray(gk).tolist(), np.asarray(gv).tolist()))
+    want = set(zip(np.asarray(k).tolist(), np.asarray(v).tolist()))
+    assert pairs == want
+
+
+# -- mergejoin ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(10, 10), (64, 128), (200, 37)])
+def test_probe_sweep(n, m):
+    l = jnp.asarray(RNG.randint(0, 30, n), jnp.int64)
+    r = jnp.sort(jnp.asarray(RNG.randint(0, 30, m), jnp.int64))
+    lo, hi = probe_sorted(l, r, block=64, interpret=True)
+    rl, rh = probe_ref(l, r)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rl))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rh))
+
+
+@pytest.mark.parametrize("n,m", [(20, 20), (100, 50)])
+def test_merge_join_bounded_vs_nested_loop(n, m):
+    l = jnp.asarray(RNG.randint(0, 15, n), jnp.int64)
+    r = jnp.asarray(RNG.randint(0, 15, m), jnp.int64)
+    li, ri, valid, total = merge_join_bounded(l, r, out_cap=4096,
+                                              force_pallas=True,
+                                              interpret=True)
+    got = sorted((int(a), int(b)) for a, b, v in
+                 zip(li, ri, valid) if v)
+    want = sorted(join_pairs_ref(np.asarray(l), np.asarray(r)))
+    assert got == want
+    assert int(total) == len(want)
+
+
+def test_merge_join_overflow_reported():
+    l = jnp.zeros(64, jnp.int64)
+    r = jnp.zeros(64, jnp.int64)   # 4096 pairs, cap 100
+    li, ri, valid, total = merge_join_bounded(l, r, out_cap=100,
+                                              force_pallas=True,
+                                              interpret=True)
+    assert int(total) == 4096 and int(valid.sum()) == 100
+
+
+# -- uniquefilter -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 10, 64, 500])
+def test_unique_mask_sweep(n):
+    x = jnp.sort(jnp.asarray(RNG.randint(0, 20, n), jnp.int64))
+    mask = unique_mask_sorted(x, block=64, interpret=True)
+    ref = jnp.concatenate([jnp.ones((1,), bool), x[1:] != x[:-1]])
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref))
+
+
+def test_unique_sorted_bounded():
+    x = jnp.asarray(RNG.randint(0, 40, 300), jnp.int64)
+    vals, n = unique_sorted_bounded(x, force_pallas=True, interpret=True)
+    want = np.unique(np.asarray(x))
+    assert int(n) == len(want)
+    np.testing.assert_array_equal(np.asarray(vals[: int(n)]), want)
+
+
+# -- flash attention -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 128, 2, 2, 32), (2, 128, 4, 2, 32), (1, 256, 8, 1, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, Hq, Hkv, hd, dtype):
+    q = jnp.asarray(RNG.randn(B, S, Hq, hd), dtype)
+    k = jnp.asarray(RNG.randn(B, S, Hkv, hd), dtype)
+    v = jnp.asarray(RNG.randn(B, S, Hkv, hd), dtype)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_windowed(window):
+    B, S, H, hd = 1, 256, 2, 32
+    q = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_flash_attention_noncausal():
+    B, S, H, hd = 2, 128, 2, 32
+    q = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, bq=64, bk=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# -- ssd -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,nc,Q,nh,hp,N", [
+    (1, 2, 32, 2, 16, 8), (2, 3, 64, 4, 32, 16),
+])
+def test_ssd_intra_sweep(b, nc, Q, nh, hp, N):
+    dlog = -np.abs(RNG.randn(b, nc, Q, nh)) * 0.1
+    cum = jnp.asarray(np.cumsum(dlog, axis=2), jnp.float32)
+    u = jnp.asarray(RNG.randn(b, nc, Q, nh, hp), jnp.float32)
+    B = jnp.asarray(RNG.randn(b, nc, Q, N), jnp.float32)
+    C = jnp.asarray(RNG.randn(b, nc, Q, N), jnp.float32)
+    y, st = ssd_intra(cum, u, B, C, interpret=True)
+    yr, sr = ssd_intra_ref(cum, u, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=1e-4)
+
+
+def test_ssd_chunked_equals_sequential():
+    b, nc, Q, nh, hp, N = 1, 4, 16, 2, 8, 4
+    dlog = -np.abs(RNG.randn(b, nc, Q, nh)) * 0.2
+    cum = jnp.asarray(np.cumsum(dlog, axis=2), jnp.float32)
+    u = jnp.asarray(RNG.randn(b, nc, Q, nh, hp), jnp.float32)
+    Bm = jnp.asarray(RNG.randn(b, nc, Q, N), jnp.float32)
+    Cm = jnp.asarray(RNG.randn(b, nc, Q, N), jnp.float32)
+    y, _ = ssd_chunked(cum, u, Bm, Cm, force_pallas=True, interpret=True)
+    # sequential recurrence
+    S = nc * Q
+    dl = np.diff(np.asarray(cum), axis=2, prepend=0.0).reshape(b, S, nh)
+    dl[:, ::Q, :] = np.asarray(cum)[:, :, 0, :]
+    uf = np.asarray(u).reshape(b, S, nh, hp)
+    Bf = np.asarray(Bm).reshape(b, S, N)
+    Cf = np.asarray(Cm).reshape(b, S, N)
+    h = np.zeros((b, nh, hp, N))
+    ys = np.zeros((b, S, nh, hp))
+    for t in range(S):
+        a = np.exp(dl[:, t])
+        h = a[..., None, None] * h + np.einsum("bhp,bn->bhpn", uf[:, t],
+                                               Bf[:, t])
+        ys[:, t] = np.einsum("bn,bhpn->bhp", Cf[:, t], h)
+    np.testing.assert_allclose(
+        np.asarray(y).reshape(b, S, nh, hp), ys, atol=1e-4)

@@ -1,0 +1,152 @@
+"""Per-arch smoke tests (brief requirement): reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs; plus
+decode ≡ full-forward consistency and gradient health."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build_model, init_params
+from repro.models.model_api import text_len
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=64):
+    St = text_len(cfg, S)
+    batch = {"tokens": jnp.clip(jax.random.randint(
+        jax.random.PRNGKey(1), (B, St), 0, cfg.vocab), 0).astype(jnp.int32),
+        "labels": jax.random.randint(
+            jax.random.PRNGKey(2), (B, St), 0, cfg.vocab).astype(jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_patches, cfg.d_model)) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.enc_seq, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_params(model.spec(), RNG)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert int(metrics["tokens"]) == batch["labels"].size
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch):
+    from repro.train import OptimizerConfig, build_train_step, \
+        init_train_state
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_params(model.spec(), RNG)
+    state = init_train_state(params)
+    step = jax.jit(build_train_step(model, OptimizerConfig(lr=1e-3)))
+    batch = make_batch(cfg)
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(state2["params"])))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_params(model.spec(), RNG)
+    B, S, max_len = 2, 32, 48
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab).astype(jnp.int32)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patches"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_patches, cfg.d_model)) * 0.02
+    if cfg.family == "encdec":
+        kw["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.enc_seq, cfg.d_model)) * 0.02
+
+    if cfg.family == "encdec":
+        enc = model.encode(params, kw["frames"])
+        h_ref, _ = model._decoder_hidden(params, toks, enc)
+        ref = h_ref[:, S, :] @ model.head_w(params).astype(h_ref.dtype)
+    else:
+        h_ref, _, _ = model.hidden(params, toks, kw.get("patches"))
+        pos = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+        ref = h_ref[:, pos, :] @ model.head_w(params).astype(h_ref.dtype)
+    _, cache = jax.jit(
+        lambda p, t: model.prefill_fn(p, t, max_len, **kw))(params,
+                                                            toks[:, :S])
+    logits, cache2 = jax.jit(model.decode_fn)(params, toks[:, S], cache)
+    err = float(jnp.max(jnp.abs(logits - ref)))
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert err < 3e-2 * max(1.0, scale), (arch, err, scale)
+    extra = cfg.n_patches if cfg.family == "vlm" else 0
+    assert int(cache2["lens"][0]) == S + 1 + extra
+
+
+def test_param_count_analytic_close():
+    """Analytic 6ND param counts track the real spec within 5%."""
+    from repro.models.params import param_count
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        real = param_count(model.spec())
+        analytic = cfg.param_count()
+        assert abs(real - analytic) / real < 0.05, \
+            (arch, real, analytic)
+
+
+def test_chunked_attention_matches_full():
+    from repro.models.layers import chunked_attention, full_attention
+    rng = np.random.RandomState(0)
+    B, S, Hq, Hkv, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.randn(B, S, Hq, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, Hkv, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Hkv, hd), jnp.float32)
+    full = full_attention(q, k, v, causal=True)
+    for impl in ("triangular", "masked"):
+        got = chunked_attention(q, k, v, causal=True, q_chunk=32,
+                                kv_chunk=32, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=1e-5, err_msg=impl)
+    # windowed
+    fullw = full_attention(q, k, v, causal=True, window=48)
+    gotw = chunked_attention(q, k, v, causal=True, window=48, q_chunk=32,
+                             kv_chunk=32, impl="triangular")
+    np.testing.assert_allclose(np.asarray(gotw), np.asarray(fullw),
+                               atol=1e-5)
+
+
+def test_chunked_attention_grad_matches_full():
+    from repro.models.layers import chunked_attention, full_attention
+    rng = np.random.RandomState(1)
+    B, S, H, hd = 1, 64, 2, 8
+    q = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+
+    def loss_full(q, k, v):
+        return full_attention(q, k, v, causal=True).sum()
+
+    def loss_chunk(q, k, v):
+        return chunked_attention(q, k, v, causal=True, q_chunk=16,
+                                 kv_chunk=16).sum()
+
+    gf = jax.grad(loss_full, argnums=(0, 1, 2))(q, k, v)
+    gc = jax.grad(loss_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

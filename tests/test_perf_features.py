@@ -1,0 +1,101 @@
+"""§Perf feature correctness: shard_map MoE ≡ GSPMD MoE, merge-based
+closure store, TP vocab/head padding."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributed import SENTINEL, compact_masked, merge_sorted
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-100, 100), max_size=40),
+       st.lists(st.integers(-100, 100), max_size=40))
+def test_merge_sorted_property(a, b):
+    aj = jnp.sort(jnp.asarray(a + [0], jnp.int64))
+    bj = jnp.sort(jnp.asarray(b + [0], jnp.int64))
+    got = np.asarray(merge_sorted(aj, bj))
+    want = np.sort(np.concatenate([np.asarray(aj), np.asarray(bj)]),
+                   kind="stable")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_compact_masked():
+    vals = jnp.asarray([1, 3, 5, 7, 9], jnp.int64)
+    mask = jnp.asarray([True, False, True, True, False])
+    out = np.asarray(compact_masked(vals, mask, 5, SENTINEL))
+    np.testing.assert_array_equal(out[:3], [1, 5, 7])
+    assert (out[3:] == SENTINEL).all()
+
+
+def test_moe_shard_map_equals_gspmd(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, dataclasses
+from repro.configs import get_config
+from repro.distributed.sharding import activation_hints
+from repro.models.moe import _moe_gspmd, _moe_shard_map, moe_spec
+from repro.models.params import init_params
+from repro.models.layers import NO_HINTS
+
+cfg = get_config('moonshot-v1-16b-a3b', smoke=True)
+cfg = dataclasses.replace(cfg, n_experts=8, top_k=2, capacity_factor=8.0)
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+hints = activation_hints(cfg, mesh, 4, 'train')
+p = init_params(moe_spec(cfg), jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model),
+                      jnp.float32) * 0.5
+y0, a0 = jax.jit(lambda p, x: _moe_gspmd(p, x, cfg, NO_HINTS))(p, x)
+y1, a1 = jax.jit(lambda p, x: _moe_shard_map(p, x, cfg, hints))(p, x)
+err = float(jnp.max(jnp.abs(y0 - y1)))
+assert err < 1e-4, err
+assert abs(float(a0) - float(a1)) < 1e-5
+g = jax.grad(lambda p: _moe_shard_map(p, x, cfg, hints)[0].sum())(p)
+assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+print('shard_map MoE == GSPMD MoE, err', err)
+""")
+
+
+def test_vocab_padding_masks_padded_ids():
+    from repro.configs import get_config
+    from repro.models import build_model, init_params
+    cfg = dataclasses.replace(get_config("yi-6b", smoke=True), vocab_pad=16)
+    model = build_model(cfg)
+    params = init_params(model.spec(), jax.random.PRNGKey(0))
+    assert params["embed"].shape[0] == cfg.vocab + 16
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab).astype(jnp.int32),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                          cfg.vocab).astype(jnp.int32)}
+    loss, _ = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))
+    # decode logits are sliced to the real vocab
+    _, cache = jax.jit(lambda p, t: model.prefill_fn(p, t, 48))(
+        params, batch["tokens"])
+    logits, _ = jax.jit(model.decode_fn)(params, batch["tokens"][:, 0],
+                                         cache)
+    assert logits.shape[-1] == cfg.vocab
+
+
+def test_padded_heads_decode_consistency():
+    """qwen2's pad_q_heads=4 path: decode ≡ forward (padded heads are real
+    heads; grouped decode math must handle the padded count)."""
+    from repro.configs import get_config
+    from repro.models import build_model, init_params
+    cfg = dataclasses.replace(get_config("qwen2-7b", smoke=True),
+                              pad_q_heads=4)  # 4 -> 8 heads, kv 2
+    model = build_model(cfg)
+    params = init_params(model.spec(), jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab).astype(jnp.int32)
+    h_ref, _, _ = model.hidden(params, toks)
+    ref = h_ref[:, S, :] @ model.head_w(params).astype(h_ref.dtype)
+    _, cache = jax.jit(lambda p, t: model.prefill_fn(p, t, 32))(
+        params, toks[:, :S])
+    logits, _ = jax.jit(model.decode_fn)(params, toks[:, S], cache)
+    err = float(jnp.max(jnp.abs(logits - ref)))
+    assert err < 3e-2 * max(1.0, float(jnp.max(jnp.abs(ref)))), err

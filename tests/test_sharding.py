@@ -1,0 +1,84 @@
+"""Sharding rules: divisibility fallbacks + activation hints (no devices)."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.distributed.sharding import DEFAULT_RULES, spec_for  # noqa: E402
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape mapping (spec_for needs both)."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_fsdp_and_tp_mapping():
+    # [vocab, embed] with divisible dims: vocab->model, embed->fsdp
+    s = spec_for((152064, 3584), ("vocab", "embed"), SINGLE)
+    assert s == P("model", ("data",))
+    s = spec_for((152064, 3584), ("vocab", "embed"), MULTI)
+    assert s == P("model", ("pod", "data"))
+
+
+def test_divisibility_fallback():
+    # whisper vocab 51865 does not divide 16 -> replicated
+    s = spec_for((51865, 384), ("vocab", "embed"), SINGLE)
+    assert s == P(None, ("data",))
+    # batch of 1 (long_500k) -> replicated
+    s = spec_for((1, 128), ("batch", None), SINGLE)
+    assert s == P()
+
+
+def test_axis_reuse_guard():
+    # MoE weight [E, d, ff]: E takes model; ff cannot reuse it
+    s = spec_for((64, 2048, 1408), ("experts", "embed", "mlp"), SINGLE)
+    assert s == P("model", ("data",))
+
+
+def test_layers_never_sharded():
+    s = spec_for((48, 2048, 128), ("layers", "embed", None), SINGLE)
+    assert s == P(None, ("data",))
+
+
+def test_activation_hints_head_tp_switch(subproc):
+    out = subproc("""
+import jax
+from repro.configs import get_config
+from repro.distributed.sharding import activation_hints
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+# mistral: 96 heads % 4 == 0 -> head TP
+h = activation_hints(get_config('mistral-large-123b'), mesh, 8, 'train')
+print('mistral', h.specs['attn_q'])
+# qwen2: 28 q-heads padded to 32 (pad_q_heads=4) -> head TP on 4 AND 8
+h = activation_hints(get_config('qwen2-7b'), mesh, 8, 'train')
+print('qwen2-4way', h.specs['attn_q'])
+mesh8 = jax.make_mesh((1, 8), ('data', 'model'))
+h = activation_hints(get_config('qwen2-7b'), mesh8, 8, 'train')
+print('qwen2-8way', h.specs['attn_q'])
+# whisper: 6 heads, unpadded -> falls back to replicated attention core
+h = activation_hints(get_config('whisper-tiny'), mesh8, 8, 'train')
+print('whisper-8way', h.specs['attn_q'])
+""", n_devices=8)
+    lines = dict(l.split(" ", 1) for l in out.strip().splitlines())
+    assert "'model'" in lines["mistral"]
+    assert "'model'" in lines["qwen2-4way"]
+    assert "'model'" in lines["qwen2-8way"]       # padded 32 % 8 == 0
+    assert "'model'" not in lines["whisper-8way"]  # 6 % 8 != 0 -> replicated
+
+
+def test_all_arch_embeddings_shardable_somewhere():
+    """Every arch's d_model divides the 32-way multi-pod FSDP domain."""
+    from repro.configs import ARCH_NAMES
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        assert cfg.d_model % 32 == 0, a

@@ -1,0 +1,82 @@
+"""Rank-1 index backends: all four must agree (paper §2.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.store import (Component, FactStore, INDEX_BACKENDS,
+                              TypedFactTable)
+
+BACKENDS = list(INDEX_BACKENDS)
+
+
+def fill(table: TypedFactTable, rows, dedup=True):
+    ids, attrs, vals = (np.asarray(x) for x in zip(*rows))
+    return table.insert(ids.astype(np.int32), attrs.astype(np.int32),
+                        vals.astype(np.int64),
+                        np.zeros(len(ids), np.int8), dedup=dedup)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lookup_count_exact(backend):
+    t = TypedFactTable("T", backend)
+    rows = [(1, 10, 100), (1, 11, 101), (2, 10, 102), (3, 12, 100)]
+    fill(t, rows)
+    for comp, value, want in [
+        (Component.ID, 1, {0, 1}), (Component.ATTR, 10, {0, 2}),
+        (Component.VAL, 100, {0, 3}), (Component.ID, 9, set()),
+    ]:
+        got = set(t.index.lookup(t, comp, value).tolist())
+        assert got == want, (backend, comp, value)
+        # count is exact for AI/LPIM/LPID; an upper bound for HI
+        cnt = t.index.count(t, comp, value)
+        assert cnt >= len(want)
+        if backend != "HI":
+            assert cnt == len(want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_incremental_append(backend):
+    t = TypedFactTable("T", backend)
+    fill(t, [(i, i % 3, i) for i in range(50)])
+    fill(t, [(i, i % 3, i + 100) for i in range(50)])  # tail appends
+    got = set(t.index.lookup(t, Component.ATTR, 1).tolist())
+    want = {i for i in range(100) if (i % 50) % 3 == 1}
+    assert got == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(0, 5)), min_size=0, max_size=60))
+def test_property_backends_agree(rows):
+    tables = {}
+    for b in BACKENDS:
+        t = TypedFactTable("T", b)
+        if rows:
+            fill(t, rows, dedup=False)
+        tables[b] = t
+    for comp in Component:
+        for v in range(6):
+            ref = set(tables["AI"].index.lookup(
+                tables["AI"], comp, v).tolist()) if rows else set()
+            for b in BACKENDS[1:]:
+                got = set(tables[b].index.lookup(
+                    tables[b], comp, v).tolist()) if rows else set()
+                assert got == ref, (b, comp, v)
+
+
+def test_tombstone_delete():
+    t = TypedFactTable("T", "AI")
+    fill(t, [(1, 1, 1), (2, 2, 2), (3, 3, 3)])
+    t.delete_rows(np.asarray([1]))
+    rows = t.filter_alive(t.index.lookup(t, Component.ID, 2))
+    assert rows.tolist() == []
+    assert t.all_rows().tolist() == [0, 2]
+
+
+def test_store_memory_accounting():
+    s = FactStore("AI")
+    t = s.table("T")
+    fill(t, [(i, i, i) for i in range(100)])
+    assert s.num_facts() == 100
+    assert s.memory_bytes() > 0
