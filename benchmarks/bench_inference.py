@@ -61,7 +61,8 @@ def run_rete(facts, queries) -> dict:
 
 
 def bench(scale: int = 1, wordnet_n: int = 1500, include_rete: bool = True,
-          runs: int = 1):
+          runs: int = 1, backend: str = "numpy"):
+    import dataclasses
     datasets = {
         f"lubm_like(x{scale})": (lubm_like(scale), LUBM_QUERIES),
         f"wordnet_like({wordnet_n})": (wordnet_like(wordnet_n),
@@ -69,7 +70,8 @@ def bench(scale: int = 1, wordnet_n: int = 1500, include_rete: bool = True,
     }
     rows = []
     for dname, (facts, queries) in datasets.items():
-        for ename, cfg in ENGINE_CONFIGS.items():
+        for ename, base_cfg in ENGINE_CONFIGS.items():
+            cfg = dataclasses.replace(base_cfg, backend=backend)
             best = None
             for _ in range(runs):
                 r = run_hiperfact(cfg, facts, queries)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import get_backend
 from repro.kernels.mergejoin.ops import merge_join_bounded
 from repro.kernels.sortmerge.ops import device_sort
 from repro.kernels.uniquefilter.ops import unique_sorted_bounded
@@ -56,9 +57,37 @@ def bench(n: int = 1 << 16):
     return rows
 
 
+def bench_backends(n: int = 1 << 15, names=("numpy", "jax")):
+    """Ops-layer comparison: the same primitives the engine hot path issues,
+    per execution backend (acceptance: report both backends)."""
+    rng = np.random.RandomState(1)
+    keys = rng.randint(0, 1 << 30, n).astype(np.int64)
+    vals = np.arange(n, dtype=np.int64)
+    l = rng.randint(0, n // 4, n // 2).astype(np.int64)
+    r = rng.randint(0, n // 4, n // 2).astype(np.int64)
+    bound = rng.randint(0, n // 4, n // 8).astype(np.int64)
+    cols = [rng.randint(0, 64, n).astype(np.int64) for _ in range(3)]
+    rows = []
+    for name in names:
+        ops = get_backend(name)
+        rows.append((f"backend[{name}]_sort_kv",
+                     timeit(lambda: ops.sort_kv(keys, vals))))
+        rows.append((f"backend[{name}]_join_pairs",
+                     timeit(lambda: ops.join_pairs(l, r))))
+        rows.append((f"backend[{name}]_hash_join",
+                     timeit(lambda: ops.hash_join_pairs(l, r))))
+        rows.append((f"backend[{name}]_semi_join",
+                     timeit(lambda: ops.semi_join(l, bound))))
+        rows.append((f"backend[{name}]_dedup_rows",
+                     timeit(lambda: ops.dedup_rows(cols))))
+    return rows
+
+
 def main():
     print("kernel,seconds_per_call")
     for name, s in bench():
+        print(f"{name},{s:.5f}")
+    for name, s in bench_backends():
         print(f"{name},{s:.5f}")
 
 

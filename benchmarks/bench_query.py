@@ -46,7 +46,8 @@ def bench_one(cfg: EngineConfig, facts, queries, repeats: int = 3):
     return {"load_s": load_s, "query_s": sum(times) / len(times)}
 
 
-def bench(mondial_kw=None, dblp_kw=None):
+def bench(mondial_kw=None, dblp_kw=None, backend: str = "numpy"):
+    import dataclasses
     datasets = {
         "mondial_like": (mondial_like(**(mondial_kw or {})),
                          mondial_queries()),
@@ -55,6 +56,7 @@ def bench(mondial_kw=None, dblp_kw=None):
     rows = []
     for dname, (facts, queries) in datasets.items():
         for label, cfg in config_matrix():
+            cfg = dataclasses.replace(cfg, backend=backend)
             rows.append((dname, label, bench_one(cfg, facts, queries)))
     return rows
 

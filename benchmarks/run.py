@@ -20,24 +20,29 @@ def section(title: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax", "jax-pallas", "jax-interpret"],
+                    help="execution backend for the engine hot path "
+                         "(see src/repro/backend/README.md)")
     args = ap.parse_args()
 
     t_start = time.perf_counter()
 
-    section("Table 2 analog: inference (load/infer/query per engine)")
+    section(f"Table 2 analog: inference (backend={args.backend})")
     from benchmarks import bench_inference
     scale = 8 if args.full else 1
-    for dname, ename, r in bench_inference.bench(scale=scale):
+    for dname, ename, r in bench_inference.bench(scale=scale,
+                                                 backend=args.backend):
         print(f"{dname},{ename},load={r['load_s']:.4f}s,"
               f"infer={r['infer_s']:.4f}s,query={r['query_s']:.4f}s,"
               f"inferred={r['inferred']}")
 
-    section("Table 4 analog: query config matrix")
+    section(f"Table 4 analog: query config matrix (backend={args.backend})")
     from benchmarks import bench_query
     kw = {} if not args.full else {
         "mondial_kw": {"n_countries": 60, "cities_per": 120},
         "dblp_kw": {"n_papers": 20000, "n_authors": 3000}}
-    for dname, label, r in bench_query.bench(**kw):
+    for dname, label, r in bench_query.bench(backend=args.backend, **kw):
         print(f"{dname},{label},load={r['load_s']:.4f}s,"
               f"query={r['query_s']:.6f}s")
 
@@ -60,6 +65,11 @@ def main() -> None:
     section("Fork-join kernel micro (portable XLA paths)")
     from benchmarks import bench_kernels
     for name, s in bench_kernels.bench():
+        print(f"{name},{s:.5f}s")
+    # Ops-layer comparison: numpy vs device backend on the same primitives
+    for name, s in bench_kernels.bench_backends(
+            names=("numpy", args.backend if args.backend != "numpy"
+                   else "jax")):
         print(f"{name},{s:.5f}s")
 
     section("Extensions (paper §5): rank-N query cache + CR compression")

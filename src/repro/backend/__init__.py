@@ -1,0 +1,47 @@
+"""Execution backends for the inference hot path (see backend/README.md).
+
+``get_backend(name)`` resolves an ``EngineConfig.backend`` value to a
+shared ``Ops`` instance:
+
+* ``numpy``         — host twins (default; always available).
+* ``jax``           — device path through ``kernels/``: Pallas on TPU,
+                      portable jitted XLA lowering elsewhere.
+* ``jax-pallas``    — force the compiled Pallas kernels (TPU).
+* ``jax-interpret`` — force the Pallas kernels through the interpreter
+                      (runs the real kernel code on CPU; tests/parity).
+
+Instances are cached: the jit caches and sentinel-guard state they carry
+are per-process resources, not per-engine ones.
+"""
+
+from __future__ import annotations
+
+from repro.backend.base import Ops, splitmix64
+from repro.backend.numpy_ops import NumpyOps
+
+BACKENDS = ("numpy", "jax", "jax-pallas", "jax-interpret")
+
+_CACHE: dict[str, Ops] = {}
+
+
+def get_backend(name: str = "numpy") -> Ops:
+    ops = _CACHE.get(name)
+    if ops is None:
+        if name == "numpy":
+            ops = NumpyOps()
+        elif name in ("jax", "jax-pallas", "jax-interpret"):
+            from repro.backend.jax_ops import JaxOps
+            mode = {"jax": "auto", "jax-pallas": "pallas",
+                    "jax-interpret": "interpret"}[name]
+            # interpret mode uses small blocks: it exists to exercise the
+            # kernel code path on CPU, not to win benchmarks
+            kw = {"block": 256} if mode == "interpret" else {}
+            ops = JaxOps(mode=mode, **kw)
+        else:
+            raise ValueError(
+                f"unknown backend {name!r}; expected one of {BACKENDS}")
+        _CACHE[name] = ops
+    return ops
+
+
+__all__ = ["BACKENDS", "NumpyOps", "Ops", "get_backend", "splitmix64"]

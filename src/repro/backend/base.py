@@ -1,0 +1,100 @@
+"""Execution-backend interface: the bulk primitives of the inference hot path.
+
+The paper's thesis (§2.3-§2.4) is that Rete-class inference is won or lost
+on a handful of bulk primitives — fork-join sort, sorted probe/merge join,
+and the SU unique filter.  ``Ops`` names exactly those primitives so the
+engine can dispatch them to interchangeable implementations:
+
+* ``NumpyOps`` — the host twins (the original ``core/joins.py`` code).
+* ``JaxOps``   — the device path built on the ``kernels/`` Pallas ops
+  (bounded-shape, jit-cached, interpret-mode fallback on CPU).
+
+Everything speaks numpy arrays at the boundary; backends own any padding,
+device transfer, and jit-cache management internally.  Derived algorithms
+that are pure composition (hash join = mix hash + merge join + verify) live
+here once and are shared by all backends.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized 64-bit mix hash (HI bucketing and HJ joins)."""
+    z = x.astype(np.uint64, copy=True)
+    z += np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+class Ops(abc.ABC):
+    """The five bulk primitives of the inference/query hot path."""
+
+    name: str = "?"
+
+    # -- primitives -------------------------------------------------------
+    @abc.abstractmethod
+    def sort_kv(self, keys: np.ndarray, vals: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray]:
+        """Sort ``keys`` ascending, carrying ``vals`` (fork-join instance 4:
+        the id+object sort used by every rank-1 index build)."""
+
+    @abc.abstractmethod
+    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Sort-merge equi-join: all (li, ri) with lkeys[li] == rkeys[ri].
+        Pair order is unspecified; the pair *set* is exact."""
+
+    @abc.abstractmethod
+    def unique_mask(self, sorted_keys: np.ndarray) -> np.ndarray:
+        """First-of-run boolean mask over an already-sorted array (the SU
+        neighbor-compare)."""
+
+    @abc.abstractmethod
+    def semi_join(self, keys: np.ndarray, bound_values: np.ndarray
+                  ) -> np.ndarray:
+        """Mask of ``keys`` that appear in ``bound_values`` (AR-mode RNL
+        restriction).  Empty ``bound_values`` -> all-False."""
+
+    @abc.abstractmethod
+    def dedup_rows(self, cols: list[np.ndarray]) -> np.ndarray:
+        """SU unique filter: ascending indices selecting one representative
+        of each distinct row of ``zip(*cols)``."""
+
+    # -- shared derived algorithms ---------------------------------------
+    def sort_perm(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(sorted keys, permutation) — the index-build form of the KV
+        sort.  Default: carry an arange payload through ``sort_kv``;
+        backends may override with a cheaper native path."""
+        keys = np.asarray(keys)
+        return self.sort_kv(keys.astype(np.int64, copy=False),
+                            np.arange(len(keys), dtype=np.int64))
+
+    def hash_join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Radix-hash join: bucketize by a 64-bit mix, probe the hashed
+        domain with the merge join, verify exact equality on candidates."""
+        lkeys = np.asarray(lkeys, np.int64)
+        rkeys = np.asarray(rkeys, np.int64)
+        if len(lkeys) == 0 or len(rkeys) == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        lh = splitmix64(lkeys.view(np.uint64)).view(np.int64)
+        rh = splitmix64(rkeys.view(np.uint64)).view(np.int64)
+        li, ri = self.join_pairs(lh, rh)
+        if len(li) == 0:
+            return li, ri
+        ok = lkeys[li] == rkeys[ri]
+        return li[ok], ri[ok]
+
+    def join(self, lkeys: np.ndarray, rkeys: np.ndarray, algo: str = "MJ"
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """Dispatch on the paper's join axis: MJ (sort-merge) | HJ (hash)."""
+        if algo == "HJ":
+            return self.hash_join_pairs(lkeys, rkeys)
+        if algo == "MJ":
+            return self.join_pairs(lkeys, rkeys)
+        raise ValueError(f"unknown join algo: {algo!r}")

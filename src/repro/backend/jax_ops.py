@@ -1,0 +1,229 @@
+"""Device backend: the inference primitives routed through ``kernels/``.
+
+``JaxOps`` maps each ``Ops`` primitive onto the repo's Pallas fork-join
+kernels via their jit'd wrappers:
+
+* ``sort_kv``     -> ``kernels/sortmerge`` (bitonic fork-join KV sort)
+* ``join_pairs``  -> ``kernels/mergejoin`` (sorted probe + bounded expand)
+* ``unique_mask`` -> ``kernels/uniquefilter`` (neighbor-compare kernel)
+* ``semi_join``   -> sortmerge sort + sorted probe
+* ``dedup_rows``  -> KV sort + unique mask (1 column); stable lexsort +
+  neighbor compare as a jitted XLA composite for multi-column rows — the
+  bitonic network is not stable, so the paper's chained-sort lexsort cannot
+  run through it (documented trade-off, see backend/README.md).
+
+Shape discipline: inputs are padded to power-of-two buckets with sentinel
+keys (+inf-like ``int64 max`` at the tail for sorts, ``int64 min`` on the
+join's right side) so the jit cache stays logarithmic in observed sizes
+instead of recompiling per call.  Inputs whose *real* keys collide with a
+sentinel take the exact host path — a correctness guard, not a fast path.
+
+Modes: ``auto`` lets the wrappers pick Pallas on TPU and the portable XLA
+lowering elsewhere; ``pallas`` forces the compiled Pallas path (TPU);
+``interpret`` forces the Pallas kernels through the interpreter so the
+full kernel code path runs on CPU containers (tests / parity checks).
+
+All device work runs under ``jax.experimental.enable_x64`` — fact values
+and packed (id, attr) keys are genuine 64-bit — and behind a lock, because
+the engine's PF/PW thread pools may issue primitives concurrently.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+
+import numpy as np
+
+from repro.backend.base import Ops
+from repro.backend.numpy_ops import NumpyOps
+
+INT64_MAX = np.iinfo(np.int64).max
+INT64_MIN = np.iinfo(np.int64).min
+
+
+# --------------------------------------------------------------------------
+# jitted XLA composites (module level so the jit cache is shared across
+# JaxOps instances; shapes are bucketed by the caller)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted():
+    """Lazy import + jit so importing this module without using it stays
+    cheap and numpy-only callers never touch jax."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.sortmerge.ops import device_sort, device_sort_kv
+
+    @functools.partial(jax.jit, static_argnames=())
+    def neighbor_mask(x):
+        return jnp.concatenate([jnp.ones((1,), bool), x[1:] != x[:-1]])
+
+    @functools.partial(
+        jax.jit, static_argnames=("block", "force_pallas", "interpret"))
+    def semi_join(keys, bound, block, force_pallas, interpret):
+        s = device_sort(bound, block=block, force_pallas=force_pallas,
+                        interpret=interpret)
+        pos = jnp.clip(jnp.searchsorted(s, keys, side="left"),
+                       0, s.shape[0] - 1)
+        return s[pos] == keys
+
+    @functools.partial(jax.jit, static_argnames=())
+    def dedup_rows(cols, n_real):
+        cap = cols[0].shape[0]
+        order = jnp.lexsort(tuple(reversed(cols)))  # stable
+        diff = jnp.zeros(cap, bool).at[0].set(True)
+        for c in cols:
+            cs = c[order]
+            diff = diff.at[1:].set(diff[1:] | (cs[1:] != cs[:-1]))
+        keep = diff & (order < n_real)  # drop the all-sentinel pad run
+        rows = jnp.sort(jnp.where(keep, order, cap))
+        return rows, jnp.sum(keep)
+
+    return {"neighbor_mask": neighbor_mask, "semi_join": semi_join,
+            "dedup_rows": dedup_rows, "device_sort_kv": device_sort_kv}
+
+
+class JaxOps(Ops):
+    """Bounded-shape, jit-cached device implementation of ``Ops``."""
+
+    def __init__(self, mode: str = "auto", block: int = 1024,
+                 min_bucket: int | None = None) -> None:
+        if mode not in ("auto", "pallas", "interpret"):
+            raise ValueError(f"unknown JaxOps mode: {mode!r}")
+        self.mode = mode
+        self.interpret = mode == "interpret"
+        self.force_pallas = mode in ("pallas", "interpret")
+        self.block = block
+        self.min_bucket = min_bucket or block
+        self.name = f"jax[{mode}]"
+        self._host = NumpyOps()  # exact fallback for sentinel collisions
+        self._lock = threading.Lock()
+
+    # -- plumbing ---------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        return max(self.min_bucket, 1 << (max(n, 1) - 1).bit_length())
+
+    def _x64(self):
+        from jax.experimental import enable_x64
+        return enable_x64()
+
+    def _use_pallas(self) -> bool:
+        import jax
+        return self.force_pallas or jax.default_backend() == "tpu"
+
+    @staticmethod
+    def _pad(a: np.ndarray, cap: int, fill: int) -> np.ndarray:
+        out = np.full(cap, fill, np.int64)
+        out[: len(a)] = a
+        return out
+
+    # -- primitives -------------------------------------------------------
+    def sort_kv(self, keys: np.ndarray, vals: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray]:
+        keys = np.asarray(keys, np.int64)
+        vals = np.asarray(vals, np.int64)
+        n = len(keys)
+        if n == 0:
+            return keys.copy(), vals.copy()
+        if keys.max() == INT64_MAX:  # collides with the pad sentinel
+            return self._host.sort_kv(keys, vals)
+        import jax.numpy as jnp
+        cap = self._bucket(n)
+        kp = self._pad(keys, cap, INT64_MAX)
+        vp = self._pad(vals, cap, 0)
+        with self._lock, self._x64():
+            ks, vs = _jitted()["device_sort_kv"](
+                jnp.asarray(kp), jnp.asarray(vp), block=self.block,
+                force_pallas=self.force_pallas, interpret=self.interpret)
+            ks, vs = np.asarray(ks), np.asarray(vs)
+        return ks[:n], vs[:n]
+
+    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        lkeys = np.asarray(lkeys, np.int64)
+        rkeys = np.asarray(rkeys, np.int64)
+        n, m = len(lkeys), len(rkeys)
+        if n == 0 or m == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        # left pads (MAX) must not match real right keys and right pads
+        # (MIN) must not match real left keys
+        if lkeys.min() == INT64_MIN or rkeys.max() == INT64_MAX:
+            return self._host.join_pairs(lkeys, rkeys)
+        import jax.numpy as jnp
+        from repro.kernels.mergejoin.ops import merge_join_bounded
+        cap = self._bucket(max(n, m))
+        with self._lock, self._x64():
+            # conversions live inside enable_x64 or int64 truncates to int32
+            lp = jnp.asarray(self._pad(lkeys, self._bucket(n), INT64_MAX))
+            rp = jnp.asarray(self._pad(rkeys, self._bucket(m), INT64_MIN))
+            while True:
+                li, ri, valid, total = merge_join_bounded(
+                    lp, rp, out_cap=cap, block=self.block,
+                    force_pallas=self.force_pallas,
+                    interpret=self.interpret)
+                total = int(total)
+                if total <= cap:
+                    break
+                cap = self._bucket(total)  # one retry: exact total known
+            valid = np.asarray(valid)
+            li = np.asarray(li)[valid]
+            ri = np.asarray(ri)[valid]
+        return li.astype(np.int64), ri.astype(np.int64)
+
+    def unique_mask(self, sorted_keys: np.ndarray) -> np.ndarray:
+        x = np.asarray(sorted_keys, np.int64)
+        n = len(x)
+        if n == 0:
+            return np.zeros(0, bool)
+        # tail pads never influence mask lanes < n, so no sentinel guard
+        import jax.numpy as jnp
+        with self._lock, self._x64():
+            xp = jnp.asarray(self._pad(x, self._bucket(n), INT64_MAX))
+            if self._use_pallas():
+                from repro.kernels.uniquefilter.uniquefilter import \
+                    unique_mask_sorted
+                mask = unique_mask_sorted(xp, block=self.block,
+                                          interpret=self.interpret)
+            else:
+                mask = _jitted()["neighbor_mask"](xp)
+            mask = np.asarray(mask)
+        return mask[:n]
+
+    def semi_join(self, keys: np.ndarray, bound_values: np.ndarray
+                  ) -> np.ndarray:
+        keys = np.asarray(keys, np.int64)
+        bound = np.asarray(bound_values, np.int64)
+        n, m = len(keys), len(bound)
+        if n == 0 or m == 0:
+            return np.zeros(n, bool)
+        if keys.max() == INT64_MAX:  # would match the bound-side pads
+            return self._host.semi_join(keys, bound)
+        import jax.numpy as jnp
+        with self._lock, self._x64():
+            kp = jnp.asarray(self._pad(keys, self._bucket(n), INT64_MAX))
+            bp = jnp.asarray(self._pad(bound, self._bucket(m), INT64_MAX))
+            mask = np.asarray(_jitted()["semi_join"](
+                kp, bp, block=self.block, force_pallas=self.force_pallas,
+                interpret=self.interpret))
+        return mask[:n]
+
+    def dedup_rows(self, cols: list[np.ndarray]) -> np.ndarray:
+        cols = [np.asarray(c, np.int64) for c in cols]
+        n = len(cols[0])
+        if n == 0:
+            return np.empty(0, np.int64)
+        if any(len(c) and c.max() == INT64_MAX for c in cols):
+            return self._host.dedup_rows(cols)
+        if len(cols) == 1:
+            s, perm = self.sort_kv(cols[0], np.arange(n, dtype=np.int64))
+            return np.sort(perm[self.unique_mask(s)])
+        import jax.numpy as jnp
+        cap = self._bucket(n)
+        with self._lock, self._x64():
+            padded = tuple(jnp.asarray(self._pad(c, cap, INT64_MAX))
+                           for c in cols)
+            rows, count = _jitted()["dedup_rows"](padded, jnp.asarray(n))
+            rows = np.asarray(rows)[: int(count)]
+        return rows.astype(np.int64)

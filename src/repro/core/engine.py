@@ -20,13 +20,14 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.backend import Ops, get_backend
 from repro.core.conditions import (AddAction, Condition, DeleteAction,
                                    ExternalAction, Rule, is_var)
 from repro.core.derivation import DerivationTrees, build_derivation_trees
 from repro.core.facts import (Fact, ValueType, decode_value, encode_value,
                               facts_to_columns)
 from repro.core.islands import build_islands, evaluate_rule
-from repro.core.joins import Bindings, merge_join_pairs, unique_rows_sorted
+from repro.core.joins import Bindings
 from repro.core.store import FactStore, TypedFactTable
 
 
@@ -40,26 +41,28 @@ class EngineConfig:
     index_write: str = "PW"       # PW (parallel per-out-group) | SW
     unique: str = "SU"            # SU (sort-merge) | HU (incremental hash)
     sort_mode: str = "sortkeys"   # sortkeys | fixed
+    backend: str = "numpy"        # numpy | jax | jax-pallas | jax-interpret
     query_cache: bool = False     # rank-2/3 result cache (paper §5 fut. work)
     lazy: bool = False            # Defs. 10/11 active-rule pruning
     max_iterations: int = 1000
     max_workers: int = 8
 
     @staticmethod
-    def infer1() -> "EngineConfig":
+    def infer1(backend: str = "numpy") -> "EngineConfig":
         return EngineConfig(index_backend="LPIM", join="HJ", rnl="AR",
                             layout="CR", tree_exec="PF", index_write="PW",
-                            unique="SU")
+                            unique="SU", backend=backend)
 
     @staticmethod
-    def query1() -> "EngineConfig":
+    def query1(backend: str = "numpy") -> "EngineConfig":
         return EngineConfig(index_backend="AI", join="MJ", rnl="AR",
                             layout="CR", tree_exec="PF", index_write="PW",
-                            unique="SU")
+                            unique="SU", backend=backend)
 
     def label(self) -> str:
         return (f"{self.index_backend}+{self.join}/{self.rnl}/{self.layout}"
-                f"+{self.tree_exec}/{self.index_write}/{self.unique}")
+                f"+{self.tree_exec}/{self.index_write}/{self.unique}"
+                f"@{self.backend}")
 
 
 @dataclasses.dataclass
@@ -74,15 +77,16 @@ class InferStats:
 
 
 def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
-                   vals: np.ndarray) -> np.ndarray:
+                   vals: np.ndarray, ops: Ops | None = None) -> np.ndarray:
     """SU-path bulk dedup against the table: vectorized sorted anti-join on
     the packed (id, attr) key with exact val verification."""
     if table.n == 0 or len(ids) == 0:
         return np.zeros(len(ids), bool)
+    ops = ops or get_backend("numpy")
     key_new = (ids.astype(np.int64) << 32) | (attrs.astype(np.int64) & 0xFFFFFFFF)
     key_old = (table.ids.astype(np.int64) << 32) | (
         table.attrs.astype(np.int64) & 0xFFFFFFFF)
-    li, ri = merge_join_pairs(key_new, key_old)
+    li, ri = ops.join_pairs(key_new, key_old)
     if len(li) == 0:
         return np.zeros(len(ids), bool)
     ok = (vals[li] == table.vals[ri]) & table.alive[ri]
@@ -94,7 +98,8 @@ def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
 class HiperfactEngine:
     def __init__(self, config: EngineConfig | None = None) -> None:
         self.config = config or EngineConfig()
-        self.store = FactStore(self.config.index_backend)
+        self.ops = get_backend(self.config.backend)
+        self.store = FactStore(self.config.index_backend, ops=self.ops)
         self.rules: list[Rule] = []
         self._trees: DerivationTrees | None = None
         self._type_version: dict[str, int] = {}
@@ -144,10 +149,10 @@ class HiperfactEngine:
         if self.config.unique == "SU":
             # parallel-sort-merge unique: batch-dedup then anti-join vs table
             if len(ids) > 1:
-                keep = unique_rows_sorted([ids, attrs, vals])
+                keep = self.ops.dedup_rows([ids, attrs, vals])
                 ids, attrs, vals, valtypes = (
                     ids[keep], attrs[keep], vals[keep], valtypes[keep])
-            exists = _mask_existing(table, ids, attrs, vals)
+            exists = _mask_existing(table, ids, attrs, vals, self.ops)
             if exists.any():
                 fresh = ~exists
                 ids, attrs, vals, valtypes = (
@@ -167,7 +172,7 @@ class HiperfactEngine:
             table.attrs.astype(np.int64) & 0xFFFFFFFF)
         key_d = (np.asarray(ids, np.int64) << 32) | (
             np.asarray(attrs, np.int64) & 0xFFFFFFFF)
-        li, ri = merge_join_pairs(key_d, key_t)
+        li, ri = self.ops.join_pairs(key_d, key_t)
         if len(li) == 0:
             return 0
         ok = (np.asarray(vals, np.int64)[li] == table.vals[ri]) & table.alive[ri]
@@ -243,7 +248,7 @@ class HiperfactEngine:
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
             layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-            rl_fn=self._rl_fn())
+            rl_fn=self._rl_fn(), ops=self.ops)
         adds, dels = self._run_actions(rule, bindings)
         return ridx, adds, dels
 
@@ -337,7 +342,7 @@ class HiperfactEngine:
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
             layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-            rl_fn=self._rl_fn())
+            rl_fn=self._rl_fn(), ops=self.ops)
         if not decode:
             return bindings
         return decode_bindings(self.store, conditions, bindings)

@@ -22,6 +22,7 @@ import math
 
 import numpy as np
 
+from repro.backend import Ops
 from repro.core.conditions import Condition, Rule, bindings_for_rows, ccar, rl
 from repro.core.joins import (Bindings, dedup_bindings, join_bindings,
                               make_bindings, semi_join_rows)
@@ -184,7 +185,7 @@ def order_conditions(isl: Island, bound: set[str], sort_mode: str) -> list[CondS
 
 def _lookup_condition(
     store: FactStore, c: Condition, acc: Bindings | None, rnl_mode: str,
-    layout: str, rl_fn=None,
+    layout: str, rl_fn=None, ops: Ops | None = None,
 ) -> Bindings:
     """RL lookup for one condition -> its binding table.
 
@@ -202,7 +203,7 @@ def _lookup_condition(
         for name, comp in c.variables().items():
             if name in acc.names():
                 keys = table.column(comp)[rows].astype(np.int64)
-                rows = rows[semi_join_rows(keys, acc.col(name))]
+                rows = rows[semi_join_rows(keys, acc.col(name), ops)]
                 if len(rows) == 0:
                     break
     return make_bindings(bindings_for_rows(table, c, rows), layout)
@@ -212,7 +213,7 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                   rnl_mode: str = "AR", layout: str = "CR",
                   sort_mode: str = "sortkeys", distinct: bool = False,
                   islands: list[Island] | None = None,
-                  rl_fn=None) -> Bindings:
+                  rl_fn=None, ops: Ops | None = None) -> Bindings:
     """Full island-based evaluation of one rule -> final binding table.
 
     ``islands`` may be passed in pre-built (derivation-tree executor re-sorts
@@ -235,12 +236,12 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                         {"_exists": np.empty(0, np.int64)}, layout)
                 continue
             rhs = _lookup_condition(store, st.cond, acc, rnl_mode, layout,
-                                    rl_fn)
+                                    rl_fn, ops)
             if acc is None:
                 acc = rhs
             else:
                 keys = [v for v in st.cond.variables() if v in bound]
-                acc = join_bindings(acc, rhs, keys, join_algo)
+                acc = join_bindings(acc, rhs, keys, join_algo, ops)
             bound |= set(st.cond.variables().keys())
             still = []
             for t, vt in pending:
@@ -255,4 +256,4 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                 return acc
     if acc is None:  # all conditions were existence checks and all passed
         acc = make_bindings({"_exists": np.zeros(1, np.int64)}, layout)
-    return dedup_bindings(acc) if distinct else acc
+    return dedup_bindings(acc, ops) if distinct else acc

@@ -10,90 +10,50 @@
 * ``SU`` unique filter: the paper's parallel sort-merge unique filter —
   lexsort + neighbor compare.
 
-Everything here is bulk/vectorized on dense columns — the per-element work is
-exactly what ``kernels/sortmerge`` and ``kernels/mergejoin`` implement as
-Pallas TPU kernels; these numpy forms are their host twins and oracles.
+The bulk primitives themselves (merge join, unique filter, semi join) live
+in ``repro.backend`` — ``NumpyOps`` holds the host twins that used to be
+inline here, ``JaxOps`` routes them through the ``kernels/`` Pallas ops.
+This module keeps the layout structures (CR/RR bindings) plus thin
+module-level delegates so existing callers keep working; everything that
+sits on the hot path accepts an ``ops`` argument for backend dispatch.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.store import splitmix64
+from repro.backend import Ops, get_backend
+
+_NUMPY_OPS = get_backend("numpy")
 
 # ---------------------------------------------------------------------------
-# Pair-producing join cores
+# Pair-producing join cores (module-level delegates onto the numpy backend)
 
 
 def merge_join_pairs(lkeys: np.ndarray, rkeys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Sort-merge equi-join: all (li, ri) with lkeys[li] == rkeys[ri].
-
-    Sorts the right side once, then resolves every left key with two binary
-    searches; the expansion to pairs is pure index arithmetic (no host loop).
-    """
-    lkeys = np.asarray(lkeys)
-    rkeys = np.asarray(rkeys)
-    if len(lkeys) == 0 or len(rkeys) == 0:
-        return np.empty(0, np.int64), np.empty(0, np.int64)
-    rorder = np.argsort(rkeys, kind="stable")
-    rsorted = rkeys[rorder]
-    lo = np.searchsorted(rsorted, lkeys, side="left")
-    hi = np.searchsorted(rsorted, lkeys, side="right")
-    counts = hi - lo
-    total = int(counts.sum())
-    if total == 0:
-        return np.empty(0, np.int64), np.empty(0, np.int64)
-    li = np.repeat(np.arange(len(lkeys), dtype=np.int64), counts)
-    starts = np.cumsum(counts) - counts
-    pos_within = np.arange(total, dtype=np.int64) - starts[li]
-    ri = rorder[lo[li] + pos_within]
-    return li, ri
+    """Sort-merge equi-join: all (li, ri) with lkeys[li] == rkeys[ri]."""
+    return _NUMPY_OPS.join_pairs(lkeys, rkeys)
 
 
 def hash_join_pairs(lkeys: np.ndarray, rkeys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Radix-hash join: bucketize by a 64-bit mix, binary-probe the hashed
     domain, verify exact key equality on the candidates."""
-    lkeys = np.asarray(lkeys, np.int64)
-    rkeys = np.asarray(rkeys, np.int64)
-    if len(lkeys) == 0 or len(rkeys) == 0:
-        return np.empty(0, np.int64), np.empty(0, np.int64)
-    lh = splitmix64(lkeys.view(np.uint64)).view(np.int64)
-    rh = splitmix64(rkeys.view(np.uint64)).view(np.int64)
-    li, ri = merge_join_pairs(lh, rh)
-    if len(li) == 0:
-        return li, ri
-    ok = lkeys[li] == rkeys[ri]
-    return li[ok], ri[ok]
+    return _NUMPY_OPS.hash_join_pairs(lkeys, rkeys)
 
 
-JOIN_ALGOS = {"MJ": merge_join_pairs, "HJ": hash_join_pairs}
-
-
-def semi_join_rows(rows_keys: np.ndarray, bound_values: np.ndarray) -> np.ndarray:
+def semi_join_rows(rows_keys: np.ndarray, bound_values: np.ndarray,
+                   ops: Ops | None = None) -> np.ndarray:
     """Mask for ``rows_keys`` that appear in ``bound_values`` (AR-mode RNL:
-    restrict a lookup to values already bound in the join buffer)."""
-    if len(rows_keys) == 0:
-        return np.zeros(0, bool)
-    uniq = np.unique(bound_values)
-    pos = np.searchsorted(uniq, rows_keys)
-    pos = np.clip(pos, 0, len(uniq) - 1)
-    return uniq[pos] == rows_keys
+    restrict a lookup to values already bound in the join buffer).
+    Empty ``bound_values`` means nothing is bound -> all-False."""
+    return (ops or _NUMPY_OPS).semi_join(rows_keys, bound_values)
 
 
-def unique_rows_sorted(cols: list[np.ndarray]) -> np.ndarray:
-    """SU unique filter: indices of the first occurrence of each distinct
-    row of ``zip(*cols)`` (lexsort + neighbor compare)."""
-    n = len(cols[0])
-    if n == 0:
-        return np.empty(0, np.int64)
-    order = np.lexsort(tuple(reversed(cols)))
-    # a sorted row is new iff it differs from its predecessor in ANY column
-    diff = np.zeros(n, bool)
-    diff[0] = True
-    for c in cols:
-        cs = c[order]
-        diff[1:] |= cs[1:] != cs[:-1]
-    return np.sort(order[diff])
+def unique_rows_sorted(cols: list[np.ndarray],
+                       ops: Ops | None = None) -> np.ndarray:
+    """SU unique filter: indices selecting one representative of each
+    distinct row of ``zip(*cols)`` (lexsort + neighbor compare)."""
+    return (ops or _NUMPY_OPS).dedup_rows(cols)
 
 
 # ---------------------------------------------------------------------------
@@ -191,21 +151,23 @@ def make_bindings(cols: dict[str, np.ndarray], layout: str) -> Bindings:
 
 
 def join_bindings(left: Bindings, right: Bindings, keys: list[str],
-                  algo: str = "MJ") -> Bindings:
+                  algo: str = "MJ", ops: Ops | None = None) -> Bindings:
     """Equi-join two binding tables on shared variables.
 
-    The first key drives the pair-producing join; remaining keys are verified
-    on the candidate pairs (exact, standard multi-key refinement).
+    The first key drives the pair-producing join (dispatched through the
+    execution backend); remaining keys are verified on the candidate pairs
+    (exact, standard multi-key refinement).
     If there is no shared key the result is the cross product — the island
     planner avoids this unless the rule truly is a cross product.
     """
+    ops = ops or _NUMPY_OPS
     if left.n == 0 or right.n == 0:
         return left.select(np.empty(0, np.int64))
     if not keys:
         li = np.repeat(np.arange(left.n, dtype=np.int64), right.n)
         ri = np.tile(np.arange(right.n, dtype=np.int64), left.n)
     else:
-        li, ri = JOIN_ALGOS[algo](left.col(keys[0]), right.col(keys[0]))
+        li, ri = ops.join(left.col(keys[0]), right.col(keys[0]), algo)
         for k in keys[1:]:
             if len(li) == 0:
                 break
@@ -214,9 +176,9 @@ def join_bindings(left: Bindings, right: Bindings, keys: list[str],
     return left.merged(li, right, ri)
 
 
-def dedup_bindings(b: Bindings) -> Bindings:
+def dedup_bindings(b: Bindings, ops: Ops | None = None) -> Bindings:
     """Project-distinct over all columns (used for final query results)."""
     if b.n == 0:
         return b
-    keep = unique_rows_sorted([b.col(k) for k in b.names()])
+    keep = (ops or _NUMPY_OPS).dedup_rows([b.col(k) for k in b.names()])
     return b.select(keep)

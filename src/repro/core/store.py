@@ -25,6 +25,7 @@ import enum
 
 import numpy as np
 
+from repro.backend import Ops, get_backend, splitmix64  # noqa: F401  (re-export)
 from repro.core.facts import StringDictionary
 
 PAGE_ROWS = 4096  # paper: pages pre-allocated by a memory pool
@@ -39,19 +40,24 @@ class Component(enum.IntEnum):
 _COMP_NAMES = {Component.ID: "id", Component.ATTR: "attr", Component.VAL: "val"}
 
 
-def splitmix64(x: np.ndarray) -> np.ndarray:
-    """Vectorized 64-bit mix hash (used for HI bucketing and HJ joins)."""
-    z = x.astype(np.uint64, copy=True)
-    z += np.uint64(0x9E3779B97F4A7C15)
-    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-    return z ^ (z >> np.uint64(31))
-
-
 class Rank1Index(abc.ABC):
-    """Per-fact-type inverted index over the three triple components."""
+    """Per-fact-type inverted index over the three triple components.
+
+    Index builds are permutation sorts (fork-join instance 4), so they run
+    through the execution backend's ``sort_kv``.
+    """
 
     name: str = "?"
+
+    def __init__(self, ops: Ops | None = None) -> None:
+        self.ops = ops or get_backend("numpy")
+
+    def _perm_sort(self, col: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(sorted column, permutation) via the backend's KV sort.  Not
+        stable on the device backend (bitonic network); lookups only ever
+        consume row *sets*, so equal-key order is free to differ."""
+        skeys, perm = self.ops.sort_perm(col)
+        return skeys.astype(col.dtype, copy=False), perm.astype(np.int32)
 
     @abc.abstractmethod
     def rebuild(self, table: "TypedFactTable") -> None: ...
@@ -82,16 +88,15 @@ class SortedArrayIndex(Rank1Index):
 
     name = "AI"
 
-    def __init__(self) -> None:
+    def __init__(self, ops: Ops | None = None) -> None:
+        super().__init__(ops)
         self._sorted: dict[Component, np.ndarray] = {}
         self._perm: dict[Component, np.ndarray] = {}
 
     def rebuild(self, table: "TypedFactTable") -> None:
         for comp in Component:
             col = table.column(comp)
-            perm = np.argsort(col, kind="stable").astype(np.int32)
-            self._perm[comp] = perm
-            self._sorted[comp] = col[perm]
+            self._sorted[comp], self._perm[comp] = self._perm_sort(col)
 
     def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
         # AI has no incremental form in the paper (it is the load-time
@@ -133,7 +138,8 @@ class HashIndex(Rank1Index):
 
     name = "HI"
 
-    def __init__(self, n_buckets: int = 1 << 12) -> None:
+    def __init__(self, n_buckets: int = 1 << 12, ops: Ops | None = None) -> None:
+        super().__init__(ops)
         self.n_buckets = n_buckets
         self._bucket_sorted: dict[Component, np.ndarray] = {}
         self._perm: dict[Component, np.ndarray] = {}
@@ -145,9 +151,7 @@ class HashIndex(Rank1Index):
         for comp in Component:
             col = table.column(comp)
             b = self._bucket_of(col)
-            perm = np.argsort(b, kind="stable").astype(np.int32)
-            self._perm[comp] = perm
-            self._bucket_sorted[comp] = b[perm]
+            self._bucket_sorted[comp], self._perm[comp] = self._perm_sort(b)
 
     def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
         self.rebuild(table)  # CSR append == rebuild; see LPIM for amortization
@@ -188,7 +192,9 @@ class PagedIndex(Rank1Index):
     a binary search over the base with a vectorized filter over the tail.
     """
 
-    def __init__(self, pooled: bool = True, compact_pages: int = 4) -> None:
+    def __init__(self, pooled: bool = True, compact_pages: int = 4,
+                 ops: Ops | None = None) -> None:
+        super().__init__(ops)
         self.pooled = pooled
         self.name = "LPIM" if pooled else "LPID"
         self.compact_rows = compact_pages * PAGE_ROWS
@@ -202,9 +208,7 @@ class PagedIndex(Rank1Index):
         self._base_n = table.n
         for comp in Component:
             col = table.column(comp)
-            perm = np.argsort(col, kind="stable").astype(np.int32)
-            self._perm[comp] = perm
-            self._sorted[comp] = col[perm]
+            self._sorted[comp], self._perm[comp] = self._perm_sort(col)
 
     def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
         self._n = stop
@@ -245,10 +249,10 @@ class PagedIndex(Rank1Index):
 
 
 INDEX_BACKENDS = {
-    "AI": SortedArrayIndex,
-    "HI": HashIndex,
-    "LPIM": lambda: PagedIndex(pooled=True),
-    "LPID": lambda: PagedIndex(pooled=False),
+    "AI": lambda ops=None: SortedArrayIndex(ops=ops),
+    "HI": lambda ops=None: HashIndex(ops=ops),
+    "LPIM": lambda ops=None: PagedIndex(pooled=True, ops=ops),
+    "LPID": lambda ops=None: PagedIndex(pooled=False, ops=ops),
 }
 
 
@@ -264,7 +268,8 @@ class TypedFactTable:
     __slots__ = ("ftype", "n", "_cap", "_id", "_attr", "_val", "_valtype",
                  "_alive", "index", "_key_set")
 
-    def __init__(self, ftype: str, index_backend: str = "AI") -> None:
+    def __init__(self, ftype: str, index_backend: str = "AI",
+                 ops: Ops | None = None) -> None:
         self.ftype = ftype
         self.n = 0
         self._cap = PAGE_ROWS
@@ -273,7 +278,7 @@ class TypedFactTable:
         self._val = np.empty(self._cap, np.int64)
         self._valtype = np.empty(self._cap, np.int8)
         self._alive = np.empty(self._cap, bool)
-        self.index: Rank1Index = INDEX_BACKENDS[index_backend]()
+        self.index: Rank1Index = INDEX_BACKENDS[index_backend](ops=ops)
         # Host-side exact-membership set for incremental dedup (HU path) and
         # idempotent inserts; the SU path dedups in bulk before reaching here.
         self._key_set: set[tuple[int, int, int]] = set()
@@ -393,15 +398,17 @@ class TypedFactTable:
 class FactStore:
     """All fact types: {ftype -> TypedFactTable} + the string dictionary."""
 
-    def __init__(self, index_backend: str = "AI") -> None:
+    def __init__(self, index_backend: str = "AI",
+                 ops: Ops | None = None) -> None:
         self.index_backend = index_backend
+        self.ops = ops or get_backend("numpy")
         self.strings = StringDictionary()
         self.tables: dict[str, TypedFactTable] = {}
 
     def table(self, ftype: str) -> TypedFactTable:
         t = self.tables.get(ftype)
         if t is None:
-            t = TypedFactTable(ftype, self.index_backend)
+            t = TypedFactTable(ftype, self.index_backend, ops=self.ops)
             self.tables[ftype] = t
         return t
 

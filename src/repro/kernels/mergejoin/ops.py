@@ -15,17 +15,20 @@ from repro.kernels.sortmerge.ops import device_sort_kv
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("out_cap", "force_pallas", "interpret"))
+                   static_argnames=("out_cap", "block", "force_pallas",
+                                    "interpret"))
 def merge_join_bounded(l_keys: jnp.ndarray, r_keys: jnp.ndarray, out_cap: int,
-                       force_pallas: bool = False, interpret: bool = False):
+                       block: int = 1024, force_pallas: bool = False,
+                       interpret: bool = False):
     """Equi-join -> (li, ri, valid, total).  li/ri index the *original*
     (unsorted) inputs; up to ``out_cap`` pairs are emitted."""
     m = r_keys.shape[0]
     r_sorted, r_perm = device_sort_kv(
-        r_keys, jnp.arange(m, dtype=jnp.int32),
+        r_keys, jnp.arange(m, dtype=jnp.int32), block=block,
         force_pallas=force_pallas, interpret=interpret)
     if force_pallas or jax.default_backend() == "tpu":
-        lo, hi = probe_sorted(l_keys, r_sorted, interpret=interpret)
+        lo, hi = probe_sorted(l_keys, r_sorted, block=block,
+                              interpret=interpret)
     else:
         lo = jnp.searchsorted(r_sorted, l_keys, side="left").astype(jnp.int32)
         hi = jnp.searchsorted(r_sorted, l_keys, side="right").astype(jnp.int32)

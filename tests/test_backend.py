@@ -1,0 +1,204 @@
+"""Cross-backend parity: JaxOps ≡ NumpyOps, primitive and end-to-end.
+
+The execution backend swaps the hot-path primitives (ISSUE: kernels ->
+backend -> core joins/store -> engine config); both implementations must
+stay oracle-equivalent.  Primitives are compared as sets/values (pair
+order and which duplicate survives dedup are unspecified — the bitonic
+network is not stable); end-to-end runs compare inference fixpoints and
+query result sets over the Table-1 config grid.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.backend import BACKENDS, get_backend
+from repro.backend.jax_ops import JaxOps
+from repro.backend.numpy_ops import NumpyOps
+from repro.core import EngineConfig, Fact, HiperfactEngine, Rule
+from repro.core.conditions import AddAction, cond, term
+from repro.core.rulesets import rdfs_plus_rules
+
+HOST = NumpyOps()
+RNG = np.random.RandomState(1234)
+
+
+def device_backends():
+    # jax[auto] exercises the wrappers' portable XLA lowering (Pallas on
+    # TPU); jax[interpret] forces the Pallas kernel code path on CPU.
+    return [pytest.param(get_backend("jax"), id="jax-auto"),
+            pytest.param(JaxOps(mode="interpret", block=256),
+                         id="jax-interpret")]
+
+
+def pair_set(li, ri):
+    return sorted(zip(li.tolist(), ri.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Primitive parity
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_sort_kv_parity(ops):
+    keys = RNG.randint(-1 << 40, 1 << 40, 500).astype(np.int64)
+    vals = np.arange(500, dtype=np.int64)
+    gk, gv = ops.sort_kv(keys, vals)
+    wk, wv = HOST.sort_kv(keys, vals)
+    np.testing.assert_array_equal(gk, wk)
+    assert set(zip(gk.tolist(), gv.tolist())) == set(zip(wk.tolist(),
+                                                         wv.tolist()))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+@pytest.mark.parametrize("algo", ["MJ", "HJ"])
+def test_join_pairs_parity(ops, algo):
+    l = RNG.randint(0, 40, 300).astype(np.int64) * (1 << 33)  # true 64-bit
+    r = RNG.randint(0, 40, 170).astype(np.int64) * (1 << 33)
+    gli, gri = ops.join(l, r, algo)
+    wli, wri = HOST.join(l, r, algo)
+    assert pair_set(gli, gri) == pair_set(wli, wri)
+    assert (l[gli] == r[gri]).all()
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_join_pairs_overflow_rerun(ops):
+    # all-equal keys: n*m pairs overflow the initial capacity bucket and
+    # force the exact-total re-run
+    l = np.zeros(80, np.int64)
+    r = np.zeros(80, np.int64)
+    gli, gri = ops.join_pairs(l, r)
+    assert len(gli) == 80 * 80
+    assert pair_set(gli, gri) == pair_set(*HOST.join_pairs(l, r))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_unique_mask_parity(ops):
+    s = np.sort(RNG.randint(-20, 20, 400).astype(np.int64))
+    np.testing.assert_array_equal(ops.unique_mask(s), HOST.unique_mask(s))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_semi_join_parity(ops):
+    keys = RNG.randint(-15, 15, 250).astype(np.int64)
+    bound = RNG.randint(-15, 15, 60).astype(np.int64)
+    np.testing.assert_array_equal(ops.semi_join(keys, bound),
+                                  HOST.semi_join(keys, bound))
+    np.testing.assert_array_equal(
+        ops.semi_join(keys, np.empty(0, np.int64)), np.zeros(250, bool))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+@pytest.mark.parametrize("ncols", [1, 3])
+def test_dedup_rows_parity(ops, ncols):
+    cols = [RNG.randint(0, 6, 200).astype(np.int64) for _ in range(ncols)]
+    got = ops.dedup_rows(cols)
+    want = HOST.dedup_rows(cols)
+    assert len(got) == len(want)
+    assert sorted(zip(*(c[got] for c in cols))) == \
+        sorted(zip(*(c[want] for c in cols)))
+    # ascending indices, no duplicates selected twice
+    assert (np.diff(got) > 0).all()
+
+
+@pytest.mark.parametrize("name", BACKENDS[:2])  # numpy, jax
+def test_empty_inputs(name):
+    ops = get_backend(name)
+    e = np.empty(0, np.int64)
+    assert ops.sort_kv(e, e)[0].shape == (0,)
+    assert ops.join_pairs(e, np.asarray([1], np.int64))[0].shape == (0,)
+    assert ops.unique_mask(e).shape == (0,)
+    assert ops.semi_join(e, e).shape == (0,)
+    assert ops.dedup_rows([e]).shape == (0,)
+
+
+# (the semi_join_rows empty-bound regression lives in tests/test_joins.py,
+#  next to the function under test)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end engine parity over the Table-1 config grid
+
+
+def kg_facts():
+    return [
+        Fact("Schema", "A", "subClassOf", "B"),
+        Fact("Schema", "B", "subClassOf", "C"),
+        Fact("Schema", "C", "subClassOf", "D"),
+        Fact("Schema", "knows", "characteristic", "symmetric"),
+        Fact("Schema", "partOf", "characteristic", "transitive"),
+        Fact("Data", "x", "type", "A"),
+        Fact("Data", "y", "type", "B"),
+        Fact("Data", "x", "knows", "y"),
+        Fact("Data", "p1", "partOf", "p2"),
+        Fact("Data", "p2", "partOf", "p3"),
+        Fact("Data", "p3", "partOf", "p4"),
+    ]
+
+
+QUERIES = [
+    [cond("Data", "?x", "type", "D")],
+    [cond("Data", "?a", "partOf", "?b")],
+    [cond("Data", "?x", "type", "?t"), cond("Data", "?x", "knows", "?y")],
+]
+
+
+def query_sets(engine):
+    return [{tuple(sorted(r.items())) for r in engine.query(q)}
+            for q in QUERIES]
+
+
+def run_engine(cfg):
+    e = HiperfactEngine(cfg)
+    e.add_rules(rdfs_plus_rules())
+    e.insert_facts(kg_facts())
+    stats = e.infer()
+    return e, stats
+
+
+GRID = [(j, u, la) for j in ("MJ", "HJ") for u in ("SU", "HU")
+        for la in ("CR", "RR")]
+
+
+@pytest.mark.parametrize("join,unique,layout", GRID,
+                         ids=lambda v: v if isinstance(v, str) else str(v))
+def test_engine_backend_parity_grid(join, unique, layout):
+    base = EngineConfig(index_backend="AI", join=join, unique=unique,
+                        layout=layout)
+    e_np, s_np = run_engine(dataclasses.replace(base, backend="numpy"))
+    e_jx, s_jx = run_engine(dataclasses.replace(base, backend="jax"))
+    assert s_jx.facts_inferred == s_np.facts_inferred
+    assert e_jx.store.num_facts() == e_np.store.num_facts()
+    assert query_sets(e_jx) == query_sets(e_np)
+
+
+@pytest.mark.parametrize("preset", ["infer1", "query1"])
+def test_engine_backend_parity_presets(preset):
+    make = getattr(EngineConfig, preset)
+    e_np, s_np = run_engine(make(backend="numpy"))
+    e_jx, s_jx = run_engine(make(backend="jax"))
+    assert s_jx.facts_inferred == s_np.facts_inferred
+    assert query_sets(e_jx) == query_sets(e_np)
+    assert make(backend="jax").label().endswith("@jax")
+
+
+def test_engine_interpret_mode_smoke():
+    """One tiny fixpoint through the Pallas kernels under the interpreter:
+    the full kernel code path runs on CPU, end to end."""
+    facts = [Fact("T", "a", "next", "b"), Fact("T", "b", "next", "c"),
+             Fact("T", "c", "next", "d")]
+    rule = Rule("trans", (cond("T", "?x", "next", "?y"),
+                          cond("T", "?y", "next", "?z")),
+                (AddAction("T", term("?x"), "next", term("?z")),))
+    results = {}
+    for backend in ("numpy", "jax-interpret"):
+        e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                         unique="SU", backend=backend))
+        e.add_rule(rule)
+        e.insert_facts(facts)
+        e.infer()
+        results[backend] = {tuple(sorted(r.items())) for r in
+                            e.query([cond("T", "?x", "next", "?y")])}
+    assert results["numpy"] == results["jax-interpret"]
+    assert len(results["numpy"]) == 6  # transitive closure of a 4-chain

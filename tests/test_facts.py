@@ -3,36 +3,50 @@
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # property tests skip; deterministic tests still run
+    HAS_HYPOTHESIS = False
 
 from repro.core.conditions import JoinTest, cond
 from repro.core.facts import (StringDictionary, ValueType, decode_lane_array,
                               decode_value, encode_lane_array, encode_value)
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.floats(allow_nan=False, width=32))
-def test_float_roundtrip(x):
-    s = StringDictionary()
-    lane = encode_value(x, ValueType.FLOAT, s)
-    got = decode_value(lane, ValueType.FLOAT, s)
-    assert got == np.float32(x) or (math.isinf(x))
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.floats(allow_nan=False, width=32))
+    def test_float_roundtrip(x):
+        s = StringDictionary()
+        lane = encode_value(x, ValueType.FLOAT, s)
+        got = decode_value(lane, ValueType.FLOAT, s)
+        assert got == np.float32(x) or (math.isinf(x))
 
+    @settings(max_examples=60, deadline=None)
+    @given(st.floats(allow_nan=False))
+    def test_double_roundtrip(x):
+        s = StringDictionary()
+        assert decode_value(encode_value(x, ValueType.DOUBLE, s),
+                            ValueType.DOUBLE, s) == x
 
-@settings(max_examples=60, deadline=None)
-@given(st.floats(allow_nan=False))
-def test_double_roundtrip(x):
-    s = StringDictionary()
-    assert decode_value(encode_value(x, ValueType.DOUBLE, s),
-                        ValueType.DOUBLE, s) == x
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**64 - 1))
+    def test_uint64_roundtrip(x):
+        s = StringDictionary()
+        assert decode_value(encode_value(x, ValueType.UINT64, s),
+                            ValueType.UINT64, s) == x
+else:
+    def test_float_roundtrip():
+        pytest.importorskip("hypothesis")
 
+    def test_double_roundtrip():
+        pytest.importorskip("hypothesis")
 
-@settings(max_examples=60, deadline=None)
-@given(st.integers(0, 2**64 - 1))
-def test_uint64_roundtrip(x):
-    s = StringDictionary()
-    assert decode_value(encode_value(x, ValueType.UINT64, s),
-                        ValueType.UINT64, s) == x
+    def test_uint64_roundtrip():
+        pytest.importorskip("hypothesis")
 
 
 def test_string_dictionary_stable_handles():
