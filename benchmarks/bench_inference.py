@@ -29,6 +29,9 @@ ENGINE_CONFIGS = {
 
 def run_hiperfact(cfg: EngineConfig, facts, queries) -> dict:
     e = HiperfactEngine(cfg)
+    tc = getattr(e.ops, "transfers", None)  # JaxOps: measure residency
+    snap = tc.snapshot() if tc is not None else None
+    cache_snap = e.ops.cache.stats() if tc is not None else None
     e.add_rules(rdfs_plus_rules())
     t0 = time.perf_counter()
     e.insert_facts(facts)
@@ -38,9 +41,20 @@ def run_hiperfact(cfg: EngineConfig, facts, queries) -> dict:
     n_rows = sum(len(e.query(q, decode=False).names()) or
                  e.query(q, decode=False).n for q in queries)
     query_s = time.perf_counter() - t0
-    return {"load_s": load_s, "infer_s": stats.seconds,
-            "query_s": query_s, "inferred": stats.facts_inferred,
-            "rows": n_rows}
+    out = {"load_s": load_s, "infer_s": stats.seconds,
+           "query_s": query_s, "inferred": stats.facts_inferred,
+           "rows": n_rows}
+    if tc is not None:
+        d = tc.delta(snap)
+        out["transfers"] = (f"h2d={d.h2d_calls}x/{d.h2d_bytes}B "
+                            f"d2h={d.d2h_calls}x/{d.d2h_bytes}B")
+        # the backend instance is process-wide: report this run's delta,
+        # not cumulative totals (entries/bytes are point-in-time gauges)
+        cur = e.ops.cache.stats()
+        out["cache"] = {k: (cur[k] - cache_snap[k]
+                            if k in ("hits", "misses", "stale", "evictions")
+                            else cur[k]) for k in cur}
+    return out
 
 
 def run_rete(facts, queries) -> dict:
@@ -86,12 +100,16 @@ def bench(scale: int = 1, wordnet_n: int = 1500, include_rete: bool = True,
     return rows
 
 
-def main(scale: int = 1):
+def main(scale: int = 1, backend: str = "numpy"):
     print("dataset,engine,load_s,infer_s,query_s,facts_inferred")
-    for dname, ename, r in bench(scale):
+    for dname, ename, r in bench(scale, backend=backend):
         print(f"{dname},{ename},{r['load_s']:.4f},{r['infer_s']:.4f},"
               f"{r['query_s']:.4f},{r['inferred']}")
+        if "transfers" in r:
+            print(f"#   {ename}: {r['transfers']} cache={r['cache']}")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(scale=int(sys.argv[1]) if len(sys.argv) > 1 else 1,
+         backend=sys.argv[2] if len(sys.argv) > 2 else "numpy")

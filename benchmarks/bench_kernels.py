@@ -67,19 +67,53 @@ def bench_backends(n: int = 1 << 15, names=("numpy", "jax")):
     r = rng.randint(0, n // 4, n // 2).astype(np.int64)
     bound = rng.randint(0, n // 4, n // 8).astype(np.int64)
     cols = [rng.randint(0, 64, n).astype(np.int64) for _ in range(3)]
+    # same span, forced past the tagged-width guard: exercises the XLA
+    # stable-lexsort fallback for a before/after on the dedup change
+    wide = [c.copy() for c in cols]
+    wide[0][0] = np.iinfo(np.int64).max // 2
+    wide[0][1] = np.iinfo(np.int64).min // 2
     rows = []
     for name in names:
         ops = get_backend(name)
         rows.append((f"backend[{name}]_sort_kv",
                      timeit(lambda: ops.sort_kv(keys, vals))))
+        rows.append((f"backend[{name}]_sort_perm",
+                     timeit(lambda: ops.sort_perm(keys))))
         rows.append((f"backend[{name}]_join_pairs",
                      timeit(lambda: ops.join_pairs(l, r))))
         rows.append((f"backend[{name}]_hash_join",
                      timeit(lambda: ops.hash_join_pairs(l, r))))
         rows.append((f"backend[{name}]_semi_join",
                      timeit(lambda: ops.semi_join(l, bound))))
-        rows.append((f"backend[{name}]_dedup_rows",
+        rows.append((f"backend[{name}]_dedup_rows_tagged",
                      timeit(lambda: ops.dedup_rows(cols))))
+        rows.append((f"backend[{name}]_dedup_rows_widekeys",
+                     timeit(lambda: ops.dedup_rows(wide))))
+    return rows
+
+
+def bench_residency(n: int = 1 << 14, batches: int = 16,
+                    batch: int = 512):
+    """Device residency: an append-heavy index-build loop with and without
+    the version cache.  Reports wall time and host->device bytes — the
+    cached loop uploads only each appended tail."""
+    from repro.backend.jax_ops import JaxOps
+
+    rng = np.random.RandomState(2)
+    col = rng.randint(0, 1 << 30, n + batches * batch).astype(np.int64)
+    rows = []
+    for label, cached in (("cold", False), ("resident", True)):
+        ops = JaxOps(mode="auto")
+        t0 = time.perf_counter()
+        for i in range(batches):
+            cur = col[: n + (i + 1) * batch]
+            kw = ({"cache_key": ("bench", 0), "version": i}
+                  if cached else {})
+            ops.sort_perm(cur, **kw)
+        dt = (time.perf_counter() - t0) / batches
+        rows.append((f"residency[{label}]_sort_perm", dt))
+        rows.append((f"residency[{label}]_h2d_bytes",
+                     ops.transfers.h2d_bytes))
     return rows
 
 
@@ -89,6 +123,8 @@ def main():
         print(f"{name},{s:.5f}")
     for name, s in bench_backends():
         print(f"{name},{s:.5f}")
+    for name, s in bench_residency():
+        print(f"{name},{s}")
 
 
 if __name__ == "__main__":

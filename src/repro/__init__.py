@@ -1,13 +1,14 @@
 """repro — Hiperfact fact processing + LM systems framework on JAX/TPU.
 
-NOTE: the package enables ``jax_enable_x64`` at import.  The Hiperfact
-device algebra packs fact pairs into sortable int64 lanes (DESIGN.md §2);
-all neural-model code pins its dtypes explicitly (bf16/f32/int32), so the
-flag only widens what is meant to be wide.
+NOTE on ``jax_enable_x64``: the Hiperfact device algebra packs fact pairs
+into sortable int64 lanes (DESIGN.md §2), so the *fact subsystems* —
+``repro.core`` and ``repro.kernels`` — enable the flag at their import.
+The neural-model stack (``repro.models`` / ``repro.train`` /
+``repro.serve``) deliberately runs with default 32-bit types: under x64,
+``lax.scan`` loop counters trace as s64 and the SPMD partitioner mixes
+them with its own s32 offsets in scan-transpose ``dynamic_update_slice``
+clamps, which the HLO verifier rejects.  Keep model processes free of
+``repro.core`` imports unless they need the fact engine.
 """
-
-import jax as _jax
-
-_jax.config.update("jax_enable_x64", True)
 
 __version__ = "0.1.0"

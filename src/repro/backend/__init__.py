@@ -17,6 +17,7 @@ are per-process resources, not per-engine ones.
 from __future__ import annotations
 
 from repro.backend.base import Ops, splitmix64
+from repro.backend.device_cache import DeviceArrayCache, TransferCounter
 from repro.backend.numpy_ops import NumpyOps
 
 BACKENDS = ("numpy", "jax", "jax-pallas", "jax-interpret")
@@ -44,4 +45,5 @@ def get_backend(name: str = "numpy") -> Ops:
     return ops
 
 
-__all__ = ["BACKENDS", "NumpyOps", "Ops", "get_backend", "splitmix64"]
+__all__ = ["BACKENDS", "DeviceArrayCache", "NumpyOps", "Ops",
+           "TransferCounter", "get_backend", "splitmix64"]

@@ -44,10 +44,17 @@ class Ops(abc.ABC):
         the id+object sort used by every rank-1 index build)."""
 
     @abc.abstractmethod
-    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
+    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray, *,
+                   rkeys_key=None, rkeys_version: int | None = None
                    ) -> tuple[np.ndarray, np.ndarray]:
         """Sort-merge equi-join: all (li, ri) with lkeys[li] == rkeys[ri].
-        Pair order is unspecified; the pair *set* is exact."""
+        Pair order is unspecified; the pair *set* is exact.
+
+        ``rkeys_key``/``rkeys_version`` optionally identify ``rkeys`` as a
+        version-stamped append-only column (e.g. a fact table's packed
+        (id, attr) keys): device backends keep it resident and upload only
+        the appended tail when the version advances.  Host backends
+        ignore the hint."""
 
     @abc.abstractmethod
     def unique_mask(self, sorted_keys: np.ndarray) -> np.ndarray:
@@ -66,10 +73,19 @@ class Ops(abc.ABC):
         of each distinct row of ``zip(*cols)``."""
 
     # -- shared derived algorithms ---------------------------------------
-    def sort_perm(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def sort_perm(self, keys: np.ndarray, *, cache_key=None,
+                  version: int | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
         """(sorted keys, permutation) — the index-build form of the KV
-        sort.  Default: carry an arange payload through ``sort_kv``;
-        backends may override with a cheaper native path."""
+        sort, **stable** (equal keys keep input order) on every backend.
+        Default: carry an arange payload through ``sort_kv``; backends may
+        override with a cheaper native path.
+
+        ``cache_key``/``version`` optionally identify ``keys`` as a
+        version-stamped append-only column (a rank-1 index build): device
+        backends keep the column and its (sorted, perm) mirrors resident
+        and return cached results at an unchanged version without any
+        transfer.  Host backends ignore the hint."""
         keys = np.asarray(keys)
         return self.sort_kv(keys.astype(np.int64, copy=False),
                             np.arange(len(keys), dtype=np.int64))

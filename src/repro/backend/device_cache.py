@@ -1,0 +1,154 @@
+"""Device residency for the inference hot path (paper §2.2).
+
+The paper's premise is that rank-1 index storage and intermediate join
+state live in cache-efficient contiguous structures.  PR 1 put the bulk
+primitives on the accelerator but round-tripped every call host→device→
+host, so the hottest state — per-fact-type columns, their packed join
+keys, and the sorted-permutation indexes — was re-uploaded on every
+primitive.  This module provides the two pieces that close that gap:
+
+* ``TransferCounter`` — counts host→device / device→host transfers (calls
+  and bytes).  Every conversion in ``JaxOps`` goes through it, so "zero
+  intermediate transfers" is measurable, not aspirational.
+
+* ``DeviceArrayCache`` — a small, thread-safe, LRU, *version-keyed* cache
+  for device-resident values.  Keys are arbitrary hashables (the engine
+  uses ``("col", ftype, component)``-style tuples); every entry carries
+  the fact-table version it was built from.  A ``get`` with a stale
+  version misses (the caller rebuilds, typically by uploading only the
+  appended tail — fact-table columns are append-only), and ``put``
+  replaces the stale entry.  Versions come from the engine's existing
+  per-type counters, which is what makes invalidation exact rather than
+  heuristic.
+
+Capacity is bounded in bytes (default 256 MiB) so long-running engines
+with many fact types cannot pin unbounded device memory; eviction is LRU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+@dataclasses.dataclass
+class TransferCounter:
+    """Host<->device transfer accounting for one ``Ops`` instance."""
+
+    h2d_calls: int = 0
+    h2d_bytes: int = 0
+    d2h_calls: int = 0
+    d2h_bytes: int = 0
+
+    def count_h2d(self, nbytes: int) -> None:
+        self.h2d_calls += 1
+        self.h2d_bytes += int(nbytes)
+
+    def count_d2h(self, nbytes: int) -> None:
+        self.d2h_calls += 1
+        self.d2h_bytes += int(nbytes)
+
+    def snapshot(self) -> "TransferCounter":
+        return TransferCounter(self.h2d_calls, self.h2d_bytes,
+                               self.d2h_calls, self.d2h_bytes)
+
+    def delta(self, since: "TransferCounter") -> "TransferCounter":
+        return TransferCounter(
+            self.h2d_calls - since.h2d_calls,
+            self.h2d_bytes - since.h2d_bytes,
+            self.d2h_calls - since.d2h_calls,
+            self.d2h_bytes - since.d2h_bytes)
+
+    def reset(self) -> None:
+        self.h2d_calls = self.h2d_bytes = 0
+        self.d2h_calls = self.d2h_bytes = 0
+
+    def __repr__(self) -> str:  # compact: shows up in bench reports
+        return (f"TransferCounter(h2d={self.h2d_calls}x/{self.h2d_bytes}B, "
+                f"d2h={self.d2h_calls}x/{self.d2h_bytes}B)")
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    version: int
+    value: Any
+    nbytes: int
+
+
+class DeviceArrayCache:
+    """Thread-safe LRU cache of version-stamped device-resident values.
+
+    ``get(key, version)`` hits only when the stored version matches
+    exactly; ``get_any(key)`` returns whatever is stored (possibly stale)
+    so callers can extend an append-only buffer instead of re-uploading.
+    """
+
+    def __init__(self, capacity_bytes: int = 256 << 20) -> None:
+        self.capacity_bytes = capacity_bytes
+        self.hits = 0
+        self.misses = 0
+        self.stale = 0
+        self.evictions = 0
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Hashable, CacheEntry]" = OrderedDict()
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "stale": self.stale, "evictions": self.evictions,
+                "entries": len(self._entries), "bytes": self._bytes}
+
+    # -- operations --------------------------------------------------------
+    def get(self, key: Hashable, version: int) -> Any | None:
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                self.misses += 1
+                return None
+            if e.version != version:
+                self.stale += 1
+                return None
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return e.value
+
+    def get_any(self, key: Hashable) -> CacheEntry | None:
+        """The stored entry regardless of version (None if absent).  Used
+        by append-only buffer sync: a stale entry is a *prefix* of the new
+        content, so the caller uploads only the tail."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                self._entries.move_to_end(key)
+            return e
+
+    def put(self, key: Hashable, version: int, value: Any,
+            nbytes: int = 0) -> None:
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= old.nbytes
+            self._entries[key] = CacheEntry(version, value, int(nbytes))
+            self._bytes += int(nbytes)
+            while self._bytes > self.capacity_bytes and len(self._entries) > 1:
+                _, ev = self._entries.popitem(last=False)
+                self._bytes -= ev.nbytes
+                self.evictions += 1
+
+    def invalidate(self, key: Hashable) -> None:
+        with self._lock:
+            e = self._entries.pop(key, None)
+            if e is not None:
+                self._bytes -= e.nbytes
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0

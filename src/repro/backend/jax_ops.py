@@ -3,20 +3,36 @@
 ``JaxOps`` maps each ``Ops`` primitive onto the repo's Pallas fork-join
 kernels via their jit'd wrappers:
 
-* ``sort_kv``     -> ``kernels/sortmerge`` (bitonic fork-join KV sort)
+* ``sort_kv`` / ``sort_perm`` -> ``kernels/sortmerge`` tagged-key stable
+  bitonic sort (``(key - kmin) << tag_bits | lane`` packs the original
+  position into the low bits, making the unstable network stable and
+  letting the sorted low bits double as the permutation — no payload
+  lane).
 * ``join_pairs``  -> ``kernels/mergejoin`` (sorted probe + bounded expand)
 * ``unique_mask`` -> ``kernels/uniquefilter`` (neighbor-compare kernel)
 * ``semi_join``   -> sortmerge sort + sorted probe
-* ``dedup_rows``  -> KV sort + unique mask (1 column); stable lexsort +
-  neighbor compare as a jitted XLA composite for multi-column rows — the
-  bitonic network is not stable, so the paper's chained-sort lexsort cannot
-  run through it (documented trade-off, see backend/README.md).
+* ``dedup_rows``  -> chained tagged-key sorts (stable lexsort, §2.3's SU
+  filter) + neighbor compare, any column count, all through the Pallas
+  sorter.
+
+Width-overflow guard: tagging spends ``ceil(log2(cap))`` low bits, so a
+column whose key span needs more than ``63 - tag_bits`` bits cannot be
+tagged — those calls fall back to a jitted XLA stable sort / lexsort
+composite (still device-resident, just not through the Pallas network).
+Inputs whose real keys collide with a pad sentinel on a non-tagged path
+take the exact host path — a correctness guard, not a fast path.
+
+Device residency: a ``DeviceArrayCache`` keeps per-fact-type column
+buffers, packed join keys, and (sorted, perm) index mirrors resident
+across calls, keyed by the owning table's version counter (append-only
+columns let a stale buffer be extended by uploading only the tail).
+Every host<->device conversion goes through ``self.transfers`` — a
+``TransferCounter`` — so residency is measurable: repeated index builds
+and write-side dedups at an unchanged version cost zero transfers.
 
 Shape discipline: inputs are padded to power-of-two buckets with sentinel
-keys (+inf-like ``int64 max`` at the tail for sorts, ``int64 min`` on the
-join's right side) so the jit cache stays logarithmic in observed sizes
-instead of recompiling per call.  Inputs whose *real* keys collide with a
-sentinel take the exact host path — a correctness guard, not a fast path.
+keys (``int64 max`` at the tail for sorts, ``int64 min`` on the join's
+right side) so the jit cache stays logarithmic in observed sizes.
 
 Modes: ``auto`` lets the wrappers pick Pallas on TPU and the portable XLA
 lowering elsewhere; ``pallas`` forces the compiled Pallas path (TPU);
@@ -36,6 +52,7 @@ import threading
 import numpy as np
 
 from repro.backend.base import Ops
+from repro.backend.device_cache import DeviceArrayCache, TransferCounter
 from repro.backend.numpy_ops import NumpyOps
 
 INT64_MAX = np.iinfo(np.int64).max
@@ -54,7 +71,7 @@ def _jitted():
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.sortmerge.ops import device_sort, device_sort_kv
+    from repro.kernels.sortmerge.ops import device_sort
 
     @functools.partial(jax.jit, static_argnames=())
     def neighbor_mask(x):
@@ -70,26 +87,57 @@ def _jitted():
         return s[pos] == keys
 
     @functools.partial(jax.jit, static_argnames=())
-    def dedup_rows(cols, n_real):
+    def stable_sort_perm_xla(keys, n_real):
+        """Width-overflow fallback: stable (sorted, perm) via XLA lexsort.
+        Pads sort last via an explicit flag, so real keys may hold any
+        int64 value including the sentinels."""
+        cap = keys.shape[0]
+        lane = jnp.arange(cap, dtype=jnp.int64)
+        is_pad = lane >= n_real
+        order = jnp.lexsort((lane, keys, is_pad))  # last key is primary
+        skeys = jnp.where(lane < n_real, keys[order],
+                          jnp.iinfo(jnp.int64).max)
+        return skeys, order
+
+    @functools.partial(jax.jit, static_argnames=())
+    def dedup_rows_xla(cols, n_real):
+        """Width-overflow fallback: stable lexsort + neighbor compare."""
         cap = cols[0].shape[0]
-        order = jnp.lexsort(tuple(reversed(cols)))  # stable
+        lane = jnp.arange(cap, dtype=jnp.int64)
+        is_pad = lane >= n_real
+        order = jnp.lexsort((lane,) + tuple(reversed(cols)) + (is_pad,))
         diff = jnp.zeros(cap, bool).at[0].set(True)
         for c in cols:
             cs = c[order]
             diff = diff.at[1:].set(diff[1:] | (cs[1:] != cs[:-1]))
-        keep = diff & (order < n_real)  # drop the all-sentinel pad run
+        keep = diff & (order < n_real)
         rows = jnp.sort(jnp.where(keep, order, cap))
         return rows, jnp.sum(keep)
 
+    @functools.partial(jax.jit, static_argnames=())
+    def gather(vals, perm):
+        return vals[perm]
+
+    @functools.partial(jax.jit, static_argnames=())
+    def extend_buffer(buf, delta, n_old):
+        """Append-only column sync: overwrite [n_old, n_old+len(delta))
+        (delta is pre-padded with the buffer's own sentinel, so lanes past
+        the new length stay sentinels)."""
+        return jax.lax.dynamic_update_slice(buf, delta, (n_old,))
+
     return {"neighbor_mask": neighbor_mask, "semi_join": semi_join,
-            "dedup_rows": dedup_rows, "device_sort_kv": device_sort_kv}
+            "stable_sort_perm_xla": stable_sort_perm_xla,
+            "dedup_rows_xla": dedup_rows_xla, "gather": gather,
+            "extend_buffer": extend_buffer}
 
 
 class JaxOps(Ops):
-    """Bounded-shape, jit-cached device implementation of ``Ops``."""
+    """Bounded-shape, jit-cached, device-resident implementation of
+    ``Ops``."""
 
     def __init__(self, mode: str = "auto", block: int = 1024,
-                 min_bucket: int | None = None) -> None:
+                 min_bucket: int | None = None,
+                 cache_bytes: int = 256 << 20) -> None:
         if mode not in ("auto", "pallas", "interpret"):
             raise ValueError(f"unknown JaxOps mode: {mode!r}")
         self.mode = mode
@@ -100,10 +148,19 @@ class JaxOps(Ops):
         self.name = f"jax[{mode}]"
         self._host = NumpyOps()  # exact fallback for sentinel collisions
         self._lock = threading.Lock()
+        self.transfers = TransferCounter()
+        self.cache = DeviceArrayCache(cache_bytes)
 
     # -- plumbing ---------------------------------------------------------
     def _bucket(self, n: int) -> int:
         return max(self.min_bucket, 1 << (max(n, 1) - 1).bit_length())
+
+    @staticmethod
+    def _delta_bucket(n: int) -> int:
+        """Small power-of-two bucket for append deltas (keeps the
+        extend_buffer jit cache logarithmic without forcing full-size
+        re-uploads for small tails)."""
+        return max(32, 1 << (max(n, 1) - 1).bit_length())
 
     def _x64(self):
         from jax.experimental import enable_x64
@@ -119,7 +176,116 @@ class JaxOps(Ops):
         out[: len(a)] = a
         return out
 
+    def _to_dev(self, a: np.ndarray):
+        """Upload (counted).  Must run inside the x64 scope or int64
+        truncates to int32."""
+        import jax.numpy as jnp
+        self.transfers.count_h2d(a.nbytes)
+        return jnp.asarray(a)
+
+    def _to_host(self, a) -> np.ndarray:
+        out = np.asarray(a)
+        self.transfers.count_d2h(out.nbytes)
+        return out
+
+    def _sort_args(self) -> dict:
+        return {"block": self.block, "force_pallas": self.force_pallas,
+                "interpret": self.interpret}
+
+    # -- device-resident column buffers ------------------------------------
+    def _resident_column(self, cache_key, version: int, col: np.ndarray,
+                         fill: int) -> dict:
+        """Device buffer for an append-only int64 column.
+
+        Returns ``{"buf", "n", "kmin", "kmax"}`` with ``buf`` padded to a
+        power-of-two capacity with ``fill``.  A cached entry at an older
+        version whose length is a prefix of ``col`` is *extended* —
+        only the appended tail is uploaded.  Caller holds the lock and
+        the x64 scope.
+        """
+        key = ("colbuf", cache_key, fill)
+        n = len(col)
+        hit = self.cache.get(key, version)  # counts hit/miss/stale
+        if hit is not None and hit["n"] == n:
+            return hit
+        jt = _jitted()
+        e = self.cache.get_any(key)
+        if (e is not None and e.version < version and e.value["n"] < n):
+            old = e.value
+            n_old = old["n"]
+            cap = old["buf"].shape[0]
+            delta = col[n_old:]
+            dcap = self._delta_bucket(len(delta))
+            if n <= cap and n_old + dcap <= cap:
+                buf = jt["extend_buffer"](
+                    old["buf"], self._to_dev(self._pad(delta, dcap, fill)),
+                    n_old)
+                value = {"buf": buf, "n": n,
+                         "kmin": min(old["kmin"], int(delta.min())),
+                         "kmax": max(old["kmax"], int(delta.max()))}
+                self.cache.put(key, version, value, buf.nbytes)
+                return value
+        # full (re-)upload: first sight of this column, non-append-only
+        # change, or capacity growth
+        cap = self._bucket(n)
+        buf = self._to_dev(self._pad(col, cap, fill))
+        value = {"buf": buf, "n": n,
+                 "kmin": int(col.min()), "kmax": int(col.max())}
+        self.cache.put(key, version, value, buf.nbytes)
+        return value
+
     # -- primitives -------------------------------------------------------
+    def _stable_perm_device(self, buf, n: int, kmin: int, kmax: int):
+        """(sorted, perm) device arrays for a padded buffer: tagged-key
+        Pallas sort when the key span fits, XLA stable-lexsort fallback
+        otherwise.  Caller holds the lock and the x64 scope."""
+        from repro.kernels.sortmerge.ops import (device_stable_sort_perm,
+                                                 fits_tagged_width,
+                                                 tag_bits_for)
+        cap = buf.shape[0]
+        if fits_tagged_width(kmin, kmax, cap):
+            return device_stable_sort_perm(
+                buf, n, kmin, tag_bits=tag_bits_for(cap),
+                **self._sort_args())
+        return _jitted()["stable_sort_perm_xla"](buf, n)
+
+    def sort_perm(self, keys: np.ndarray, *, cache_key=None,
+                  version: int | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        keys = np.asarray(keys)
+        n = len(keys)
+        if n == 0:
+            return keys.astype(np.int64), np.empty(0, np.int64)
+        use_cache = cache_key is not None and version is not None
+        if use_cache:
+            hit = self.cache.get(("perm", cache_key), version)
+            if hit is not None:
+                return hit  # host mirrors: zero transfers
+        keys64 = keys.astype(np.int64, copy=False)
+        with self._lock, self._x64():
+            if use_cache:
+                colv = self._resident_column(cache_key, version, keys64,
+                                             INT64_MAX)
+                buf, kmin, kmax = colv["buf"], colv["kmin"], colv["kmax"]
+            else:
+                kmin, kmax = int(keys64.min()), int(keys64.max())
+                buf = self._to_dev(
+                    self._pad(keys64, self._bucket(n), INT64_MAX))
+            sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
+            # copy the slices: a view would pin the whole cap-sized base
+            # array while the cache accounts only the sliced bytes
+            out = (np.ascontiguousarray(self._to_host(sk)[:n]),
+                   np.ascontiguousarray(self._to_host(perm)[:n]))
+        if use_cache:
+            # hits hand out these exact arrays (aliased into engine index
+            # state): freeze them so an in-place write fails loudly
+            # instead of corrupting every later hit at this version
+            out[0].flags.writeable = False
+            out[1].flags.writeable = False
+            self.cache.put(("perm", cache_key), version, out,
+                           out[0].nbytes + out[1].nbytes)
+        return out
+
     def sort_kv(self, keys: np.ndarray, vals: np.ndarray
                 ) -> tuple[np.ndarray, np.ndarray]:
         keys = np.asarray(keys, np.int64)
@@ -127,20 +293,19 @@ class JaxOps(Ops):
         n = len(keys)
         if n == 0:
             return keys.copy(), vals.copy()
-        if keys.max() == INT64_MAX:  # collides with the pad sentinel
-            return self._host.sort_kv(keys, vals)
-        import jax.numpy as jnp
         cap = self._bucket(n)
-        kp = self._pad(keys, cap, INT64_MAX)
-        vp = self._pad(vals, cap, 0)
         with self._lock, self._x64():
-            ks, vs = _jitted()["device_sort_kv"](
-                jnp.asarray(kp), jnp.asarray(vp), block=self.block,
-                force_pallas=self.force_pallas, interpret=self.interpret)
-            ks, vs = np.asarray(ks), np.asarray(vs)
+            kp = self._to_dev(self._pad(keys, cap, INT64_MAX))
+            vp = self._to_dev(self._pad(vals, cap, 0))
+            sk, perm = self._stable_perm_device(
+                kp, n, int(keys.min()), int(keys.max()))
+            vs = _jitted()["gather"](vp, perm)
+            ks = self._to_host(sk)
+            vs = self._to_host(vs)
         return ks[:n], vs[:n]
 
-    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
+    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray, *,
+                   rkeys_key=None, rkeys_version: int | None = None
                    ) -> tuple[np.ndarray, np.ndarray]:
         lkeys = np.asarray(lkeys, np.int64)
         rkeys = np.asarray(rkeys, np.int64)
@@ -151,13 +316,19 @@ class JaxOps(Ops):
         # (MIN) must not match real left keys
         if lkeys.min() == INT64_MIN or rkeys.max() == INT64_MAX:
             return self._host.join_pairs(lkeys, rkeys)
-        import jax.numpy as jnp
+        import jax  # noqa: F401  (ensures backend init before lock)
         from repro.kernels.mergejoin.ops import merge_join_bounded
         cap = self._bucket(max(n, m))
+        use_cache = rkeys_key is not None and rkeys_version is not None
         with self._lock, self._x64():
             # conversions live inside enable_x64 or int64 truncates to int32
-            lp = jnp.asarray(self._pad(lkeys, self._bucket(n), INT64_MAX))
-            rp = jnp.asarray(self._pad(rkeys, self._bucket(m), INT64_MIN))
+            lp = self._to_dev(self._pad(lkeys, self._bucket(n), INT64_MAX))
+            if use_cache:
+                rp = self._resident_column(rkeys_key, rkeys_version, rkeys,
+                                           INT64_MIN)["buf"]
+            else:
+                rp = self._to_dev(
+                    self._pad(rkeys, self._bucket(m), INT64_MIN))
             while True:
                 li, ri, valid, total = merge_join_bounded(
                     lp, rp, out_cap=cap, block=self.block,
@@ -167,9 +338,9 @@ class JaxOps(Ops):
                 if total <= cap:
                     break
                 cap = self._bucket(total)  # one retry: exact total known
-            valid = np.asarray(valid)
-            li = np.asarray(li)[valid]
-            ri = np.asarray(ri)[valid]
+            valid = self._to_host(valid)
+            li = self._to_host(li)[valid]
+            ri = self._to_host(ri)[valid]
         return li.astype(np.int64), ri.astype(np.int64)
 
     def unique_mask(self, sorted_keys: np.ndarray) -> np.ndarray:
@@ -178,9 +349,8 @@ class JaxOps(Ops):
         if n == 0:
             return np.zeros(0, bool)
         # tail pads never influence mask lanes < n, so no sentinel guard
-        import jax.numpy as jnp
         with self._lock, self._x64():
-            xp = jnp.asarray(self._pad(x, self._bucket(n), INT64_MAX))
+            xp = self._to_dev(self._pad(x, self._bucket(n), INT64_MAX))
             if self._use_pallas():
                 from repro.kernels.uniquefilter.uniquefilter import \
                     unique_mask_sorted
@@ -188,7 +358,7 @@ class JaxOps(Ops):
                                           interpret=self.interpret)
             else:
                 mask = _jitted()["neighbor_mask"](xp)
-            mask = np.asarray(mask)
+            mask = self._to_host(mask)
         return mask[:n]
 
     def semi_join(self, keys: np.ndarray, bound_values: np.ndarray
@@ -200,30 +370,43 @@ class JaxOps(Ops):
             return np.zeros(n, bool)
         if keys.max() == INT64_MAX:  # would match the bound-side pads
             return self._host.semi_join(keys, bound)
-        import jax.numpy as jnp
         with self._lock, self._x64():
-            kp = jnp.asarray(self._pad(keys, self._bucket(n), INT64_MAX))
-            bp = jnp.asarray(self._pad(bound, self._bucket(m), INT64_MAX))
-            mask = np.asarray(_jitted()["semi_join"](
+            kp = self._to_dev(self._pad(keys, self._bucket(n), INT64_MAX))
+            bp = self._to_dev(self._pad(bound, self._bucket(m), INT64_MAX))
+            mask = self._to_host(_jitted()["semi_join"](
                 kp, bp, block=self.block, force_pallas=self.force_pallas,
                 interpret=self.interpret))
         return mask[:n]
 
     def dedup_rows(self, cols: list[np.ndarray]) -> np.ndarray:
+        from repro.kernels.sortmerge.ops import (device_dedup_rows,
+                                                 fits_tagged_width,
+                                                 tag_bits_for)
         cols = [np.asarray(c, np.int64) for c in cols]
         n = len(cols[0])
         if n == 0:
             return np.empty(0, np.int64)
-        if any(len(c) and c.max() == INT64_MAX for c in cols):
-            return self._host.dedup_rows(cols)
-        if len(cols) == 1:
-            s, perm = self.sort_kv(cols[0], np.arange(n, dtype=np.int64))
-            return np.sort(perm[self.unique_mask(s)])
-        import jax.numpy as jnp
         cap = self._bucket(n)
+        spans = [(int(c.min()), int(c.max())) for c in cols]
+        tagged_ok = all(fits_tagged_width(lo, hi, cap) for lo, hi in spans)
+        if not tagged_ok and any(hi == INT64_MAX for _, hi in spans):
+            # the XLA fallback is pad-flag based and sentinel-safe, but a
+            # width overflow AND a sentinel collision means genuinely
+            # adversarial keys: take the exact host path
+            return self._host.dedup_rows(cols)
+        import jax.numpy as jnp
         with self._lock, self._x64():
-            padded = tuple(jnp.asarray(self._pad(c, cap, INT64_MAX))
+            padded = tuple(self._to_dev(self._pad(c, cap, INT64_MAX))
                            for c in cols)
-            rows, count = _jitted()["dedup_rows"](padded, jnp.asarray(n))
-            rows = np.asarray(rows)[: int(count)]
+            if tagged_ok:
+                kmins = self._to_dev(np.asarray([lo for lo, _ in spans],
+                                                np.int64))
+                rows, count = device_dedup_rows(
+                    padded, n, kmins, tag_bits=tag_bits_for(cap),
+                    **self._sort_args())
+            else:
+                rows, count = _jitted()["dedup_rows_xla"](
+                    padded, jnp.asarray(n))
+            count = int(self._to_host(count))
+            rows = self._to_host(rows)[:count]
         return rows.astype(np.int64)

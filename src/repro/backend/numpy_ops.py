@@ -22,13 +22,17 @@ class NumpyOps(Ops):
         order = np.argsort(keys, kind="stable")
         return keys[order], vals[order]
 
-    def sort_perm(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        # native-dtype fast path: no int64 casts, no arange payload
+    def sort_perm(self, keys: np.ndarray, *, cache_key=None,
+                  version: int | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        # native-dtype fast path: no int64 casts, no arange payload.
+        # cache_key/version are device-residency hints — meaningless here.
         keys = np.asarray(keys)
         order = np.argsort(keys, kind="stable")
         return keys[order], order
 
-    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
+    def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray, *,
+                   rkeys_key=None, rkeys_version: int | None = None
                    ) -> tuple[np.ndarray, np.ndarray]:
         """Sorts the right side once, then resolves every left key with two
         binary searches; the expansion to pairs is pure index arithmetic

@@ -1,4 +1,14 @@
-"""Hiperfact core: the paper's contribution (see DESIGN.md §1-2)."""
+"""Hiperfact core: the paper's contribution (see DESIGN.md §1-2).
+
+Importing this package enables ``jax_enable_x64``: fact values and packed
+(id, attr) keys are genuine 64-bit lanes everywhere in the engine.  The
+flag is deliberately NOT set by the top-level ``repro`` package — the
+neural-model stack must trace with 32-bit defaults (see repro/__init__).
+"""
+
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)
 
 from repro.core.conditions import (AddAction, Condition, DeleteAction,
                                    ExternalAction, JoinTest, Rule, Var, cond,

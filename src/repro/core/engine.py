@@ -76,17 +76,56 @@ class InferStats:
     seconds: float = 0.0
 
 
+def _pack_keys(ids: np.ndarray, attrs: np.ndarray) -> np.ndarray:
+    return (np.asarray(ids).astype(np.int64) << 32) | (
+        np.asarray(attrs).astype(np.int64) & 0xFFFFFFFF)
+
+
+class _PackedKeyMemo:
+    """Per-engine memo of each table's packed (id, attr) key column.
+
+    The SU write path and the delete path anti-join every batch against
+    the *whole* table's packed keys; without memoization that column is
+    re-packed (host) and re-uploaded (device) per batch.  Columns are
+    append-only and version-stamped, so the memo extends incrementally and
+    the device backend keeps its copy resident under the same
+    ``(table.uid, version)`` identity.
+    """
+
+    def __init__(self) -> None:
+        self._memo: dict[int, tuple[int, np.ndarray]] = {}
+
+    def keys_for(self, table: TypedFactTable) -> np.ndarray:
+        cached = self._memo.get(table.uid)
+        if cached is not None and cached[0] == table.version:
+            return cached[1]
+        if cached is not None and len(cached[1]) <= table.n:
+            old = cached[1]
+            keys = np.concatenate([
+                old, _pack_keys(table.ids[len(old):],
+                                table.attrs[len(old):])])
+        else:
+            keys = _pack_keys(table.ids, table.attrs)
+        self._memo[table.uid] = (table.version, keys)
+        return keys
+
+
 def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
-                   vals: np.ndarray, ops: Ops | None = None) -> np.ndarray:
+                   vals: np.ndarray, ops: Ops | None = None,
+                   pk_memo: _PackedKeyMemo | None = None) -> np.ndarray:
     """SU-path bulk dedup against the table: vectorized sorted anti-join on
     the packed (id, attr) key with exact val verification."""
     if table.n == 0 or len(ids) == 0:
         return np.zeros(len(ids), bool)
     ops = ops or get_backend("numpy")
-    key_new = (ids.astype(np.int64) << 32) | (attrs.astype(np.int64) & 0xFFFFFFFF)
-    key_old = (table.ids.astype(np.int64) << 32) | (
-        table.attrs.astype(np.int64) & 0xFFFFFFFF)
-    li, ri = ops.join_pairs(key_new, key_old)
+    key_new = _pack_keys(ids, attrs)
+    if pk_memo is not None:
+        key_old = pk_memo.keys_for(table)
+    else:
+        key_old = _pack_keys(table.ids, table.attrs)
+    li, ri = ops.join_pairs(key_new, key_old,
+                            rkeys_key=("pk", table.uid),
+                            rkeys_version=table.version)
     if len(li) == 0:
         return np.zeros(len(ids), bool)
     ok = (vals[li] == table.vals[ri]) & table.alive[ri]
@@ -104,6 +143,7 @@ class HiperfactEngine:
         self._trees: DerivationTrees | None = None
         self._type_version: dict[str, int] = {}
         self._rule_seen_versions: dict[int, dict[str, int]] = {}
+        self._pk_memo = _PackedKeyMemo()
         self.load_seconds = 0.0
         self.last_infer: InferStats = InferStats()
         from repro.core.querycache import RankNCache
@@ -152,7 +192,8 @@ class HiperfactEngine:
                 keep = self.ops.dedup_rows([ids, attrs, vals])
                 ids, attrs, vals, valtypes = (
                     ids[keep], attrs[keep], vals[keep], valtypes[keep])
-            exists = _mask_existing(table, ids, attrs, vals, self.ops)
+            exists = _mask_existing(table, ids, attrs, vals, self.ops,
+                                    self._pk_memo)
             if exists.any():
                 fresh = ~exists
                 ids, attrs, vals, valtypes = (
@@ -168,11 +209,11 @@ class HiperfactEngine:
         table = self.store.tables.get(ftype)
         if table is None or table.n == 0 or len(ids) == 0:
             return 0
-        key_t = (table.ids.astype(np.int64) << 32) | (
-            table.attrs.astype(np.int64) & 0xFFFFFFFF)
-        key_d = (np.asarray(ids, np.int64) << 32) | (
-            np.asarray(attrs, np.int64) & 0xFFFFFFFF)
-        li, ri = self.ops.join_pairs(key_d, key_t)
+        key_t = self._pk_memo.keys_for(table)
+        key_d = _pack_keys(ids, attrs)
+        li, ri = self.ops.join_pairs(key_d, key_t,
+                                     rkeys_key=("pk", table.uid),
+                                     rkeys_version=table.version)
         if len(li) == 0:
             return 0
         ok = (np.asarray(vals, np.int64)[li] == table.vals[ri]) & table.alive[ri]

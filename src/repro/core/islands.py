@@ -193,6 +193,11 @@ def _lookup_condition(
     of the condition's variables, the fetched rows are semi-join restricted
     to the bound value set before the join — the paper's rank-raising lookup.
     DR performs the plain RL lookup.
+
+    The RL fetch itself is a rank-1 index probe: with the device backend
+    it binary-searches the index's cached host mirrors, so repeated
+    lookups between fact writes issue zero host<->device transfers (see
+    backend/README.md §Device residency).
     """
     table = store.tables.get(c.fact_type)
     rows = (rl_fn or rl)(store, c)

@@ -12,10 +12,13 @@
 
 The bulk primitives themselves (merge join, unique filter, semi join) live
 in ``repro.backend`` — ``NumpyOps`` holds the host twins that used to be
-inline here, ``JaxOps`` routes them through the ``kernels/`` Pallas ops.
-This module keeps the layout structures (CR/RR bindings) plus thin
-module-level delegates so existing callers keep working; everything that
-sits on the hot path accepts an ``ops`` argument for backend dispatch.
+inline here, ``JaxOps`` routes them through the ``kernels/`` Pallas ops
+(tagged-key stable sorts: sorts and the SU dedup pick the same
+representative rows on every backend; only join pair order is
+backend-specific).  This module keeps the layout structures (CR/RR
+bindings) plus thin module-level delegates so existing callers keep
+working; everything that sits on the hot path accepts an ``ops`` argument
+for backend dispatch.
 """
 
 from __future__ import annotations
@@ -52,7 +55,9 @@ def semi_join_rows(rows_keys: np.ndarray, bound_values: np.ndarray,
 def unique_rows_sorted(cols: list[np.ndarray],
                        ops: Ops | None = None) -> np.ndarray:
     """SU unique filter: indices selecting one representative of each
-    distinct row of ``zip(*cols)`` (lexsort + neighbor compare)."""
+    distinct row of ``zip(*cols)`` (stable lexsort + neighbor compare; on
+    the device backend the lexsort is a chain of tagged-key Pallas sorts,
+    keeping the same first-occurrence representative as numpy)."""
     return (ops or _NUMPY_OPS).dedup_rows(cols)
 
 

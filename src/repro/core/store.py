@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import abc
 import enum
+import itertools
 
 import numpy as np
 
@@ -44,7 +45,15 @@ class Rank1Index(abc.ABC):
     """Per-fact-type inverted index over the three triple components.
 
     Index builds are permutation sorts (fork-join instance 4), so they run
-    through the execution backend's ``sort_kv``.
+    through the execution backend's ``sort_perm`` — stable on every
+    backend (the device path tags the bitonic sort's keys with their lane
+    index), so permutations are bit-identical across backends.
+
+    Each build passes the owning table's ``(uid, version)`` as a cache
+    identity: the device backend keeps the column and its (sorted, perm)
+    mirrors resident across calls, re-uploading only appended tails when
+    the version advances (columns are append-only; deletes are tombstones
+    that never touch them).
     """
 
     name: str = "?"
@@ -52,11 +61,15 @@ class Rank1Index(abc.ABC):
     def __init__(self, ops: Ops | None = None) -> None:
         self.ops = ops or get_backend("numpy")
 
-    def _perm_sort(self, col: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """(sorted column, permutation) via the backend's KV sort.  Not
-        stable on the device backend (bitonic network); lookups only ever
-        consume row *sets*, so equal-key order is free to differ."""
-        skeys, perm = self.ops.sort_perm(col)
+    def _perm_sort(self, col: np.ndarray, table: "TypedFactTable | None" = None,
+                   comp: "Component | int | None" = None, variant: str = ""
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """(sorted column, permutation) via the backend's stable sort."""
+        kw = {}
+        if table is not None and comp is not None:
+            kw = {"cache_key": (table.uid, int(comp), variant),
+                  "version": table.version}
+        skeys, perm = self.ops.sort_perm(col, **kw)
         return skeys.astype(col.dtype, copy=False), perm.astype(np.int32)
 
     @abc.abstractmethod
@@ -96,7 +109,8 @@ class SortedArrayIndex(Rank1Index):
     def rebuild(self, table: "TypedFactTable") -> None:
         for comp in Component:
             col = table.column(comp)
-            self._sorted[comp], self._perm[comp] = self._perm_sort(col)
+            self._sorted[comp], self._perm[comp] = self._perm_sort(
+                col, table, comp)
 
     def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
         # AI has no incremental form in the paper (it is the load-time
@@ -151,7 +165,11 @@ class HashIndex(Rank1Index):
         for comp in Component:
             col = table.column(comp)
             b = self._bucket_of(col)
-            self._bucket_sorted[comp], self._perm[comp] = self._perm_sort(b)
+            # the bucket-id column is a pure elementwise map of an
+            # append-only column, so it is append-only too: safe to cache
+            # under the same (uid, version) identity, distinct variant
+            self._bucket_sorted[comp], self._perm[comp] = self._perm_sort(
+                b, table, comp, variant="hash")
 
     def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
         self.rebuild(table)  # CSR append == rebuild; see LPIM for amortization
@@ -208,7 +226,8 @@ class PagedIndex(Rank1Index):
         self._base_n = table.n
         for comp in Component:
             col = table.column(comp)
-            self._sorted[comp], self._perm[comp] = self._perm_sort(col)
+            self._sorted[comp], self._perm[comp] = self._perm_sort(
+                col, table, comp)
 
     def append(self, table: "TypedFactTable", start: int, stop: int) -> None:
         self._n = stop
@@ -256,6 +275,9 @@ INDEX_BACKENDS = {
 }
 
 
+_TABLE_UID = itertools.count()
+
+
 class TypedFactTable:
     """Append-only columnar table for one fact type + its rank-1 index.
 
@@ -263,15 +285,24 @@ class TypedFactTable:
     ``alive`` column; lookups filter them out lazily.
     Capacity grows in page units (memory-pool discipline) so appends never
     reallocate per-row.
+
+    ``version`` counts *column* mutations: it bumps on every append batch
+    and is the invalidation token for device-resident index state (the
+    engine's per-type counters advance in lock-step on writes).  Deletes
+    are tombstones — columns are untouched, so the version (and any
+    resident device copy of the columns) stays valid.  ``uid`` is a
+    process-unique id namespacing cache keys across tables and engines.
     """
 
     __slots__ = ("ftype", "n", "_cap", "_id", "_attr", "_val", "_valtype",
-                 "_alive", "index", "_key_set")
+                 "_alive", "index", "_key_set", "version", "uid")
 
     def __init__(self, ftype: str, index_backend: str = "AI",
                  ops: Ops | None = None) -> None:
         self.ftype = ftype
         self.n = 0
+        self.version = 0
+        self.uid = next(_TABLE_UID)
         self._cap = PAGE_ROWS
         self._id = np.empty(self._cap, np.int32)
         self._attr = np.empty(self._cap, np.int32)
@@ -367,7 +398,8 @@ class TypedFactTable:
         self._valtype[start : start + m] = valtypes
         self._alive[start : start + m] = True
         self.n = start + m
-        self.index.append(self, start, self.n)
+        self.version += 1  # before the index build: it caches under the
+        self.index.append(self, start, self.n)  # post-append version
         return m
 
     def contains(self, iid: int, attr: int, val: int) -> bool:

@@ -59,14 +59,19 @@ def spec_for(shape: tuple[int, ...], axes: tuple[str | None, ...],
     parts = []
     for dim, ax in zip(shape, axes):
         entry: tuple[str, ...] | None = None
+        composite = False
         if ax is not None and ax in rules:
+            # composite rules (FSDP over (pod, data)) keep tuple form even
+            # when the mesh only has one of the axes, so specs compare
+            # equal across single- and multi-pod meshes
+            composite = len(rules[ax]) > 1
             group = _present_axes(rules[ax], mesh)
             if group and not (set(group) & used):
                 size = _group_size(group, mesh)
                 if size > 1 and dim % size == 0:
                     entry = group
                     used.update(group)
-        parts.append(entry if entry is None or len(entry) > 1
+        parts.append(entry if entry is None or composite
                      else entry[0])
     while parts and parts[-1] is None:
         parts.pop()

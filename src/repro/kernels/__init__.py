@@ -1,3 +1,14 @@
+"""Pallas fork-join kernels for the Hiperfact device algebra.
+
+Importing this package enables ``jax_enable_x64`` — sort keys and packed
+fact lanes are genuine int64 (see repro/__init__ for why the flag is
+scoped here instead of the package root).
+"""
+
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)
+
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.

@@ -14,8 +14,8 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     q5 = q.reshape(B, Sq, Hkv, G, hd)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q5.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(hd)
-    qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
-    ki = jnp.arange(Skv)[None, :]
+    qi = jnp.arange(Sq, dtype=jnp.int32)[:, None] + (Skv - Sq)
+    ki = jnp.arange(Skv, dtype=jnp.int32)[None, :]
     mask = jnp.ones((Sq, Skv), bool)
     if causal:
         mask &= qi >= ki

@@ -3,6 +3,22 @@
 ``device_sort`` / ``device_sort_kv`` pick the Pallas path on TPU and fall
 back to the XLA sort elsewhere (the CPU container runs the kernels only
 under ``interpret=True`` in tests; see DESIGN.md §6).
+
+Tagged-key stable variants: the bitonic network is not order-preserving,
+so the paper's chained-sort lexsort (SU unique filter, §2.3) cannot run
+through it directly.  ``device_stable_sort_perm`` packs
+``(key - kmin) << tag_bits | lane_index`` into a single int64 so that the
+*unstable* bitonic sort of the tagged keys is a *stable* sort of the raw
+keys — equal keys order by lane index, i.e. original position.  All
+tagged values are distinct, so the low bits of the sorted array ARE the
+permutation: no payload lane, half the VMEM traffic of the KV network.
+``device_dedup_rows`` chains one tagged sort per column (least-significant
+first) to get exactly numpy's stable ``lexsort``, then neighbor-compares.
+
+Width guard: tagging needs ``ceil(log2(cap))`` low bits, so the key span
+``kmax - kmin`` must fit the remaining ``63 - tag_bits`` — the *caller*
+checks ``fits_tagged_width`` and falls back to the XLA lexsort composite
+otherwise (see backend/jax_ops.py).
 """
 
 import functools
@@ -32,3 +48,89 @@ def device_sort_kv(keys: jnp.ndarray, vals: jnp.ndarray, block: int = 1024,
         return bitonic_sort_kv(keys, vals, block=block, interpret=interpret)
     order = jnp.argsort(keys, stable=True)
     return keys[order], vals[order]
+
+
+# ---------------------------------------------------------------------------
+# Tagged-key stable variants
+
+
+def tag_bits_for(cap: int) -> int:
+    """Low bits needed to tag every lane of a padded buffer of size ``cap``."""
+    return max(1, (cap - 1).bit_length())
+
+
+def fits_tagged_width(kmin: int, kmax: int, cap: int) -> bool:
+    """True iff keys spanning [kmin, kmax] can be tagged at buffer size
+    ``cap``: the span plus one pad code must fit ``63 - tag_bits`` bits
+    (python ints — no intermediate overflow)."""
+    span = int(kmax) - int(kmin) + 1  # pad code is span itself -> +1 codes
+    return span + 1 <= (1 << (63 - tag_bits_for(cap)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tag_bits", "block", "force_pallas", "interpret"))
+def device_stable_sort_perm(keys: jnp.ndarray, n_real, kmin, *,
+                            tag_bits: int, block: int = 1024,
+                            force_pallas: bool = False,
+                            interpret: bool = False):
+    """Stable (sorted keys, permutation) of ``keys[:n_real]``.
+
+    ``keys``: int64, padded to a power-of-two ``cap`` (pad content is
+    ignored — pad lanes are re-tagged past every real key).  Returns
+    full-``cap`` arrays; lanes >= n_real hold int64-max / their own index.
+    """
+    cap = keys.shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int64)
+    real = lane < n_real
+    base = jnp.asarray(kmin, jnp.int64)
+    # pad lanes get the max representable code for this width, strictly
+    # above every real code (the caller's fits_tagged_width guarantees
+    # real codes stay <= max_code - 1)
+    max_code = (jnp.int64(1) << (63 - tag_bits)) - 1
+    tagged = jnp.where(real,
+                       ((keys - base) << tag_bits) | lane,
+                       (max_code << tag_bits) | lane)
+    s = device_sort(tagged, block=block, force_pallas=force_pallas,
+                    interpret=interpret)
+    mask = (jnp.int64(1) << tag_bits) - 1
+    perm = s & mask
+    skeys = jnp.where(lane < n_real, (s >> tag_bits) + base,
+                      jnp.iinfo(jnp.int64).max)
+    return skeys, perm
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tag_bits", "block", "force_pallas", "interpret"))
+def device_dedup_rows(cols: tuple, n_real, kmins: jnp.ndarray, *,
+                      tag_bits: int, block: int = 1024,
+                      force_pallas: bool = False, interpret: bool = False):
+    """SU unique filter over multi-column rows via chained tagged sorts.
+
+    ``cols``: tuple of int64 arrays padded to ``cap``; ``kmins``: int64
+    [ncols] per-column minima (host-computed).  Chains one stable tagged
+    sort per column, least-significant first — exactly numpy's
+    ``lexsort(tuple(reversed(cols)))`` — then keeps the first row of each
+    equal run.  Returns (ascending kept row ids padded with ``cap``,
+    kept count).
+    """
+    cap = cols[0].shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int64)
+    mask = (jnp.int64(1) << tag_bits) - 1
+    max_code = (jnp.int64(1) << (63 - tag_bits)) - 1
+    order = lane
+    for ci in range(len(cols) - 1, -1, -1):
+        k = cols[ci][order]
+        real = order < n_real
+        tagged = jnp.where(real,
+                           ((k - kmins[ci]) << tag_bits) | lane,
+                           (max_code << tag_bits) | lane)
+        s = device_sort(tagged, block=block, force_pallas=force_pallas,
+                        interpret=interpret)
+        order = order[s & mask]
+    diff = jnp.zeros(cap, bool).at[0].set(True)
+    for c in cols:
+        cs = c[order]
+        diff = diff.at[1:].set(diff[1:] | (cs[1:] != cs[:-1]))
+    keep = diff & (order < n_real)
+    rows = jnp.sort(jnp.where(keep, order, cap))
+    return rows, jnp.sum(keep)

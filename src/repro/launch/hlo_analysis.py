@@ -174,11 +174,30 @@ class HloModule:
 
     # -- metrics ----------------------------------------------------------------
     def _operand_names(self, op: Op) -> list[str]:
-        m = re.search(rf"{op.kind}\(([^)]*)\)", op.line)
-        if not m:
+        """Operand names of ``op``.
+
+        Compiled-HLO text prints operands with their shapes and possibly
+        tuple-typed (nested-paren) annotations::
+
+            dot(f32[4,64]{1,0} %copy.1, f32[64,16]{1,0} %all-gather.1)
+            while((s32[], f32[4,16]{1,0}) %tuple.2), condition=...
+
+        so scan to the *balanced* closing paren and pull every ``%name``
+        token — trailing attributes (metadata, to_apply) sit outside it.
+        """
+        start = op.line.find(op.kind + "(")
+        if start < 0:
             return []
-        return [t.strip().lstrip("%") for t in m.group(1).split(",")
-                if t.strip().startswith("%")]
+        i = start + len(op.kind)
+        depth = 0
+        for j in range(i, len(op.line)):
+            if op.line[j] == "(":
+                depth += 1
+            elif op.line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    return re.findall(r"%([\w\.\-]+)", op.line[i:j])
+        return re.findall(r"%([\w\.\-]+)", op.line[i:])
 
     def dot_flops(self, op: Op) -> float:
         """2 * prod(result) * prod(contracting dims of lhs)."""

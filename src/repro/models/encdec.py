@@ -188,9 +188,9 @@ class EncDecLM:
             x = apply_norm(bp["ln1"], hh, cfg.norm)
             q, k, v = project_qkv(bp["attn"], x, cfg, lens[:, None], hints,
                                   rope_on=False)
-            kc = c["k"].at[jnp.arange(B), lens].set(k[:, 0])
-            vc = c["v"].at[jnp.arange(B), lens].set(v[:, 0])
-            valid = jnp.arange(kc.shape[1])[None, :] <= lens[:, None]
+            kc = c["k"].at[jnp.arange(B, dtype=jnp.int32), lens].set(k[:, 0])
+            vc = c["v"].at[jnp.arange(B, dtype=jnp.int32), lens].set(v[:, 0])
+            valid = jnp.arange(kc.shape[1], dtype=jnp.int32)[None, :] <= lens[:, None]
             a = decode_attention(q[:, 0], kc, vc, valid, hh.dtype)
             hh = hh + dense(bp["attn"]["o"],
                             a.reshape(B, -1))[:, None, :]

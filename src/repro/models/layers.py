@@ -193,8 +193,8 @@ def full_attention(q, k, v, *, causal: bool, window: int = 0,
         s = s + bias
     Skv = k.shape[1]
     if causal:
-        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
-        ki = jnp.arange(Skv)[None, :]
+        qi = jnp.arange(Sq, dtype=jnp.int32)[:, None] + (Skv - Sq)
+        ki = jnp.arange(Skv, dtype=jnp.int32)[None, :]
         m = qi >= ki
         if window > 0:
             m &= qi - ki < window
@@ -257,8 +257,8 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
     def make_mask_fn(q_start):
         def mask_fn(s, k_start):
-            qi = (jnp.arange(q_chunk) + q_start + offset)[:, None]
-            ki = (jnp.arange(kv_chunk) + k_start)[None, :]
+            qi = (jnp.arange(q_chunk, dtype=jnp.int32) + q_start + offset)[:, None]
+            ki = (jnp.arange(kv_chunk, dtype=jnp.int32) + k_start)[None, :]
             m = ki < Skv0                      # mask kv padding
             if causal:
                 m &= qi >= ki

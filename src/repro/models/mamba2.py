@@ -122,7 +122,7 @@ def apply_ssd(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS,
         # intra-chunk (the Pallas-kernel part): masked decay-weighted gram
         gram = jnp.einsum("bqn,bkn->bqk", Cq, Bq)              # [B,Q,Q]
         decay = cq[:, :, None, :] - cq[:, None, :, :]          # [B,Q,K,nh]
-        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        mask = (jnp.arange(Q, dtype=jnp.int32)[:, None] >= jnp.arange(Q, dtype=jnp.int32)[None, :])
         M = jnp.where(mask[None, :, :, None],
                       jnp.exp(decay), 0.0) * gram[..., None]   # [B,Q,K,nh]
         y_intra = jnp.einsum("bqkh,bkhp->bqhp", M, uq)

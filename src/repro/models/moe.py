@@ -94,7 +94,7 @@ def _moe_gspmd(p: dict, x: jnp.ndarray, cfg, hints: Hints = NO_HINTS
     e_sorted = e_flat[order]
     # position within each expert's run of the sorted pair list
     starts = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=e_sorted.dtype))
-    pos_in_e = jnp.arange(T * k) - starts[e_sorted]
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
     kept = pos_in_e < C
     slot = jnp.where(kept, e_sorted * C + pos_in_e, E * C)     # E*C = drop
     tok_sorted = order // k                                    # token of pair
@@ -137,7 +137,7 @@ def _route_and_pack(xf, top_e, E_loc: int, ms: int, Cs: int):
     e_s = e_flat[order]
     dest_s = e_s // E_loc
     starts = jnp.searchsorted(dest_s, jnp.arange(ms, dtype=dest_s.dtype))
-    pos = jnp.arange(T * k) - starts[dest_s]
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[dest_s]
     kept = pos < Cs
     slot = jnp.where(kept, dest_s * Cs + pos, ms * Cs)
     send_x = jnp.zeros((ms * Cs, xf.shape[1]), xf.dtype)
@@ -154,7 +154,7 @@ def _local_expert_ffn(rx, re, gw, uw, dw, E_loc: int, C2: int):
     order2 = jnp.argsort(re)                   # invalid ids (E_loc) sort last
     re_s = re[order2]
     starts2 = jnp.searchsorted(re_s, jnp.arange(E_loc, dtype=re_s.dtype))
-    pos2 = jnp.arange(Trecv) - starts2[jnp.clip(re_s, 0, E_loc - 1)]
+    pos2 = jnp.arange(Trecv, dtype=jnp.int32) - starts2[jnp.clip(re_s, 0, E_loc - 1)]
     kept2 = (re_s < E_loc) & (pos2 < C2)
     slot2 = jnp.where(kept2, re_s * C2 + pos2, E_loc * C2)
     buf = jnp.zeros((E_loc * C2, d), rx.dtype)

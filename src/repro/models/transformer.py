@@ -155,7 +155,7 @@ def _attn_cache_from_prefill(k, v, kind, cfg, max_len):
             vw = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
             pw = jnp.pad(pos, (pad, 0), constant_values=-1)
         # ring layout: entry for absolute position p lives at slot p % W
-        slots = jnp.where(pw >= 0, pw % W, jnp.arange(W))
+        slots = jnp.where(pw >= 0, pw % W, jnp.arange(W, dtype=jnp.int32))
         kr = jnp.zeros_like(kw).at[:, slots].set(kw)
         vr = jnp.zeros_like(vw).at[:, slots].set(vw)
         pr = jnp.full((W,), -1, jnp.int32).at[slots].set(pw)
@@ -182,17 +182,17 @@ def apply_block_decode(p: dict, h: jnp.ndarray, kind: BlockKind,
         if kind == BlockKind.LOCAL_ATTN:
             W = cfg.window
             slot = lens % W
-            kc = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
-            vc = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
-            pc = cache["pos"].at[jnp.arange(B), slot].set(lens)
+            kc = cache["k"].at[jnp.arange(B, dtype=jnp.int32), slot].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(B, dtype=jnp.int32), slot].set(v[:, 0])
+            pc = cache["pos"].at[jnp.arange(B, dtype=jnp.int32), slot].set(lens)
             valid = (pc >= 0) & (pc >= (lens - W + 1)[:, None]) \
                 & (pc <= lens[:, None])
             cache = {"k": kc, "v": vc, "pos": pc}
         else:
             S = cache["k"].shape[1]
-            kc = cache["k"].at[jnp.arange(B), lens].set(k[:, 0])
-            vc = cache["v"].at[jnp.arange(B), lens].set(v[:, 0])
-            valid = jnp.arange(S)[None, :] <= lens[:, None]
+            kc = cache["k"].at[jnp.arange(B, dtype=jnp.int32), lens].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(B, dtype=jnp.int32), lens].set(v[:, 0])
+            valid = jnp.arange(S, dtype=jnp.int32)[None, :] <= lens[:, None]
             cache = {"k": kc, "v": vc}
         a = decode_attention(q[:, 0], kc, vc, valid, h.dtype)
         h = h + dense(p["attn"]["o"], a.reshape(B, 1, -1)[..., 0, :])[:, None, :]
@@ -268,7 +268,10 @@ def cache_spec(cfg: ArchConfig, B: int, max_len: int) -> dict:
 
 
 def _embed_tokens(params, tokens, cfg, hints):
-    h = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    # int32 gather indices: in processes that co-import the fact engine
+    # (repro.core/repro.kernels enable jax_enable_x64), i64 indices leak
+    # s64/s32 compares into the SPMD partitioner's clamps
+    h = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens.astype(jnp.int32)]
     return hints.apply(h, "residual")
 
 
@@ -327,6 +330,7 @@ def chunked_ce(h: jnp.ndarray, head_w: jnp.ndarray, labels: jnp.ndarray,
     assert S % chunk == 0
     nc = S // chunk
     hc = h.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    labels = labels.astype(jnp.int32)  # i32 take_along_axis/scatter indices
     lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
 
     @jax.checkpoint
@@ -337,7 +341,7 @@ def chunked_ce(h: jnp.ndarray, head_w: jnp.ndarray, labels: jnp.ndarray,
                             preferred_element_type=jnp.float32)
         logits = hints.apply(logits, "logits")
         if n_vocab and n_vocab < logits.shape[-1]:
-            logits = jnp.where(jnp.arange(logits.shape[-1]) < n_vocab,
+            logits = jnp.where(jnp.arange(logits.shape[-1], dtype=jnp.int32) < n_vocab,
                                logits, -jnp.inf)
         lse = jax.nn.logsumexp(logits, axis=-1)
         picked = jnp.take_along_axis(

@@ -88,21 +88,35 @@ class Trainer:
         step_fn = jax.jit(self.step_fn, donate_argnums=(0,))
         timer = StepTimer()
         losses = []
-        for step in range(start, self.tcfg.steps):
-            batch = self.loader(step)
-            batch = jax.tree.map(jax.numpy.asarray, batch)
-            timer.start()
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
-            dt = timer.stop()
-            losses.append(loss)
-            self.monitor.heartbeat("worker0", step)
-            if step % self.tcfg.log_every == 0:
-                log.info("step %d loss %.4f (%.0f ms)", step, loss, dt * 1e3)
-            if self.ckpt is not None and (step + 1) % self.tcfg.ckpt_every == 0:
-                self.ckpt.save_async(step + 1, state)
-            if not np.isfinite(loss):
-                raise FloatingPointError(f"non-finite loss at step {step}")
+        try:
+            for step in range(start, self.tcfg.steps):
+                batch = self.loader(step)
+                batch = jax.tree.map(jax.numpy.asarray, batch)
+                timer.start()
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = timer.stop()
+                losses.append(loss)
+                self.monitor.heartbeat("worker0", step)
+                if step % self.tcfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.0f ms)", step, loss,
+                             dt * 1e3)
+                if self.ckpt is not None and \
+                        (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save_async(step + 1, state)
+                if not np.isfinite(loss):
+                    raise FloatingPointError(
+                        f"non-finite loss at step {step}")
+        except Exception:
+            # Crash path: the supervisor will restart from the latest
+            # *committed* checkpoint — let any in-flight async save finish
+            # committing before the failure propagates, or the restart
+            # silently falls back to an older step (lost work).
+            # (Exception, not BaseException: Ctrl-C should stay prompt
+            # rather than block on a write to slow storage.)
+            if self.ckpt is not None:
+                self.ckpt.wait()
+            raise
         if self.ckpt is not None:
             self.ckpt.save(self.tcfg.steps, state)
             self.ckpt.wait()

@@ -1,11 +1,15 @@
 """Cross-backend parity: JaxOps ≡ NumpyOps, primitive and end-to-end.
 
-The execution backend swaps the hot-path primitives (ISSUE: kernels ->
-backend -> core joins/store -> engine config); both implementations must
-stay oracle-equivalent.  Primitives are compared as sets/values (pair
-order and which duplicate survives dedup are unspecified — the bitonic
-network is not stable); end-to-end runs compare inference fixpoints and
-query result sets over the Table-1 config grid.
+The execution backend swaps the hot-path primitives (kernels -> backend ->
+core joins/store -> engine config); both implementations must stay
+oracle-equivalent.  Join pair *order* is unspecified, but sorts and the
+SU dedup are now **stable on every backend** (the device path packs the
+lane index into the bitonic sort's keys — tagged-key trick), so
+permutations and surviving-duplicate choices are compared bit-exactly.
+End-to-end runs compare inference fixpoints and query result sets over
+the Table-1 config grid, and the device-residency suite asserts the
+``JaxOps`` transfer counter: cached index state costs zero transfers at
+an unchanged table version and delta-only uploads on append.
 """
 
 import dataclasses
@@ -115,6 +119,205 @@ def test_empty_inputs(name):
 
 # (the semi_join_rows empty-bound regression lives in tests/test_joins.py,
 #  next to the function under test)
+
+
+# ---------------------------------------------------------------------------
+# Tagged-key stable sort: exact (not just set-wise) parity
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_sort_perm_stable_exact(ops):
+    """The tagged-key bitonic sort is stable: the permutation matches
+    numpy's stable argsort bit-exactly, duplicates and all."""
+    keys = RNG.randint(-30, 30, 700).astype(np.int64)  # many duplicates
+    sk, perm = ops.sort_perm(keys)
+    np.testing.assert_array_equal(perm, np.argsort(keys, kind="stable"))
+    np.testing.assert_array_equal(sk, np.sort(keys, kind="stable"))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_sort_kv_stable_exact(ops):
+    keys = RNG.randint(0, 10, 400).astype(np.int64)
+    vals = np.arange(400, dtype=np.int64) * 7
+    gk, gv = ops.sort_kv(keys, vals)
+    wk, wv = HOST.sort_kv(keys, vals)
+    np.testing.assert_array_equal(gk, wk)
+    np.testing.assert_array_equal(gv, wv)  # stability -> exact payloads
+
+
+@pytest.mark.parametrize("ops", device_backends())
+@pytest.mark.parametrize("ncols", [1, 2, 4])
+def test_dedup_rows_stable_exact(ops, ncols):
+    """Multi-column dedup runs the chained tagged-key Pallas sorts — the
+    surviving representative of each duplicate row is exactly the one
+    numpy's stable lexsort keeps."""
+    cols = [RNG.randint(-5, 6, 300).astype(np.int64) for _ in range(ncols)]
+    np.testing.assert_array_equal(ops.dedup_rows(cols),
+                                  HOST.dedup_rows(cols))
+
+
+# ---------------------------------------------------------------------------
+# Sentinel-collision host fallbacks and tagged-width overflow
+
+
+INT64_MAX = np.iinfo(np.int64).max
+INT64_MIN = np.iinfo(np.int64).min
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_sentinel_collision_join(ops):
+    # real keys equal to the pad sentinels must not fabricate or drop
+    # pairs: MAX on the right collides with left pads, MIN on the left
+    # with right pads -> exact host path
+    l = np.asarray([5, INT64_MIN, 5, 9], np.int64)
+    r = np.asarray([5, 9, INT64_MAX, INT64_MIN], np.int64)
+    gli, gri = ops.join_pairs(l, r)
+    assert pair_set(gli, gri) == pair_set(*HOST.join_pairs(l, r))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_sentinel_collision_semi_join(ops):
+    keys = np.asarray([1, INT64_MAX, 3, INT64_MIN], np.int64)
+    bound = np.asarray([INT64_MAX, 3], np.int64)
+    np.testing.assert_array_equal(ops.semi_join(keys, bound),
+                                  HOST.semi_join(keys, bound))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_sentinel_keys_sort(ops):
+    # the tagged path re-tags pad lanes by position, so MAX/MIN are legal
+    # *key values* for sorts — no host fallback needed, still stable
+    keys = np.asarray([INT64_MAX, 0, INT64_MAX, INT64_MIN, 0], np.int64)
+    vals = np.arange(5, dtype=np.int64)
+    gk, gv = ops.sort_kv(keys, vals)
+    wk, wv = HOST.sort_kv(keys, vals)
+    np.testing.assert_array_equal(gk, wk)
+    np.testing.assert_array_equal(gv, wv)
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_tagged_width_overflow_fallback(ops):
+    """Keys spanning (almost) the whole int64 range cannot be tagged —
+    sort_perm/dedup_rows fall back to the XLA stable composite with the
+    same exact-stability contract."""
+    from repro.kernels.sortmerge.ops import fits_tagged_width
+    keys = RNG.choice([INT64_MIN + 2, -7, 0, 7, INT64_MAX - 2],
+                      200).astype(np.int64)
+    assert not fits_tagged_width(int(keys.min()), int(keys.max()), 1024)
+    sk, perm = ops.sort_perm(keys)
+    np.testing.assert_array_equal(perm, np.argsort(keys, kind="stable"))
+    np.testing.assert_array_equal(sk, np.sort(keys))
+    cols = [keys, RNG.randint(0, 3, 200).astype(np.int64)]
+    np.testing.assert_array_equal(ops.dedup_rows(cols),
+                                  HOST.dedup_rows(cols))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_width_overflow_and_sentinel_dedup_host(ops):
+    # width overflow AND a sentinel collision: genuinely adversarial keys
+    # take the exact host path
+    cols = [np.asarray([INT64_MAX, INT64_MIN, INT64_MAX, 0], np.int64),
+            np.asarray([1, 2, 1, 2], np.int64)]
+    np.testing.assert_array_equal(ops.dedup_rows(cols),
+                                  HOST.dedup_rows(cols))
+
+
+# ---------------------------------------------------------------------------
+# Device residency: the transfer counter is the measurement, not vibes
+
+
+def fresh_jax_ops():
+    return JaxOps(mode="interpret", block=256)
+
+
+def test_sort_perm_cache_zero_transfer_on_repeat():
+    ops = fresh_jax_ops()
+    col = RNG.randint(0, 1000, 2000).astype(np.int64)
+    s1, p1 = ops.sort_perm(col, cache_key=("t", 1), version=1)
+    snap = ops.transfers.snapshot()
+    s2, p2 = ops.sort_perm(col, cache_key=("t", 1), version=1)
+    d = ops.transfers.delta(snap)
+    assert d.h2d_calls == 0 and d.d2h_calls == 0
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_sort_perm_cache_delta_upload_on_append():
+    ops = fresh_jax_ops()
+    col = RNG.randint(0, 1000, 4000).astype(np.int64)
+    ops.sort_perm(col, cache_key=("t", 2), version=1)
+    delta = RNG.randint(0, 1000, 64).astype(np.int64)
+    col2 = np.concatenate([col, delta])
+    snap = ops.transfers.snapshot()
+    _, perm = ops.sort_perm(col2, cache_key=("t", 2), version=2)
+    d = ops.transfers.delta(snap)
+    # only the appended tail's (bucketed) bytes went up, not the column
+    assert 0 < d.h2d_bytes < col.nbytes // 4, d
+    np.testing.assert_array_equal(perm, np.argsort(col2, kind="stable"))
+
+
+def test_join_pairs_resident_right_side():
+    ops = fresh_jax_ops()
+    r = RNG.randint(0, 500, 3000).astype(np.int64)
+    l = RNG.randint(0, 500, 40).astype(np.int64)
+    ops.join_pairs(l, r, rkeys_key=("pk", 3), rkeys_version=1)
+    snap = ops.transfers.snapshot()
+    gli, gri = ops.join_pairs(l, r, rkeys_key=("pk", 3), rkeys_version=1)
+    d = ops.transfers.delta(snap)
+    # second probe re-uploads only the (small) left batch
+    assert d.h2d_bytes < r.nbytes // 4, d
+    assert pair_set(gli, gri) == pair_set(*HOST.join_pairs(l, r))
+
+
+def test_engine_device_resident_index_state():
+    """Acceptance: an infer()+query() cycle on backend=jax-interpret keeps
+    index state device-resident — a second (fixpoint) infer and repeated
+    index lookups issue zero transfers."""
+    from repro.core.store import Component
+
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    rule = Rule("trans", (cond("T", "?x", "next", "?y"),
+                          cond("T", "?y", "next", "?z")),
+                (AddAction("T", term("?x"), "next", term("?z")),))
+    e.add_rule(rule)
+    e.insert_facts([Fact("T", f"n{i}", "next", f"n{i+1}") for i in range(6)])
+    stats = e.infer()
+    assert stats.facts_inferred > 0
+
+    snap = e.ops.transfers.snapshot()
+    e.infer()  # already at fixpoint: rules skipped-unchanged
+    d = e.ops.transfers.delta(snap)
+    assert d.h2d_calls == 0 and d.d2h_calls == 0, d
+
+    t = e.store.tables["T"]
+    snap = e.ops.transfers.snapshot()
+    for v in range(32):  # rank-1 lookups run on the cached host mirrors
+        t.index.lookup(t, Component.ID, v)
+        t.index.count(t, Component.VAL, v)
+    d = e.ops.transfers.delta(snap)
+    assert d.h2d_calls == 0 and d.d2h_calls == 0, d
+
+
+def test_engine_append_uploads_delta_not_table():
+    """Repeated infer iterations extend the resident packed-key buffer
+    instead of re-uploading the whole table each write."""
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    e.insert_facts([Fact("T", f"n{i}", "next", f"n{i+1}")
+                    for i in range(2000)])
+    t = e.store.tables["T"]
+    key = ("colbuf", ("pk", t.uid), np.iinfo(np.int64).min)
+    # first write-side dedup uploads the packed keys...
+    e.insert_facts([Fact("T", "a0", "next", "b0")])
+    assert e.ops.cache.get_any(key) is not None
+    snap = e.ops.transfers.snapshot()
+    # ...subsequent small batches extend it with tail-bucket uploads only
+    for i in range(5):
+        e.insert_facts([Fact("T", f"a{i+1}", "next", f"b{i+1}")])
+    d = e.ops.transfers.delta(snap)
+    full = t.n * 8 * 5
+    assert d.h2d_bytes < full // 4, (d, full)
 
 
 # ---------------------------------------------------------------------------
