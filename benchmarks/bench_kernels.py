@@ -117,6 +117,34 @@ def bench_residency(n: int = 1 << 14, batches: int = 16,
     return rows
 
 
+def bench_batch_probe(n: int = 1 << 14, n_probes: int = 2048,
+                      backend: str = "jax"):
+    """Batched rank-1 probes (`FactStore.lookup_many`) vs the per-probe
+    loop — the ROADMAP's 'revisit with batched probes' item."""
+    from repro.core import EngineConfig, HiperfactEngine
+    from repro.core.store import Component
+
+    rng = np.random.RandomState(3)
+    e = HiperfactEngine(EngineConfig(index_backend="AI", backend=backend))
+    e.insert_columns("T", rng.randint(0, n // 4, n),
+                     rng.randint(0, 64, n),
+                     rng.randint(0, 1 << 30, n),
+                     np.zeros(n, np.int8))
+    t = e.store.tables["T"]
+    probes = rng.randint(0, n // 4, n_probes).astype(np.int64)
+    rows = []
+
+    def loop():
+        return [t.index.lookup(t, Component.ID, int(v)) for v in probes]
+
+    def batched():
+        return e.store.lookup_many("T", Component.ID, probes)
+
+    rows.append((f"probe[{backend}]_per_probe_loop", timeit(loop)))
+    rows.append((f"probe[{backend}]_batched", timeit(batched)))
+    return rows
+
+
 def main():
     print("kernel,seconds_per_call")
     for name, s in bench():
@@ -125,6 +153,8 @@ def main():
         print(f"{name},{s:.5f}")
     for name, s in bench_residency():
         print(f"{name},{s}")
+    for name, s in bench_batch_probe():
+        print(f"{name},{s:.5f}")
 
 
 if __name__ == "__main__":

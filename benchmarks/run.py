@@ -1,14 +1,21 @@
 """Benchmark entry point: one section per paper table + the roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke]
+                                            [--backend B] [--json PATH]
 
 Default sizes are CPU-container friendly (~2-4 min); --full scales the
-datasets up (the paper's LUBM50/100-class sizes).
+datasets up (the paper's LUBM50/100-class sizes); --smoke shrinks to
+CI-sized inputs (inference presets + kernel micro only).
+
+--json writes a machine-readable snapshot (op timings, transfer counts,
+h2d bytes, cache stats) so the perf trajectory is tracked across PRs —
+the convention is ``BENCH_<pr>.json`` at the repo root.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -20,82 +27,136 @@ def section(title: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs: inference presets + kernel "
+                         "micro only")
     ap.add_argument("--backend", default="numpy",
                     choices=["numpy", "jax", "jax-pallas", "jax-interpret"],
                     help="execution backend for the engine hot path "
                          "(see src/repro/backend/README.md)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable snapshot "
+                         "(BENCH_<pr>.json convention)")
     args = ap.parse_args()
 
     t_start = time.perf_counter()
+    report: dict = {"backend": args.backend, "smoke": args.smoke,
+                    "full": args.full, "sections": {}}
 
     section(f"Table 2 analog: inference (backend={args.backend})")
     from benchmarks import bench_inference
     scale = 8 if args.full else 1
-    for dname, ename, r in bench_inference.bench(scale=scale,
-                                                 backend=args.backend):
+    # device backends: best-of-2 so one-time jit compilation doesn't
+    # masquerade as steady-state cost in the snapshot
+    runs = 2 if args.backend != "numpy" and not args.smoke else 1
+    inf_rows = bench_inference.bench(scale=scale, backend=args.backend,
+                                     smoke=args.smoke, runs=runs)
+    report["sections"]["inference"] = [
+        {"dataset": d, "engine": e, **r} for d, e, r in inf_rows]
+    for dname, ename, r in inf_rows:
         print(f"{dname},{ename},load={r['load_s']:.4f}s,"
               f"infer={r['infer_s']:.4f}s,query={r['query_s']:.4f}s,"
+              f"requery={r.get('requery_s', 0):.5f}s,"
               f"inferred={r['inferred']}")
+        if "transfers" in r:
+            print(f"#   {ename}: "
+                  f"{bench_inference.fmt_transfers(r['transfers'])} "
+                  f"cache={r['cache']}")
 
-    section(f"Table 4 analog: query config matrix (backend={args.backend})")
-    from benchmarks import bench_query
-    kw = {} if not args.full else {
-        "mondial_kw": {"n_countries": 60, "cities_per": 120},
-        "dblp_kw": {"n_papers": 20000, "n_authors": 3000}}
-    for dname, label, r in bench_query.bench(backend=args.backend, **kw):
-        print(f"{dname},{label},load={r['load_s']:.4f}s,"
-              f"query={r['query_s']:.6f}s")
+    if not args.smoke:
+        section(f"Table 4 analog: query config matrix "
+                f"(backend={args.backend})")
+        from benchmarks import bench_query
+        kw = {} if not args.full else {
+            "mondial_kw": {"n_countries": 60, "cities_per": 120},
+            "dblp_kw": {"n_papers": 20000, "n_authors": 3000}}
+        q_rows = bench_query.bench(backend=args.backend, **kw)
+        report["sections"]["query"] = [
+            {"dataset": d, "config": c, **r} for d, c, r in q_rows]
+        for dname, label, r in q_rows:
+            print(f"{dname},{label},load={r['load_s']:.4f}s,"
+                  f"query={r['query_s']:.6f}s")
 
-    section("Hiperfact vs Rete scaling")
-    from benchmarks import bench_vs_rete
-    for s, hf, rete in bench_vs_rete.bench(
-            scales=(1, 2, 4) if not args.full else (1, 4, 8)):
-        sp = rete["infer_s"] / max(hf["infer_s"], 1e-9)
-        print(f"scale={s},facts={hf['n_facts']},"
-              f"hiperfact={hf['infer_s']:.4f}s,rete={rete['infer_s']:.4f}s,"
-              f"speedup={sp:.1f}x")
+        section("Hiperfact vs Rete scaling")
+        from benchmarks import bench_vs_rete
+        rete_rows = []
+        for s, hf, rete in bench_vs_rete.bench(
+                scales=(1, 2, 4) if not args.full else (1, 4, 8)):
+            sp = rete["infer_s"] / max(hf["infer_s"], 1e-9)
+            rete_rows.append({"scale": s, "facts": hf["n_facts"],
+                              "hiperfact_s": hf["infer_s"],
+                              "rete_s": rete["infer_s"], "speedup": sp})
+            print(f"scale={s},facts={hf['n_facts']},"
+                  f"hiperfact={hf['infer_s']:.4f}s,"
+                  f"rete={rete['infer_s']:.4f}s,speedup={sp:.1f}x")
+        report["sections"]["vs_rete"] = rete_rows
 
-    section("Island processing internals (AR/DR, sort keys, island order)")
-    from benchmarks import bench_islands
-    for label, dt, n in bench_islands.bench_rnl_modes():
-        print(f"{label},{dt:.5f}s,rows={n}")
-    for label, dt in bench_islands.bench_island_order():
-        print(f"{label},{dt:.5f}s")
+        section("Island processing internals (AR/DR, sort keys, order)")
+        from benchmarks import bench_islands
+        isl = []
+        for label, dt, n in bench_islands.bench_rnl_modes():
+            isl.append({"label": label, "seconds": dt, "rows": n})
+            print(f"{label},{dt:.5f}s,rows={n}")
+        for label, dt in bench_islands.bench_island_order():
+            isl.append({"label": label, "seconds": dt})
+            print(f"{label},{dt:.5f}s")
+        report["sections"]["islands"] = isl
 
     section("Fork-join kernel micro (portable XLA paths)")
     from benchmarks import bench_kernels
-    for name, s in bench_kernels.bench():
-        print(f"{name},{s:.5f}s")
-    # Ops-layer comparison: numpy vs device backend on the same primitives
-    for name, s in bench_kernels.bench_backends(
-            names=("numpy", args.backend if args.backend != "numpy"
-                   else "jax")):
-        print(f"{name},{s:.5f}s")
+    kn = (1 << 12) if args.smoke else (1 << 16)
+    bn = (1 << 11) if args.smoke else (1 << 15)
+    ops_rows = list(bench_kernels.bench(n=kn))
+    ops_rows += bench_kernels.bench_backends(
+        n=bn, names=("numpy", args.backend if args.backend != "numpy"
+                     else "jax"))
+    if not args.smoke:
+        ops_rows += bench_kernels.bench_residency()
+        ops_rows += bench_kernels.bench_batch_probe(
+            backend=args.backend if args.backend != "numpy" else "jax")
+    report["sections"]["kernels"] = [
+        {"op": name, "value": v} for name, v in ops_rows]
+    for name, s in ops_rows:
+        print(f"{name},{s:.5f}s" if isinstance(s, float) else
+              f"{name},{s}")
 
-    section("Extensions (paper §5): rank-N query cache + CR compression")
-    from benchmarks import bench_extensions
-    for label, dt, hr in bench_extensions.bench_query_cache():
-        print(f"query-cache,{label},{dt:.5f}s,hit_rate={hr:.2f}")
-    for name, codec, ratio, enc_s in bench_extensions.bench_compression():
-        print(f"compression,{name},{codec},{ratio:.1f}x,{enc_s:.4f}s")
+    if not args.smoke:
+        section("Extensions (paper §5): rank-N query cache + compression")
+        from benchmarks import bench_extensions
+        ext = []
+        for label, dt, hr in bench_extensions.bench_query_cache():
+            ext.append({"bench": "query-cache", "label": label,
+                        "seconds": dt, "hit_rate": hr})
+            print(f"query-cache,{label},{dt:.5f}s,hit_rate={hr:.2f}")
+        for name, codec, ratio, enc_s in bench_extensions.bench_compression():
+            ext.append({"bench": "compression", "name": name,
+                        "codec": codec, "ratio": ratio, "seconds": enc_s})
+            print(f"compression,{name},{codec},{ratio:.1f}x,{enc_s:.4f}s")
+        report["sections"]["extensions"] = ext
 
-    section("Roofline (from dry-run artifacts, if present)")
-    from benchmarks import roofline
-    for d in ("out/dryrun/single", "out/dryrun/multi"):
-        if os.path.isdir(d) and os.listdir(d):
-            print(f"-- {d}")
-            rows = roofline.report(roofline.load(d))
-            for r in rows:
-                print(f"{r['cell']},bound={r['bottleneck']},"
-                      f"compute={r['compute_s']:.4f}s,"
-                      f"memory={r['memory_s']:.4f}s,"
-                      f"collective={r['collective_s']:.4f}s,"
-                      f"useful={100*r['useful_ratio']:.1f}%,"
-                      f"roofline={100*r['roofline_frac']:.2f}%")
-        else:
-            print(f"-- {d}: no artifacts (run repro.launch.dryrun first)")
+        section("Roofline (from dry-run artifacts, if present)")
+        from benchmarks import roofline
+        for d in ("out/dryrun/single", "out/dryrun/multi"):
+            if os.path.isdir(d) and os.listdir(d):
+                print(f"-- {d}")
+                rows = roofline.report(roofline.load(d))
+                for r in rows:
+                    print(f"{r['cell']},bound={r['bottleneck']},"
+                          f"compute={r['compute_s']:.4f}s,"
+                          f"memory={r['memory_s']:.4f}s,"
+                          f"collective={r['collective_s']:.4f}s,"
+                          f"useful={100*r['useful_ratio']:.1f}%,"
+                          f"roofline={100*r['roofline_frac']:.2f}%")
+            else:
+                print(f"-- {d}: no artifacts (run repro.launch.dryrun "
+                      f"first)")
 
-    print(f"\nall benches done in {time.perf_counter() - t_start:.1f}s")
+    report["wall_seconds"] = time.perf_counter() - t_start
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=float)
+        print(f"\nwrote {args.json}")
+    print(f"\nall benches done in {report['wall_seconds']:.1f}s")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from repro.backend.base import Ops, splitmix64
 from repro.backend.device_cache import DeviceArrayCache, TransferCounter
+from repro.backend.handles import DeviceCol, is_handle
 from repro.backend.numpy_ops import NumpyOps
 
 BACKENDS = ("numpy", "jax", "jax-pallas", "jax-interpret")
@@ -45,5 +46,5 @@ def get_backend(name: str = "numpy") -> Ops:
     return ops
 
 
-__all__ = ["BACKENDS", "DeviceArrayCache", "NumpyOps", "Ops",
-           "TransferCounter", "get_backend", "splitmix64"]
+__all__ = ["BACKENDS", "DeviceArrayCache", "DeviceCol", "NumpyOps", "Ops",
+           "TransferCounter", "get_backend", "is_handle", "splitmix64"]

@@ -21,6 +21,8 @@ import abc
 
 import numpy as np
 
+from repro.backend.handles import DeviceCol, is_handle, merge_bounds
+
 
 def splitmix64(x: np.ndarray) -> np.ndarray:
     """Vectorized 64-bit mix hash (HI bucketing and HJ joins)."""
@@ -114,3 +116,157 @@ class Ops(abc.ABC):
         if algo == "MJ":
             return self.join_pairs(lkeys, rkeys)
         raise ValueError(f"unknown join algo: {algo!r}")
+
+    # -- handle tier -------------------------------------------------------
+    # Variants that accept and return opaque ``DeviceCol`` handles so
+    # intermediate join state never round-trips through the host (see
+    # handles.py).  The defaults below are the numpy host twins — handles
+    # wrap plain arrays and ``host()`` is free — which makes ``NumpyOps``
+    # the oracle for the device tier's parity tests.  ``JaxOps`` overrides
+    # every method with a device-resident, uid-memoized implementation.
+    #
+    # ``prefer_handles`` tells the island executor whether routing the
+    # whole join pipeline through handles is a *win* on this backend (it
+    # is on device backends, a wash on host ones); the API itself is
+    # available on every backend.
+
+    prefer_handles = False
+
+    def upload(self, arr: np.ndarray) -> DeviceCol:
+        """Wrap a host column as a handle (device backends transfer)."""
+        arr = np.ascontiguousarray(np.asarray(arr, np.int64))
+        lo = int(arr.min()) if len(arr) else None
+        hi = int(arr.max()) if len(arr) else None
+        return DeviceCol(arr, len(arr), self, lo, hi, host=arr)
+
+    def materialize(self, h: DeviceCol) -> np.ndarray:
+        """Host array for ``h`` (device backends download, once)."""
+        return np.asarray(h.data[: h.n])
+
+    def as_handle(self, x) -> DeviceCol:
+        return x if is_handle(x) else self.upload(x)
+
+    def iota_h(self, n: int) -> DeviceCol:
+        """`arange(n)` as a handle, built without a host->device copy."""
+        a = np.arange(n, dtype=np.int64)
+        return DeviceCol(a, n, self, 0 if n else None,
+                         n - 1 if n else None, host=a)
+
+    def const_h(self, value: int, n: int) -> DeviceCol:
+        """A constant column as a handle.  Device backends memoize by
+        ``(value, n)`` so the constant action slots of a rule map to the
+        same handle (and thus the same memoized write-side results) on
+        every evaluation at a fixed version."""
+        a = np.full(n, int(value), np.int64)
+        v = int(value) if n else None
+        return DeviceCol(a, n, self, v, v, host=a)
+
+    def concat_h(self, parts: list[DeviceCol]) -> DeviceCol:
+        parts = [self.as_handle(p) for p in parts]
+        if len(parts) == 1:
+            return parts[0]
+        out = np.concatenate([p.host() for p in parts])
+        lo, hi = merge_bounds(*parts)
+        return DeviceCol(out, len(out), self, lo, hi, host=out)
+
+    def gather_h(self, col: DeviceCol, idx: DeviceCol,
+                 n: int | None = None) -> DeviceCol:
+        """``col[idx[:n]]`` — bounds are inherited (a subset can only
+        shrink the value range)."""
+        n = idx.n if n is None else n
+        out = col.host()[idx.host()[:n]]
+        return DeviceCol(out, n, self, col.lo, col.hi, host=out)
+
+    def select_mask_h(self, cols: list[DeviceCol], mask: DeviceCol
+                      ) -> tuple[list[DeviceCol], int]:
+        """Compact each column to the lanes where ``mask`` is True (the
+        handle-tier form of boolean selection)."""
+        m = mask.host()[: cols[0].n] if cols else mask.host()
+        kept = int(m.sum())
+        out = []
+        for c in cols:
+            d = c.host()[m]
+            out.append(DeviceCol(d, kept, self, c.lo, c.hi, host=d))
+        return out, kept
+
+    def semi_join_h(self, keys: DeviceCol, bound: DeviceCol) -> DeviceCol:
+        """Boolean-mask handle of ``keys`` lanes appearing in ``bound``."""
+        m = self.semi_join(keys.host(), bound.host())
+        return DeviceCol(m, keys.n, self, host=m)
+
+    def pack_pairs_h(self, a: DeviceCol, b: DeviceCol) -> DeviceCol:
+        """Packed ``(a << 32) | (b & 0xFFFFFFFF)`` join keys (the engine's
+        (id, attr) key form)."""
+        out = (a.host().astype(np.int64) << 32) | (
+            b.host().astype(np.int64) & 0xFFFFFFFF)
+        lo = hi = None
+        if a.n and a.lo is not None and a.hi is not None:
+            lo, hi = (a.lo << 32), (a.hi << 32) | 0xFFFFFFFF
+        return DeviceCol(out, a.n, self, lo, hi, host=out)
+
+    def join_gather_h(self, lkeys: DeviceCol, rkeys: DeviceCol,
+                      lpay: list[DeviceCol], rpay: list[DeviceCol],
+                      verify: list[tuple[DeviceCol, DeviceCol]] = (),
+                      algo: str = "MJ"
+                      ) -> tuple[list[DeviceCol], list[DeviceCol], int]:
+        """Fused equi-join + payload gather: joins ``lkeys``/``rkeys``,
+        refines candidate pairs on the ``verify`` column pairs, and emits
+        the gathered payload columns directly — the ``(li, ri)`` pair
+        arrays are never exposed (device backends never materialize them
+        on host)."""
+        li, ri = self.join(lkeys.host(), rkeys.host(), algo)
+        for vl, vr in verify:
+            if len(li) == 0:
+                break
+            ok = vl.host()[li] == vr.host()[ri]
+            li, ri = li[ok], ri[ok]
+        n = len(li)
+        lout = [DeviceCol(p.host()[li], n, self, p.lo, p.hi)
+                for p in lpay]
+        rout = [DeviceCol(p.host()[ri], n, self, p.lo, p.hi)
+                for p in rpay]
+        return lout, rout, n
+
+    def dedup_select_h(self, cols: list[DeviceCol]
+                       ) -> tuple[DeviceCol, int]:
+        """SU unique filter over handle columns -> (ascending kept row
+        ids as a handle, kept count)."""
+        idx = self.dedup_rows([c.host() for c in cols])
+        n = len(idx)
+        return DeviceCol(idx, n, self, 0 if n else None,
+                         (cols[0].n - 1) if n else None, host=idx), n
+
+    def fresh_mask_h(self, key_new: DeviceCol, vals_new: DeviceCol,
+                     old_keys: np.ndarray, old_vals: np.ndarray,
+                     cache_uid=None, version: int | None = None
+                     ) -> DeviceCol:
+        """Write-side anti-join: mask of batch rows whose ``(key, val)``
+        pair does NOT already exist in the table columns.  ``cache_uid``/
+        ``version`` identify the (append-only) table columns for device
+        residency; host backends ignore the hint.  Callers are
+        responsible for tombstone handling (the engine falls back to the
+        host path when the table has dead rows)."""
+        kn = key_new.host()
+        vn = vals_new.host()
+        exists = np.zeros(key_new.n, bool)
+        if len(old_keys) and key_new.n:
+            li, ri = self.join_pairs(kn, old_keys)
+            if len(li):
+                ok = vn[li] == old_vals[ri]
+                exists[li[ok]] = True
+        fresh = ~exists
+        return DeviceCol(fresh, key_new.n, self, host=fresh)
+
+    def batch_probe(self, sorted_keys: np.ndarray, probes: np.ndarray, *,
+                    cache_key=None, version: int | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched rank-1 probe: ``[lo, hi)`` run bounds in
+        ``sorted_keys`` for every probe key, in one bulk call.  Device
+        backends resolve all probes in a single kernel launch against the
+        resident ``(sorted, perm)`` mirror identified by ``cache_key``/
+        ``version`` instead of per-probe host bisection."""
+        sorted_keys = np.asarray(sorted_keys)
+        probes = np.asarray(probes)
+        lo = np.searchsorted(sorted_keys, probes, side="left")
+        hi = np.searchsorted(sorted_keys, probes, side="right")
+        return lo.astype(np.int64), hi.astype(np.int64)

@@ -75,6 +75,7 @@ class CacheEntry:
     version: int
     value: Any
     nbytes: int
+    gen: int = 0  # generation of the last touch (refresh() spill policy)
 
 
 class DeviceArrayCache:
@@ -83,6 +84,19 @@ class DeviceArrayCache:
     ``get(key, version)`` hits only when the stored version matches
     exactly; ``get_any(key)`` returns whatever is stored (possibly stale)
     so callers can extend an append-only buffer instead of re-uploading.
+
+    **Spill policy**: the byte-bounded LRU alone can silently thrash when
+    several engines share one device cache — each engine's working set
+    evicts the others' between iterations, and every re-entry is a full
+    re-upload.  ``refresh()`` is the cooperative alternative: callers
+    invoke it at a natural boundary (end of an ``infer()``, between
+    benchmark phases) and entries not touched for ``max_idle`` refresh
+    cycles are spilled *eagerly*, leaving LRU pressure for genuinely hot
+    state.  A ``spill_hook(key, entry) -> bool`` (True = keep) overrides
+    the idle rule per entry, e.g. to pin index mirrors while letting
+    memoized intermediates go.  Spills and evictions are counted
+    separately so the bench transfer report can tell cooperative
+    spilling from capacity thrash.
     """
 
     def __init__(self, capacity_bytes: int = 256 << 20) -> None:
@@ -91,6 +105,10 @@ class DeviceArrayCache:
         self.misses = 0
         self.stale = 0
         self.evictions = 0
+        self.spilled = 0
+        self.refreshes = 0
+        self.generation = 0
+        self.spill_hook = None  # (key, CacheEntry) -> bool keep
         self._bytes = 0
         self._lock = threading.Lock()
         self._entries: "OrderedDict[Hashable, CacheEntry]" = OrderedDict()
@@ -101,9 +119,12 @@ class DeviceArrayCache:
         return self._bytes
 
     def stats(self) -> dict:
+        total = self.hits + self.misses + self.stale
         return {"hits": self.hits, "misses": self.misses,
                 "stale": self.stale, "evictions": self.evictions,
-                "entries": len(self._entries), "bytes": self._bytes}
+                "spilled": self.spilled, "refreshes": self.refreshes,
+                "entries": len(self._entries), "bytes": self._bytes,
+                "hit_rate": (self.hits / total) if total else 0.0}
 
     # -- operations --------------------------------------------------------
     def get(self, key: Hashable, version: int) -> Any | None:
@@ -116,6 +137,7 @@ class DeviceArrayCache:
                 self.stale += 1
                 return None
             self.hits += 1
+            e.gen = self.generation
             self._entries.move_to_end(key)
             return e.value
 
@@ -126,6 +148,7 @@ class DeviceArrayCache:
         with self._lock:
             e = self._entries.get(key)
             if e is not None:
+                e.gen = self.generation
                 self._entries.move_to_end(key)
             return e
 
@@ -135,12 +158,36 @@ class DeviceArrayCache:
             old = self._entries.pop(key, None)
             if old is not None:
                 self._bytes -= old.nbytes
-            self._entries[key] = CacheEntry(version, value, int(nbytes))
+            self._entries[key] = CacheEntry(version, value, int(nbytes),
+                                            self.generation)
             self._bytes += int(nbytes)
             while self._bytes > self.capacity_bytes and len(self._entries) > 1:
                 _, ev = self._entries.popitem(last=False)
                 self._bytes -= ev.nbytes
                 self.evictions += 1
+
+    def refresh(self, max_idle: int = 1) -> dict:
+        """Advance the generation and spill entries idle for more than
+        ``max_idle`` refresh cycles (see class docstring).  Returns a
+        summary: {"spilled", "spilled_bytes", "kept", "bytes"}."""
+        with self._lock:
+            self.generation += 1
+            self.refreshes += 1
+            spilled = spilled_bytes = 0
+            for key in list(self._entries):
+                e = self._entries[key]
+                if self.spill_hook is not None:
+                    keep = bool(self.spill_hook(key, e))
+                else:
+                    keep = (self.generation - e.gen) <= max_idle
+                if not keep:
+                    del self._entries[key]
+                    self._bytes -= e.nbytes
+                    self.spilled += 1
+                    spilled += 1
+                    spilled_bytes += e.nbytes
+            return {"spilled": spilled, "spilled_bytes": spilled_bytes,
+                    "kept": len(self._entries), "bytes": self._bytes}
 
     def invalidate(self, key: Hashable) -> None:
         with self._lock:

@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.backend.base import Ops
 from repro.backend.device_cache import DeviceArrayCache, TransferCounter
+from repro.backend.handles import DeviceCol, merge_bounds
 from repro.backend.numpy_ops import NumpyOps
 
 INT64_MAX = np.iinfo(np.int64).max
@@ -118,6 +119,79 @@ def _jitted():
     def gather(vals, perm):
         return vals[perm]
 
+    @functools.partial(
+        jax.jit, static_argnames=("block", "force_pallas", "interpret"))
+    def semi_join_n(keys, bound, n_bound, block, force_pallas, interpret):
+        """Handle-tier semi join: pads are garbage, so the bound side is
+        re-padded here and membership is bounded by ``n_bound`` —
+        sentinel-value collisions are structurally impossible."""
+        cap_b = bound.shape[0]
+        lane_b = jnp.arange(cap_b, dtype=jnp.int64)
+        b = jnp.where(lane_b < n_bound, bound, jnp.iinfo(jnp.int64).max)
+        s = device_sort(b, block=block, force_pallas=force_pallas,
+                        interpret=interpret)
+        pos = jnp.clip(jnp.searchsorted(s, keys, side="left"),
+                       0, cap_b - 1)
+        return (s[pos] == keys) & (pos < n_bound)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def gather_clip(vals, idx):
+        return vals[jnp.clip(idx, 0, vals.shape[0] - 1)]
+
+    @functools.partial(jax.jit, static_argnames=())
+    def pack_pairs(a, b):
+        return (a << 32) | (b & 0xFFFFFFFF)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def sort_pairs_xla(keys, vals, n_real):
+        """(key, val) rows sorted lexicographically, pads (flag-based)
+        last — the probe structure for the write-side exists check."""
+        cap = keys.shape[0]
+        lane = jnp.arange(cap, dtype=jnp.int64)
+        is_pad = lane >= n_real
+        order = jnp.lexsort((vals, keys, is_pad))
+        mx = jnp.iinfo(jnp.int64).max
+        ks = jnp.where(lane < n_real, keys[order], mx)
+        vs = jnp.where(lane < n_real, vals[order], mx)
+        return ks, vs
+
+    @functools.partial(jax.jit, static_argnames=())
+    def fresh_pairs(ks, vs, n_old, kn, vn):
+        """For each (kn, vn) row: True iff the pair does NOT appear in
+        the sorted (ks, vs) rows — a branch-free binary search of ``vn``
+        inside each key's run (the write-side anti-join, no pair
+        expansion and therefore no output-capacity retry loop)."""
+        cap_old = ks.shape[0]
+        klo = jnp.minimum(jnp.searchsorted(ks, kn, side="left"), n_old)
+        khi = jnp.minimum(jnp.searchsorted(ks, kn, side="right"), n_old)
+        lo, hi = klo, khi
+        for _ in range(max(1, cap_old.bit_length()) + 1):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            v = vs[jnp.clip(mid, 0, cap_old - 1)]
+            go = v < vn
+            lo = jnp.where(active & go, mid + 1, lo)
+            hi = jnp.where(active & ~go, mid, hi)
+        found = (lo < khi) & (vs[jnp.clip(lo, 0, cap_old - 1)] == vn)
+        return ~found
+
+    @functools.partial(
+        jax.jit, static_argnames=("block", "use_pallas", "interpret"))
+    def batch_probe_j(sk, n_real, probes, block, use_pallas, interpret):
+        """Batched rank-1 probe: [lo, hi) run bounds for every probe in
+        one launch (Pallas binary-search kernel on TPU)."""
+        if use_pallas:
+            from repro.kernels.mergejoin.mergejoin import probe_sorted
+            lo, hi = probe_sorted(probes, sk, block=block,
+                                  interpret=interpret)
+            lo, hi = lo.astype(jnp.int64), hi.astype(jnp.int64)
+        else:
+            lo = jnp.searchsorted(sk, probes, side="left").astype(jnp.int64)
+            hi = jnp.searchsorted(sk, probes,
+                                  side="right").astype(jnp.int64)
+        return jnp.stack([jnp.minimum(lo, n_real),
+                          jnp.minimum(hi, n_real)])
+
     @functools.partial(jax.jit, static_argnames=())
     def extend_buffer(buf, delta, n_old):
         """Append-only column sync: overwrite [n_old, n_old+len(delta))
@@ -128,7 +202,10 @@ def _jitted():
     return {"neighbor_mask": neighbor_mask, "semi_join": semi_join,
             "stable_sort_perm_xla": stable_sort_perm_xla,
             "dedup_rows_xla": dedup_rows_xla, "gather": gather,
-            "extend_buffer": extend_buffer}
+            "extend_buffer": extend_buffer, "semi_join_n": semi_join_n,
+            "gather_clip": gather_clip, "pack_pairs": pack_pairs,
+            "sort_pairs_xla": sort_pairs_xla, "fresh_pairs": fresh_pairs,
+            "batch_probe_j": batch_probe_j}
 
 
 class JaxOps(Ops):
@@ -272,6 +349,14 @@ class JaxOps(Ops):
                 buf = self._to_dev(
                     self._pad(keys64, self._bucket(n), INT64_MAX))
             sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
+            if use_cache:
+                # stash the device-side sorted mirror too: batched
+                # rank-1 probes (`batch_probe`) search it without ever
+                # re-uploading the sorted column (the permutation is
+                # consumed host-side only, so it is not pinned)
+                self.cache.put(("permdev", cache_key), version,
+                               {"sk": sk, "perm": None, "n": n},
+                               sk.nbytes)
             # copy the slices: a view would pin the whole cap-sized base
             # array while the cache accounts only the sliced bytes
             out = (np.ascontiguousarray(self._to_host(sk)[:n]),
@@ -338,10 +423,13 @@ class JaxOps(Ops):
                 if total <= cap:
                     break
                 cap = self._bucket(total)  # one retry: exact total known
-            valid = self._to_host(valid)
-            li = self._to_host(li)[valid]
-            ri = self._to_host(ri)[valid]
-        return li.astype(np.int64), ri.astype(np.int64)
+            if total == 0:
+                return np.empty(0, np.int64), np.empty(0, np.int64)
+            # valid pairs are a prefix: pack (li << 32 | ri) on device and
+            # download the prefix once — one transfer, not three
+            from repro.kernels.mergejoin.ops import pack_pairs_bounded
+            packed = self._to_host(pack_pairs_bounded(li, ri, valid)[:total])
+        return packed >> 32, packed & 0xFFFFFFFF
 
     def unique_mask(self, sorted_keys: np.ndarray) -> np.ndarray:
         x = np.asarray(sorted_keys, np.int64)
@@ -410,3 +498,369 @@ class JaxOps(Ops):
             count = int(self._to_host(count))
             rows = self._to_host(rows)[:count]
         return rows.astype(np.int64)
+
+    # -- handle tier (device-resident, uid-memoized) -----------------------
+    # Every method below keeps its result on device inside a ``DeviceCol``
+    # and memoizes it in the ``DeviceArrayCache`` keyed by the operand
+    # handles' uids.  Handles are immutable and uids are never reused, so
+    # a memo hit is sound — and it is what makes a *repeated* island
+    # evaluation at a fixed table version cost zero transfers and zero
+    # device work: the same cached input handles map to the same cached
+    # output handles all the way through joins, semi-joins, dedup, and
+    # the write-side anti-join.
+
+    prefer_handles = True
+
+    def _memo_get(self, key):
+        return self.cache.get(("hmemo",) + key, 0)
+
+    def _memo_put(self, key, value, nbytes: int):
+        self.cache.put(("hmemo",) + key, 0, value, int(nbytes))
+        return value
+
+    def _empty_h(self) -> DeviceCol:
+        e = np.empty(0, np.int64)
+        return DeviceCol(e, 0, self, host=e)
+
+    @staticmethod
+    def _handles_nbytes(out) -> int:
+        """Device bytes held by a (lout, rout, n) join result — memo
+        accounting for the host-fallback path."""
+        lout, rout, _ = out
+        return sum(getattr(h.data, "nbytes", 0) for h in lout + rout)
+
+    @staticmethod
+    def _fit_cap(data, cap: int):
+        """Eagerly align a device buffer to ``cap`` lanes (pad lanes are
+        garbage by contract, so zero-fill is fine)."""
+        import jax.numpy as jnp
+        cur = data.shape[0]
+        if cur == cap:
+            return data
+        if cur > cap:
+            return data[:cap]
+        return jnp.concatenate([data, jnp.zeros(cap - cur, data.dtype)])
+
+    def _upload_locked(self, arr) -> DeviceCol:
+        arr = np.ascontiguousarray(np.asarray(arr, np.int64))
+        n = len(arr)
+        if n == 0:
+            return self._empty_h()
+        buf = self._to_dev(self._pad(arr, self._bucket(n), 0))
+        return DeviceCol(buf, n, self, int(arr.min()), int(arr.max()),
+                         host=arr)
+
+    def upload(self, arr) -> DeviceCol:
+        with self._lock, self._x64():
+            return self._upload_locked(arr)
+
+    def materialize(self, h: DeviceCol) -> np.ndarray:
+        if isinstance(h.data, np.ndarray):
+            return h.data[: h.n]
+        with self._lock, self._x64():
+            return self._to_host(h.data[: h.n])
+
+    def iota_h(self, n: int) -> DeviceCol:
+        if n == 0:
+            return self._empty_h()
+        hit = self._memo_get(("iota", n))
+        if hit is not None:
+            return hit
+        import jax.numpy as jnp
+        with self._lock, self._x64():
+            buf = jnp.arange(self._bucket(n), dtype=jnp.int64)
+        h = DeviceCol(buf, n, self, 0, n - 1,
+                      host=np.arange(n, dtype=np.int64))
+        return self._memo_put(("iota", n), h, buf.nbytes)
+
+    def const_h(self, value: int, n: int) -> DeviceCol:
+        if n == 0:
+            return self._empty_h()
+        value = int(value)
+        hit = self._memo_get(("const", value, n))
+        if hit is not None:
+            return hit
+        import jax.numpy as jnp
+        with self._lock, self._x64():
+            buf = jnp.full(self._bucket(n), value, jnp.int64)
+        h = DeviceCol(buf, n, self, value, value,
+                      host=np.full(n, value, np.int64))
+        return self._memo_put(("const", value, n), h, buf.nbytes)
+
+    def concat_h(self, parts) -> DeviceCol:
+        parts = [self.as_handle(p) for p in parts]
+        live = [p for p in parts if p.n] or parts[:1]
+        if len(live) == 1:
+            return live[0]
+        key = ("cat",) + tuple(p.uid for p in live)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        import jax.numpy as jnp
+        total = sum(p.n for p in live)
+        with self._lock, self._x64():
+            pieces = [p.data[: p.n] if not isinstance(p.data, np.ndarray)
+                      else self._to_dev(p.data[: p.n]) for p in live]
+            cap = self._bucket(total)
+            if cap > total:
+                pieces.append(jnp.zeros(cap - total, jnp.int64))
+            buf = jnp.concatenate(pieces)
+        lo, hi = merge_bounds(*live)
+        h = DeviceCol(buf, total, self, lo, hi)
+        return self._memo_put(key, h, buf.nbytes)
+
+    def gather_h(self, col: DeviceCol, idx: DeviceCol,
+                 n: int | None = None) -> DeviceCol:
+        n = idx.n if n is None else n
+        if n == 0 or col.n == 0:
+            return self._empty_h()
+        key = ("g", col.uid, idx.uid, n)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        with self._lock, self._x64():
+            buf = _jitted()["gather_clip"](col.data, idx.data)
+        h = DeviceCol(buf, n, self, col.lo, col.hi)
+        return self._memo_put(key, h, buf.nbytes)
+
+    def select_mask_h(self, cols, mask: DeviceCol):
+        n = cols[0].n
+        if n == 0:
+            return [self._empty_h() for _ in cols], 0
+        key = ("sel", tuple(c.uid for c in cols), mask.uid)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        from repro.kernels.mergejoin.ops import device_compact
+        with self._lock, self._x64():
+            cap = mask.data.shape[0]
+            datas = tuple(self._fit_cap(c.data, cap) for c in cols)
+            outs, cnt = device_compact(datas, mask.data, n)
+            kept = int(self._to_host(cnt))
+        handles = [DeviceCol(d, kept, self, c.lo, c.hi)
+                   for d, c in zip(outs, cols)]
+        return self._memo_put(key, (handles, kept),
+                              sum(d.nbytes for d in outs))
+
+    def semi_join_h(self, keys: DeviceCol, bound: DeviceCol) -> DeviceCol:
+        if keys.n == 0:
+            e = np.zeros(0, bool)
+            return DeviceCol(e, 0, self, host=e)
+        key = ("sj", keys.uid, bound.uid)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        import jax.numpy as jnp
+        with self._lock, self._x64():
+            if bound.n == 0:
+                buf = jnp.zeros(keys.data.shape[0], bool)
+            else:
+                buf = _jitted()["semi_join_n"](
+                    keys.data, bound.data, bound.n, block=self.block,
+                    force_pallas=self.force_pallas,
+                    interpret=self.interpret)
+        h = DeviceCol(buf, keys.n, self)
+        return self._memo_put(key, h, buf.nbytes)
+
+    def pack_pairs_h(self, a: DeviceCol, b: DeviceCol) -> DeviceCol:
+        if a.n == 0:
+            return self._empty_h()
+        key = ("pp", a.uid, b.uid)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        with self._lock, self._x64():
+            buf = _jitted()["pack_pairs"](
+                a.data, self._fit_cap(b.data, a.data.shape[0]))
+        lo = hi = None
+        if a.lo is not None and a.hi is not None:
+            lo, hi = (a.lo << 32), (a.hi << 32) | 0xFFFFFFFF
+        h = DeviceCol(buf, a.n, self, lo, hi)
+        return self._memo_put(key, h, buf.nbytes)
+
+    def join_gather_h(self, lkeys: DeviceCol, rkeys: DeviceCol,
+                      lpay, rpay, verify=(), algo: str = "MJ"):
+        if algo not in ("MJ", "HJ"):
+            raise ValueError(f"unknown join algo: {algo!r}")
+        verify = list(verify)
+        if lkeys.n == 0 or rkeys.n == 0:
+            return ([self._empty_h() for _ in lpay],
+                    [self._empty_h() for _ in rpay], 0)
+        key = ("jg", algo, lkeys.uid, rkeys.uid,
+               tuple(p.uid for p in lpay), tuple(p.uid for p in rpay),
+               tuple((a.uid, b.uid) for a, b in verify))
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        hash_keys = algo == "HJ"
+        # a real left key equal to the right pad sentinel would match pad
+        # lanes (MJ only; the hash domain is checked inside the program)
+        if not hash_keys and (lkeys.lo is None or lkeys.lo == INT64_MIN):
+            out = self._join_gather_host(lkeys, rkeys, lpay, rpay,
+                                         verify, algo)
+            return self._memo_put(key, out, self._handles_nbytes(out))
+        from repro.kernels.mergejoin.ops import merge_join_gather_bounded
+        cap = self._bucket(max(lkeys.n, rkeys.n))
+        bad = False
+        with self._lock, self._x64():
+            cap_l = lkeys.data.shape[0]
+            cap_r = rkeys.data.shape[0]
+            lp = tuple(self._fit_cap(p.data, cap_l) for p in lpay)
+            rp = tuple(self._fit_cap(p.data, cap_r) for p in rpay)
+            vl = tuple(self._fit_cap(a.data, cap_l) for a, _ in verify)
+            vr = tuple(self._fit_cap(b.data, cap_r) for _, b in verify)
+            while True:
+                louts, routs, stats = merge_join_gather_bounded(
+                    lkeys.data, rkeys.data, lkeys.n, rkeys.n, lp, rp,
+                    vl, vr, out_cap=cap, block=self.block,
+                    force_pallas=self.force_pallas,
+                    interpret=self.interpret, hash_keys=hash_keys)
+                st = self._to_host(stats)
+                total, total0, bad = int(st[0]), int(st[1]), bool(st[2])
+                if bad or total0 <= cap:
+                    break
+                cap = self._bucket(total0)  # one retry: exact total known
+        if bad:
+            out = self._join_gather_host(lkeys, rkeys, lpay, rpay,
+                                         verify, algo)
+            return self._memo_put(key, out, self._handles_nbytes(out))
+        lout = [DeviceCol(d, total, self, p.lo, p.hi)
+                for d, p in zip(louts, lpay)]
+        rout = [DeviceCol(d, total, self, p.lo, p.hi)
+                for d, p in zip(routs, rpay)]
+        return self._memo_put(
+            key, (lout, rout, total),
+            sum(d.nbytes for d in louts) + sum(d.nbytes for d in routs))
+
+    def _join_gather_host(self, lkeys, rkeys, lpay, rpay, verify, algo):
+        """Exact host path for sentinel-adversarial keys (downloads and
+        re-uploads — counted; correctness guard, not a fast path)."""
+        li, ri = self._host.join(lkeys.host(), rkeys.host(), algo)
+        for vl, vr in verify:
+            if len(li) == 0:
+                break
+            ok = vl.host()[li] == vr.host()[ri]
+            li, ri = li[ok], ri[ok]
+        lout = [self.upload(p.host()[li]) for p in lpay]
+        rout = [self.upload(p.host()[ri]) for p in rpay]
+        return lout, rout, len(li)
+
+    def dedup_select_h(self, cols):
+        n = cols[0].n
+        if n == 0:
+            return self._empty_h(), 0
+        key = ("dd", tuple(c.uid for c in cols))
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        from repro.kernels.sortmerge.ops import (device_dedup_rows,
+                                                 fits_tagged_width,
+                                                 tag_bits_for)
+        import jax.numpy as jnp
+        with self._lock, self._x64():
+            cap = cols[0].data.shape[0]
+            datas = tuple(self._fit_cap(c.data, cap) for c in cols)
+            tagged = (all(c.bounds_known() for c in cols) and
+                      all(fits_tagged_width(c.lo, c.hi, cap)
+                          for c in cols))
+            if tagged:
+                # both paths ignore pad *content* (tagging rewrites pad
+                # lanes by position; the XLA fallback is pad-flag based),
+                # so no sentinel-collision host fallback exists here
+                kmins = self._to_dev(
+                    np.asarray([c.lo for c in cols], np.int64))
+                rows, cnt = device_dedup_rows(
+                    datas, n, kmins, tag_bits=tag_bits_for(cap),
+                    **self._sort_args())
+            else:
+                rows, cnt = _jitted()["dedup_rows_xla"](
+                    datas, jnp.asarray(n))
+            kept = int(self._to_host(cnt))
+        h = DeviceCol(rows, kept, self, 0 if kept else None,
+                      (n - 1) if kept else None)
+        return self._memo_put(key, (h, kept), rows.nbytes)
+
+    def fresh_mask_h(self, key_new: DeviceCol, vals_new: DeviceCol,
+                     old_keys, old_vals, cache_uid=None,
+                     version: int | None = None) -> DeviceCol:
+        n_new = key_new.n
+        if n_new == 0:
+            e = np.zeros(0, bool)
+            return DeviceCol(e, 0, self, host=e)
+        use_cache = cache_uid is not None and version is not None
+        key = ("fm", key_new.uid, vals_new.uid, cache_uid, version)
+        if use_cache:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
+        import jax.numpy as jnp
+        jt = _jitted()
+        old_keys = np.asarray(old_keys, np.int64)
+        old_vals = np.asarray(old_vals, np.int64)
+        with self._lock, self._x64():
+            if len(old_keys) == 0:
+                buf = jnp.ones(key_new.data.shape[0], bool)
+            else:
+                pkv = (self.cache.get(("pkv", cache_uid), version)
+                       if use_cache else None)
+                if pkv is None:
+                    if use_cache:
+                        kb = self._resident_column(
+                            ("pk", cache_uid), version, old_keys,
+                            INT64_MIN)
+                        vb = self._resident_column(
+                            ("vals", cache_uid), version, old_vals, 0)
+                        cap_o = max(kb["buf"].shape[0],
+                                    vb["buf"].shape[0])
+                        kbuf = self._fit_cap(kb["buf"], cap_o)
+                        vbuf = self._fit_cap(vb["buf"], cap_o)
+                    else:
+                        cap_o = self._bucket(len(old_keys))
+                        kbuf = self._to_dev(
+                            self._pad(old_keys, cap_o, INT64_MIN))
+                        vbuf = self._to_dev(self._pad(old_vals, cap_o, 0))
+                    ks, vs = jt["sort_pairs_xla"](kbuf, vbuf,
+                                                  len(old_keys))
+                    pkv = {"ks": ks, "vs": vs, "n": len(old_keys)}
+                    if use_cache:
+                        self.cache.put(("pkv", cache_uid), version, pkv,
+                                       ks.nbytes + vs.nbytes)
+                buf = jt["fresh_pairs"](
+                    pkv["ks"], pkv["vs"], pkv["n"], key_new.data,
+                    self._fit_cap(vals_new.data,
+                                  key_new.data.shape[0]))
+        h = DeviceCol(buf, n_new, self)
+        if use_cache:
+            self._memo_put(key, h, buf.nbytes)
+        return h
+
+    def batch_probe(self, sorted_keys, probes, *, cache_key=None,
+                    version: int | None = None):
+        probes = np.asarray(probes, np.int64)
+        n = len(probes)
+        m = len(sorted_keys)
+        if n == 0 or m == 0:
+            return np.zeros(n, np.int64), np.zeros(n, np.int64)
+        use_cache = cache_key is not None and version is not None
+        with self._lock, self._x64():
+            ent = (self.cache.get(("permdev", cache_key), version)
+                   if use_cache else None)
+            if ent is None:
+                sk = np.ascontiguousarray(
+                    np.asarray(sorted_keys, np.int64))
+                buf = self._to_dev(
+                    self._pad(sk, self._bucket(m), INT64_MAX))
+                n_real = m
+                if use_cache:
+                    self.cache.put(("permdev", cache_key), version,
+                                   {"sk": buf, "perm": None, "n": m},
+                                   buf.nbytes)
+            else:
+                buf, n_real = ent["sk"], ent["n"]
+            pd = self._to_dev(self._pad(probes, self._bucket(n),
+                                        INT64_MAX))
+            res = self._to_host(_jitted()["batch_probe_j"](
+                buf, n_real, pd, block=self.block,
+                use_pallas=self._use_pallas(),
+                interpret=self.interpret))
+        return res[0, :n].copy(), res[1, :n].copy()

@@ -20,7 +20,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.backend import Ops, get_backend
+from repro.backend import Ops, get_backend, is_handle
 from repro.core.conditions import (AddAction, Condition, DeleteAction,
                                    ExternalAction, Rule, is_var)
 from repro.core.derivation import DerivationTrees, build_derivation_trees
@@ -42,6 +42,7 @@ class EngineConfig:
     unique: str = "SU"            # SU (sort-merge) | HU (incremental hash)
     sort_mode: str = "sortkeys"   # sortkeys | fixed
     backend: str = "numpy"        # numpy | jax | jax-pallas | jax-interpret
+    device_pipeline: str = "auto"  # auto | on | off — handle-tier join core
     query_cache: bool = False     # rank-2/3 result cache (paper §5 fut. work)
     lazy: bool = False            # Defs. 10/11 active-rule pruning
     max_iterations: int = 1000
@@ -149,6 +150,12 @@ class HiperfactEngine:
         from repro.core.querycache import RankNCache
         self.query_cache = (RankNCache() if self.config.query_cache
                             else None)
+        # handle-tier join core: on device backends the island chain and
+        # the write-side dedup run on DeviceCol handles end to end
+        self._pipeline = (
+            bool(getattr(self.ops, "prefer_handles", False))
+            if self.config.device_pipeline == "auto"
+            else self.config.device_pipeline == "on")
 
     # ------------------------------------------------------------------ API
     def add_rule(self, rule: Rule) -> None:
@@ -187,23 +194,75 @@ class HiperfactEngine:
     def _insert_columns(self, ftype: str, ids, attrs, vals, valtypes) -> int:
         table = self.store.table(ftype)
         if self.config.unique == "SU":
-            # parallel-sort-merge unique: batch-dedup then anti-join vs table
-            if len(ids) > 1:
-                keep = self.ops.dedup_rows([ids, attrs, vals])
-                ids, attrs, vals, valtypes = (
-                    ids[keep], attrs[keep], vals[keep], valtypes[keep])
-            exists = _mask_existing(table, ids, attrs, vals, self.ops,
-                                    self._pk_memo)
-            if exists.any():
-                fresh = ~exists
-                ids, attrs, vals, valtypes = (
-                    ids[fresh], attrs[fresh], vals[fresh], valtypes[fresh])
-            n = table.insert(ids, attrs, vals, valtypes, dedup=False)
+            if ((is_handle(ids) or is_handle(attrs) or is_handle(vals))
+                    and table.n_dead == 0):
+                # device pipeline: dedup + anti-join on handles; only
+                # genuinely fresh rows are ever downloaded.  Tombstoned
+                # tables take the host path (the alive filter is host
+                # state the resident columns don't carry).
+                n = self._insert_handles(table, ids, attrs, vals, valtypes)
+            else:
+                ids, attrs, vals = (x.host() if is_handle(x) else x
+                                    for x in (ids, attrs, vals))
+                # parallel-sort-merge unique: batch-dedup then anti-join
+                # vs table
+                if len(ids) > 1:
+                    keep = self.ops.dedup_rows([ids, attrs, vals])
+                    ids, attrs, vals, valtypes = (
+                        ids[keep], attrs[keep], vals[keep], valtypes[keep])
+                exists = _mask_existing(table, ids, attrs, vals, self.ops,
+                                        self._pk_memo)
+                if exists.any():
+                    fresh = ~exists
+                    ids, attrs, vals, valtypes = (
+                        ids[fresh], attrs[fresh], vals[fresh],
+                        valtypes[fresh])
+                n = table.insert(ids, attrs, vals, valtypes, dedup=False)
         else:  # HU: incremental hashtable dedup inside the table
+            ids, attrs, vals = (x.host() if is_handle(x) else x
+                                for x in (ids, attrs, vals))
             n = table.insert(ids, attrs, vals, valtypes, dedup=True)
         if n:
             self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
         return n
+
+    def _insert_handles(self, table: TypedFactTable, ids, attrs, vals,
+                        valtypes) -> int:
+        """Write-side SU dedup/anti-join on ``DeviceCol`` handles.
+
+        The batch dedup, the packed-key anti-join against the (resident)
+        table columns, and the fresh-row compaction all run on device;
+        the host sees only the surviving rows.  At a fixpoint evaluation
+        every stage is a uid-keyed memo hit and the fresh count is zero,
+        so the whole write costs zero transfers.
+        """
+        ops = self.ops
+        h_ids, h_attrs, h_vals = (ops.as_handle(x)
+                                  for x in (ids, attrs, vals))
+        valtypes = np.asarray(valtypes, np.int8)
+        n = h_ids.n
+        if n == 0:
+            return 0
+        h_sel = ops.iota_h(n)  # surviving rows' positions in the batch
+        if n > 1:
+            idx, nk = ops.dedup_select_h([h_ids, h_attrs, h_vals])
+            if nk < n:
+                h_ids = ops.gather_h(h_ids, idx, nk)
+                h_attrs = ops.gather_h(h_attrs, idx, nk)
+                h_vals = ops.gather_h(h_vals, idx, nk)
+                h_sel, n = idx, nk
+        if table.n > 0:
+            key_new = ops.pack_pairs_h(h_ids, h_attrs)
+            fresh = ops.fresh_mask_h(
+                key_new, h_vals, self._pk_memo.keys_for(table), table.vals,
+                cache_uid=table.uid, version=table.version)
+            (h_ids, h_attrs, h_vals, h_sel), n = ops.select_mask_h(
+                [h_ids, h_attrs, h_vals, h_sel], fresh)
+        if n == 0:
+            return 0
+        sel = h_sel.host()[:n]
+        return table.insert(h_ids.host()[:n], h_attrs.host()[:n],
+                            h_vals.host()[:n], valtypes[sel], dedup=False)
 
     def _delete_matching(self, ftype: str, ids, attrs, vals) -> int:
         table = self.store.tables.get(ftype)
@@ -225,14 +284,37 @@ class HiperfactEngine:
 
     # -------------------------------------------------------------- actions
     def _slot_column(self, slot, bindings: Bindings, n: int,
-                     valtype: ValueType | None) -> np.ndarray:
-        """Materialize one action slot for all binding rows."""
+                     valtype: ValueType | None, handles: bool = False):
+        """One action slot for all binding rows: a host column, or (on
+        the device pipeline) a ``DeviceCol`` — variable slots pass the
+        binding handle through untouched and constant slots come from the
+        backend's memoized constant pool, so repeated evaluations reuse
+        the exact same handles."""
         if is_var(slot):
+            if handles:
+                return bindings.handle(slot.name, self.ops)
             return np.asarray(bindings.col(slot.name), np.int64)
         if valtype is None:  # id/attr slot: string handle
-            return np.full(n, self.store.strings.intern(slot), np.int64)
-        return np.full(n, encode_value(slot, valtype, self.store.strings),
-                       np.int64)
+            v = self.store.strings.intern(slot)
+        else:
+            v = encode_value(slot, valtype, self.store.strings)
+        if handles:
+            return self.ops.const_h(v, n)
+        return np.full(n, v, np.int64)
+
+    def _cat_parts(self, parts: list[tuple]) -> tuple:
+        """Concatenate per-action column tuples, keeping handle columns
+        on device (``concat_h``) and materializing only mixed batches."""
+        out = []
+        for pos, xs in enumerate(zip(*parts)):
+            if len(xs) == 1:
+                out.append(xs[0])
+            elif pos < 3 and any(is_handle(x) for x in xs):
+                out.append(self.ops.concat_h(list(xs)))
+            else:
+                out.append(np.concatenate(
+                    [x.host() if is_handle(x) else x for x in xs]))
+        return tuple(out)
 
     def _run_actions(self, rule: Rule, bindings: Bindings) -> tuple[dict, dict]:
         """Returns ({ftype: (ids, attrs, vals, valtypes)}, {ftype: (...)}) of
@@ -240,26 +322,31 @@ class HiperfactEngine:
         adds: dict[str, list] = {}
         dels: dict[str, list] = {}
         n = bindings.n
+        use_handles = (self._pipeline and
+                       getattr(bindings, "device_backed", lambda: False)())
         for a in rule.actions:
             if isinstance(a, ExternalAction):
                 a.callback({k: bindings.col(k) for k in bindings.names()})
                 continue
             if n == 0:
                 continue
-            ids = self._slot_column(a.id, bindings, n, None).astype(np.int32)
-            attrs = self._slot_column(a.attr, bindings, n, None).astype(np.int32)
+            # adds ride handles through the write-side device dedup;
+            # deletes and computed values need host arrays anyway
+            ha = (use_handles and isinstance(a, AddAction)
+                  and a.compute is None)
+            ids = self._slot_column(a.id, bindings, n, None, ha)
+            attrs = self._slot_column(a.attr, bindings, n, None, ha)
             if isinstance(a, AddAction) and a.compute is not None:
                 vals = np.asarray(
                     a.compute({k: bindings.col(k) for k in bindings.names()}),
                     np.int64)
             else:
-                vals = self._slot_column(a.val, bindings, n, a.valtype)
+                vals = self._slot_column(a.val, bindings, n, a.valtype, ha)
             valtypes = np.full(n, int(a.valtype), np.int8)
             bucket = adds if isinstance(a, AddAction) else dels
             bucket.setdefault(a.fact_type, []).append((ids, attrs, vals, valtypes))
-        cat = lambda parts: tuple(np.concatenate(x) for x in zip(*parts))
-        return ({t: cat(p) for t, p in adds.items()},
-                {t: cat(p) for t, p in dels.items()})
+        return ({t: self._cat_parts(p) for t, p in adds.items()},
+                {t: self._cat_parts(p) for t, p in dels.items()})
 
     # ------------------------------------------------------------ inference
     def _rule_inputs_changed(self, ridx: int) -> bool:
@@ -289,7 +376,7 @@ class HiperfactEngine:
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
             layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-            rl_fn=self._rl_fn(), ops=self.ops)
+            rl_fn=self._rl_fn(), ops=self.ops, pipeline=self._pipeline)
         adds, dels = self._run_actions(rule, bindings)
         return ridx, adds, dels
 
@@ -350,8 +437,7 @@ class HiperfactEngine:
                             by_type_dels.setdefault(t, []).append(cols)
 
                     def _write_type(t: str, parts: list) -> int:
-                        cols = tuple(np.concatenate(x) for x in zip(*parts))
-                        return self._insert_columns(t, *cols)
+                        return self._insert_columns(t, *self._cat_parts(parts))
 
                     if pool is not None and cfg.index_write == "PW" and len(by_type_adds) > 1:
                         futs = {t: pool.submit(_write_type, t, p)
@@ -361,7 +447,7 @@ class HiperfactEngine:
                         wrote = {t: _write_type(t, p)
                                  for t, p in by_type_adds.items()}
                     for t, parts in by_type_dels.items():
-                        cols = tuple(np.concatenate(x) for x in zip(*parts))
+                        cols = self._cat_parts(parts)
                         ndel = self._delete_matching(t, cols[0], cols[1], cols[2])
                         stats.facts_deleted += ndel
                         changed |= ndel > 0
@@ -383,7 +469,7 @@ class HiperfactEngine:
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
             layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-            rl_fn=self._rl_fn(), ops=self.ops)
+            rl_fn=self._rl_fn(), ops=self.ops, pipeline=self._pipeline)
         if not decode:
             return bindings
         return decode_bindings(self.store, conditions, bindings)

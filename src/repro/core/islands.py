@@ -24,8 +24,8 @@ import numpy as np
 
 from repro.backend import Ops
 from repro.core.conditions import Condition, Rule, bindings_for_rows, ccar, rl
-from repro.core.joins import (Bindings, dedup_bindings, join_bindings,
-                              make_bindings, semi_join_rows)
+from repro.core.joins import (Bindings, ColumnarBindings, dedup_bindings,
+                              join_bindings, make_bindings, semi_join_rows)
 from repro.core.store import Component, FactStore
 
 # ---------------------------------------------------------------------------
@@ -186,6 +186,7 @@ def order_conditions(isl: Island, bound: set[str], sort_mode: str) -> list[CondS
 def _lookup_condition(
     store: FactStore, c: Condition, acc: Bindings | None, rnl_mode: str,
     layout: str, rl_fn=None, ops: Ops | None = None,
+    pipeline: bool = False,
 ) -> Bindings:
     """RL lookup for one condition -> its binding table.
 
@@ -198,12 +199,49 @@ def _lookup_condition(
     it binary-searches the index's cached host mirrors, so repeated
     lookups between fact writes issue zero host<->device transfers (see
     backend/README.md §Device residency).
+
+    Device pipeline (``pipeline=True``, CR layout): the fetched binding
+    columns are uploaded once per ``(table, data_version, condition)``
+    and cached as ``DeviceCol`` handles; the AR restriction then runs as
+    a device semi-join + compaction on those handles, so the lookup
+    result enters the join chain already device-resident.  Because the
+    cached handles are stable at a fixed version, a repeated evaluation
+    hits the backend's uid-keyed memos end to end.
     """
     table = store.tables.get(c.fact_type)
-    rows = (rl_fn or rl)(store, c)
-    if table is None or len(rows) == 0:
-        return make_bindings({v: np.empty(0, np.int64) for v in c.variables()},
-                             layout)
+    pipeline = pipeline and layout == "CR" and ops is not None
+    cache = getattr(ops, "cache", None) if pipeline else None
+    handles = (cache.get(("bind", table.uid, c), table.data_version)
+               if cache is not None and table is not None else None)
+    if handles is None:
+        # a cache hit implies the same rows (rl is deterministic at a
+        # fixed data_version), so the RL fetch runs only on a miss
+        rows = (rl_fn or rl)(store, c)
+        if table is None or len(rows) == 0:
+            return make_bindings(
+                {v: np.empty(0, np.int64) for v in c.variables()}, layout)
+    if pipeline:
+        if handles is None:
+            cols = bindings_for_rows(table, c, rows)
+            handles = {k: ops.upload(v) for k, v in cols.items()}
+            if cache is not None:
+                cache.put(("bind", table.uid, c), table.data_version,
+                          handles,
+                          sum(getattr(h.data, "nbytes", 0)
+                              for h in handles.values()))
+        b = ColumnarBindings(handles)
+        if rnl_mode == "AR" and acc is not None and acc.n > 0 and b.n > 0:
+            for name in c.variables():
+                if name in acc.names():
+                    mask = ops.semi_join_h(b.handle(name, ops),
+                                           acc.handle(name, ops))
+                    names = b.names()
+                    sel, _ = ops.select_mask_h(
+                        [b.handle(k, ops) for k in names], mask)
+                    b = ColumnarBindings(dict(zip(names, sel)))
+                    if b.n == 0:
+                        break
+        return b
     if rnl_mode == "AR" and acc is not None and acc.n > 0:
         for name, comp in c.variables().items():
             if name in acc.names():
@@ -218,14 +256,24 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                   rnl_mode: str = "AR", layout: str = "CR",
                   sort_mode: str = "sortkeys", distinct: bool = False,
                   islands: list[Island] | None = None,
-                  rl_fn=None, ops: Ops | None = None) -> Bindings:
+                  rl_fn=None, ops: Ops | None = None,
+                  pipeline: bool | None = None) -> Bindings:
     """Full island-based evaluation of one rule -> final binding table.
 
     ``islands`` may be passed in pre-built (derivation-tree executor re-sorts
     keys once per level instead of per rule invocation — Algorithm 2 line 7).
+
+    ``pipeline`` routes the whole island chain through the backend's
+    handle tier (device-resident intermediates, fused join+gather, device
+    dedup); ``None`` defers to ``ops.prefer_handles`` — on by default for
+    device backends, off for the host backend.  CR layout only (RR is
+    the paper's internal-evaluation loser and stays host-side).
     """
     if islands is None:
         islands = build_islands(store, rule)
+    if pipeline is None:
+        pipeline = bool(getattr(ops, "prefer_handles", False))
+    pipeline = pipeline and layout == "CR" and ops is not None
     ordered = order_islands(islands)
     # A join test (Def. 9) fires as soon as both its variables are bound.
     pending = [(t, c.valtype) for c in rule.conditions for t in c.tests]
@@ -241,7 +289,7 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                         {"_exists": np.empty(0, np.int64)}, layout)
                 continue
             rhs = _lookup_condition(store, st.cond, acc, rnl_mode, layout,
-                                    rl_fn, ops)
+                                    rl_fn, ops, pipeline)
             if acc is None:
                 acc = rhs
             else:

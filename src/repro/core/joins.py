@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.backend import Ops, get_backend
+from repro.backend import DeviceCol, Ops, get_backend, is_handle
 
 _NUMPY_OPS = get_backend("numpy")
 
@@ -77,13 +77,31 @@ class Bindings:
 
 
 class ColumnarBindings(Bindings):
-    """CR: one tight int64 array per variable (paper's winning layout)."""
+    """CR: one tight int64 array per variable (paper's winning layout).
+
+    A column is either a host numpy array or an opaque ``DeviceCol``
+    handle (the device-pipeline executor builds binding tables whose
+    columns live on the accelerator).  ``col()`` materializes a handle to
+    host lazily — Python-side consumers (join tests, actions, decoding)
+    pay the download only when they actually read, and the handle caches
+    it so repeated reads are free.  ``handle()`` returns the device form
+    (uploading a host column on demand), which is what the fused join /
+    dedup paths consume.
+    """
 
     layout = "CR"
 
-    def __init__(self, cols: dict[str, np.ndarray]) -> None:
-        self.cols = {k: np.asarray(v, np.int64) for k, v in cols.items()}
-        self.n = len(next(iter(self.cols.values()))) if self.cols else 0
+    def __init__(self, cols: dict[str, "np.ndarray | DeviceCol"]) -> None:
+        self.cols: dict[str, np.ndarray | DeviceCol] = {}
+        self.n = 0
+        for k, v in cols.items():
+            if is_handle(v):
+                self.cols[k] = v
+                self.n = v.n
+            else:
+                v = np.asarray(v, np.int64)
+                self.cols[k] = v
+                self.n = len(v)
 
     @staticmethod
     def empty() -> "ColumnarBindings":
@@ -95,14 +113,34 @@ class ColumnarBindings(Bindings):
         return list(self.cols.keys())
 
     def col(self, name: str) -> np.ndarray:
-        return self.cols[name]
+        v = self.cols[name]
+        return v.host() if is_handle(v) else v
+
+    def handle(self, name: str, ops: Ops) -> DeviceCol:
+        v = self.cols[name]
+        if is_handle(v):
+            return v
+        # cache the upload: repeated reads at a fixed version must map to
+        # the same uid or the backend's memoization never hits (upload
+        # keeps the original array as the host mirror, so .col() stays
+        # free)
+        h = ops.upload(v)
+        self.cols[name] = h
+        return h
+
+    def device_backed(self) -> bool:
+        return any(is_handle(v) for v in self.cols.values())
 
     def select(self, idx: np.ndarray) -> "ColumnarBindings":
-        return ColumnarBindings({k: v[idx] for k, v in self.cols.items()})
+        idx = np.asarray(idx)
+        if len(idx) == 0:  # don't materialize handles to build nothing
+            return ColumnarBindings(
+                {k: np.empty(0, np.int64) for k in self.cols})
+        return ColumnarBindings({k: self.col(k)[idx] for k in self.cols})
 
     def merged(self, idx_self: np.ndarray, other: "Bindings",
                idx_other: np.ndarray) -> "ColumnarBindings":
-        out = {k: v[idx_self] for k, v in self.cols.items()}
+        out = {k: self.col(k)[idx_self] for k in self.cols}
         for k in other.names():
             if k not in out:
                 out[k] = other.col(k)[idx_other]
@@ -164,10 +202,33 @@ def join_bindings(left: Bindings, right: Bindings, keys: list[str],
     (exact, standard multi-key refinement).
     If there is no shared key the result is the cross product — the island
     planner avoids this unless the rule truly is a cross product.
+
+    When either side carries ``DeviceCol`` columns the join runs through
+    the backend's fused ``join_gather_h``: the pair-producing join, the
+    multi-key verification, and the payload gathers execute in one
+    device program and the merged binding table comes back as handles —
+    the ``(li, ri)`` pair arrays are never materialized on host.
     """
     ops = ops or _NUMPY_OPS
     if left.n == 0 or right.n == 0:
         return left.select(np.empty(0, np.int64))
+    if (keys and isinstance(left, ColumnarBindings)
+            and isinstance(right, ColumnarBindings)
+            and (left.device_backed() or right.device_backed())):
+        lk = left.handle(keys[0], ops)
+        rk = right.handle(keys[0], ops)
+        extra = [k for k in right.names() if k not in left.names()]
+        lpay = [left.handle(k, ops) for k in left.names()]
+        rpay = [right.handle(k, ops) for k in extra]
+        verify = [(left.handle(k, ops), right.handle(k, ops))
+                  for k in keys[1:]]
+        lout, rout, _ = ops.join_gather_h(lk, rk, lpay, rpay, verify, algo)
+        cols: dict[str, DeviceCol] = {}
+        for name, h in zip(left.names(), lout):
+            cols[name] = h
+        for name, h in zip(extra, rout):
+            cols[name] = h
+        return ColumnarBindings(cols)
     if not keys:
         li = np.repeat(np.arange(left.n, dtype=np.int64), right.n)
         ri = np.tile(np.arange(right.n, dtype=np.int64), left.n)
@@ -185,5 +246,12 @@ def dedup_bindings(b: Bindings, ops: Ops | None = None) -> Bindings:
     """Project-distinct over all columns (used for final query results)."""
     if b.n == 0:
         return b
-    keep = (ops or _NUMPY_OPS).dedup_rows([b.col(k) for k in b.names()])
+    ops = ops or _NUMPY_OPS
+    if isinstance(b, ColumnarBindings) and b.device_backed():
+        handles = [b.handle(k, ops) for k in b.names()]
+        idx, n = ops.dedup_select_h(handles)
+        return ColumnarBindings(
+            {k: ops.gather_h(h, idx, n)
+             for k, h in zip(b.names(), handles)})
+    keep = ops.dedup_rows([b.col(k) for k in b.names()])
     return b.select(keep)

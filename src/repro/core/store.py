@@ -87,6 +87,24 @@ class Rank1Index(abc.ABC):
     def count(self, table: "TypedFactTable", comp: Component, value: int) -> int:
         """(Possibly estimated) cardinality for CCar (Def. 6)."""
 
+    def lookup_batch(self, table: "TypedFactTable", comp: Component,
+                     values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Bulk rank-1 probe: row ids for *every* value in one call.
+
+        Returns ``(rows, offsets)`` in CSR form: rows for ``values[i]``
+        are ``rows[offsets[i]:offsets[i+1]]``.  Backends with a sorted
+        mirror override this with a single batched ``searchsorted``-style
+        kernel call (see ``SortedArrayIndex``); the default loops.
+        """
+        values = np.asarray(values)
+        parts = [self.lookup(table, comp, int(v)) for v in values]
+        offsets = np.zeros(len(values) + 1, np.int64)
+        if parts:
+            np.cumsum([len(p) for p in parts], out=offsets[1:])
+        rows = (np.concatenate(parts) if parts
+                else np.empty(0, np.int32))
+        return rows, offsets
+
     def memory_bytes(self) -> int:
         return 0
 
@@ -132,6 +150,33 @@ class SortedArrayIndex(Rank1Index):
     def count(self, table: "TypedFactTable", comp: Component, value: int) -> int:
         lo, hi = self._range(comp, value)
         return hi - lo
+
+    def lookup_batch(self, table: "TypedFactTable", comp: Component,
+                     values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched probe: all values resolved by one ``batch_probe`` call
+        against the index's sorted mirror — on the device backend that is
+        a single kernel launch over the *resident* mirror (one upload for
+        the probe batch, one download for the run bounds) instead of
+        per-probe host bisection."""
+        values = np.asarray(values, np.int64)
+        s = self._sorted.get(comp)
+        if s is None or len(s) == 0 or len(values) == 0:
+            return (np.empty(0, np.int32),
+                    np.zeros(len(values) + 1, np.int64))
+        lo, hi = self.ops.batch_probe(
+            s, values, cache_key=(table.uid, int(comp), ""),
+            version=table.version)
+        counts = hi - lo
+        offsets = np.zeros(len(values) + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        total = int(offsets[-1])
+        if total == 0:
+            return np.empty(0, np.int32), offsets
+        # expand [lo, hi) runs into one gather of the permutation
+        probe = np.repeat(np.arange(len(values), dtype=np.int64), counts)
+        within = np.arange(total, dtype=np.int64) - offsets[:-1][probe]
+        rows = self._perm[comp][lo[probe] + within]
+        return rows, offsets
 
     def memory_bytes(self) -> int:
         return sum(a.nbytes for a in self._sorted.values()) + sum(
@@ -295,13 +340,21 @@ class TypedFactTable:
     """
 
     __slots__ = ("ftype", "n", "_cap", "_id", "_attr", "_val", "_valtype",
-                 "_alive", "index", "_key_set", "version", "uid")
+                 "_alive", "index", "_key_set", "version", "uid",
+                 "data_version", "n_dead")
 
     def __init__(self, ftype: str, index_backend: str = "AI",
                  ops: Ops | None = None) -> None:
         self.ftype = ftype
         self.n = 0
         self.version = 0
+        # ``version`` tracks column appends only (deletes are tombstones
+        # that leave columns — and any device-resident copy — valid);
+        # ``data_version`` additionally bumps on deletes, so it is the
+        # invalidation token for anything derived from *visible* rows
+        # (e.g. the device pipeline's cached condition binding columns).
+        self.data_version = 0
+        self.n_dead = 0
         self.uid = next(_TABLE_UID)
         self._cap = PAGE_ROWS
         self._id = np.empty(self._cap, np.int32)
@@ -399,6 +452,7 @@ class TypedFactTable:
         self._alive[start : start + m] = True
         self.n = start + m
         self.version += 1  # before the index build: it caches under the
+        self.data_version += 1
         self.index.append(self, start, self.n)  # post-append version
         return m
 
@@ -408,7 +462,9 @@ class TypedFactTable:
     def delete_rows(self, rows: np.ndarray) -> None:
         rows = np.asarray(rows, np.int64)
         self._alive[rows] = False
-        for r in rows:
+        self.data_version += 1
+        self.n_dead += len(rows)  # upper bound (re-deletes overcount):
+        for r in rows:            # only == 0 is load-bearing
             self._key_set.discard(
                 (int(self._id[r]), int(self._attr[r]), int(self._val[r])))
 
@@ -446,6 +502,25 @@ class FactStore:
 
     def num_facts(self) -> int:
         return sum(int(t.alive.sum()) for t in self.tables.values())
+
+    def lookup_many(self, ftype: str, comp: Component,
+                    values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Bulk point lookup: alive row ids for every probe value, CSR
+        form ``(rows, offsets)``.  One batched index probe (a single
+        device kernel call on the jax backends for AI tables) instead of
+        a Python loop of per-value bisections."""
+        values = np.asarray(values)
+        t = self.tables.get(ftype)
+        if t is None:
+            return (np.empty(0, np.int32),
+                    np.zeros(len(values) + 1, np.int64))
+        rows, offsets = t.index.lookup_batch(t, comp, values)
+        if len(rows) == 0 or t.n_dead == 0:
+            return rows, offsets
+        mask = t.alive[rows]
+        kept_prefix = np.zeros(len(rows) + 1, np.int64)
+        np.cumsum(mask, out=kept_prefix[1:])
+        return rows[mask], kept_prefix[offsets]
 
     def memory_bytes(self) -> int:
         return sum(t.memory_bytes() for t in self.tables.values())

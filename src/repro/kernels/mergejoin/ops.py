@@ -3,6 +3,14 @@
 ``merge_join_bounded`` is the fully-jittable fixed-capacity join used by
 the distributed engine; the expansion of (lo, hi) runs into pairs is the
 searchsorted-on-prefix-sums trick (pure index arithmetic).
+
+``merge_join_gather_bounded`` is the fused device-pipeline form: the same
+probe + expansion, but candidate pairs are refined (multi-key / hash
+verification) and the joined *payload columns* are gathered and compacted
+on device in the same jit program — the ``(li, ri)`` pair arrays never
+exist on host.  Inputs follow the handle-tier convention (pad lanes are
+garbage; real lanes are ``[:n]``), so the keys are re-padded with the join
+sentinels inside the program instead of by the caller.
 """
 
 import functools
@@ -12,6 +20,20 @@ import jax.numpy as jnp
 
 from repro.kernels.mergejoin.mergejoin import probe_sorted
 from repro.kernels.sortmerge.ops import device_sort_kv
+
+_I64_MAX = (1 << 63) - 1
+_I64_MIN = -(1 << 63)
+
+
+def _splitmix64_dev(x: jnp.ndarray) -> jnp.ndarray:
+    """Device twin of ``backend.base.splitmix64`` (int64 in/out via
+    bitcast so values >= 2^63 survive the uint64 round-trip)."""
+    z = jax.lax.bitcast_convert_type(x, jnp.uint64)
+    z = z + jnp.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return jax.lax.bitcast_convert_type(z ^ (z >> jnp.uint64(31)),
+                                        jnp.int64)
 
 
 @functools.partial(jax.jit,
@@ -43,3 +65,115 @@ def merge_join_bounded(l_keys: jnp.ndarray, r_keys: jnp.ndarray, out_cap: int,
     ri = r_perm[jnp.clip(lo[row] + within.astype(jnp.int32), 0, m - 1)]
     li = row.astype(jnp.int32)
     return (jnp.where(valid, li, -1), jnp.where(valid, ri, -1), valid, total)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pack_pairs_bounded(li, ri, valid):
+    """Pack a bounded join's pair output into one int64 array
+    (``li << 32 | ri``) so the host-materializing fallback downloads a
+    single transfer.  Pairs are a prefix (``valid`` lanes come first), so
+    the caller slices ``[:total]`` before the download."""
+    li64 = jnp.where(valid, li, 0).astype(jnp.int64)
+    ri64 = jnp.where(valid, ri, 0).astype(jnp.int64)
+    return (li64 << 32) | (ri64 & 0xFFFFFFFF)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def device_compact(cols: tuple, mask: jnp.ndarray, n_real):
+    """Stable-compact every column to the lanes where ``mask`` holds
+    (lanes >= ``n_real`` are pads and never survive).  Returns cap-sized
+    arrays whose kept lanes form the prefix, plus the kept count."""
+    cap = cols[0].shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int64)
+    ok = mask & (lane < n_real)
+    pos = jnp.cumsum(ok.astype(jnp.int64)) - 1
+    tgt = jnp.where(ok, pos, cap)  # cap is out-of-bounds -> dropped
+    outs = tuple(jnp.zeros_like(c).at[tgt].set(c, mode="drop")
+                 for c in cols)
+    return outs, jnp.sum(ok)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_cap", "block", "force_pallas",
+                                    "interpret", "hash_keys"))
+def merge_join_gather_bounded(l_keys, r_keys, n_l, n_r,
+                              l_pay: tuple, r_pay: tuple,
+                              verify_l: tuple, verify_r: tuple,
+                              out_cap: int, block: int = 1024,
+                              force_pallas: bool = False,
+                              interpret: bool = False,
+                              hash_keys: bool = False):
+    """Fused sort-merge join + verify + payload gather.
+
+    Joins ``l_keys[:n_l]`` with ``r_keys[:n_r]`` (``hash_keys`` joins on
+    the splitmix64 domain with exact-key verification — the HJ axis),
+    refines candidates on the ``(verify_l[i], verify_r[i])`` column pairs
+    (multi-key joins), then gathers each payload column at the surviving
+    pairs and compacts to a prefix.  Returns
+
+        (l_out, r_out, stats)  with  stats = [total, total0, hash_bad]
+
+    ``total`` — surviving pairs (the real result length), ``total0`` —
+    candidate pairs *before* verification (if > ``out_cap`` the caller
+    must re-run with a larger capacity: candidates past the cap were
+    dropped unverified), ``hash_bad`` — a real hashed key collided with a
+    pad sentinel (astronomically rare; caller redoes on host).
+    """
+    cap_l, cap_r = l_keys.shape[0], r_keys.shape[0]
+    lane_l = jnp.arange(cap_l, dtype=jnp.int64)
+    lane_r = jnp.arange(cap_r, dtype=jnp.int64)
+    real_l, real_r = lane_l < n_l, lane_r < n_r
+    if hash_keys:
+        lk_dom = _splitmix64_dev(l_keys)
+        rk_dom = _splitmix64_dev(r_keys)
+        # a real hashed right key equal to the right pad sentinel would
+        # let real left keys match pad lanes; the symmetric left case is
+        # harmless because left-pad counts are zeroed below
+        hash_bad = jnp.any(real_r & (rk_dom == _I64_MIN))
+    else:
+        lk_dom, rk_dom = l_keys, r_keys
+        hash_bad = jnp.asarray(False)
+    # handle-tier pads are garbage: re-pad with the join sentinels here
+    # (left MAX / right MIN, so pads can never produce pairs)
+    lk = jnp.where(real_l, lk_dom, _I64_MAX)
+    rk = jnp.where(real_r, rk_dom, _I64_MIN)
+    r_sorted, r_perm = device_sort_kv(
+        rk, jnp.arange(cap_r, dtype=jnp.int32), block=block,
+        force_pallas=force_pallas, interpret=interpret)
+    if force_pallas or jax.default_backend() == "tpu":
+        lo, hi = probe_sorted(lk, r_sorted, block=block,
+                              interpret=interpret)
+    else:
+        lo = jnp.searchsorted(r_sorted, lk, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(r_sorted, lk, side="right").astype(jnp.int32)
+    # left pads probe MAX and would count pairs whenever a real right key
+    # equals MAX; zeroing their counts makes that collision structurally
+    # impossible (the remaining guard — a real *left* key equal to the
+    # right pad sentinel MIN — is checked by the caller via handle bounds)
+    counts = jnp.where(real_l, (hi - lo).astype(jnp.int64), 0)
+    starts = jnp.cumsum(counts) - counts
+    total0 = jnp.sum(counts)
+    out_idx = jnp.arange(out_cap, dtype=jnp.int64)
+    row = jnp.clip(jnp.searchsorted(starts, out_idx, side="right") - 1,
+                   0, cap_l - 1)
+    within = out_idx - starts[row]
+    valid = out_idx < total0  # candidates are emitted as a prefix
+    li = row
+    ri = r_perm[jnp.clip(lo[row] + within.astype(jnp.int32),
+                         0, cap_r - 1)].astype(jnp.int64)
+    ok = valid
+    if hash_keys:
+        ok = ok & (l_keys[li] == r_keys[ri])
+    for vl, vr in zip(verify_l, verify_r):
+        ok = ok & (vl[li] == vr[ri])
+    pos = jnp.cumsum(ok.astype(jnp.int64)) - 1
+    tgt = jnp.where(ok, pos, out_cap)
+    l_out = tuple(jnp.zeros(out_cap, p.dtype).at[tgt].set(p[li],
+                                                          mode="drop")
+                  for p in l_pay)
+    r_out = tuple(jnp.zeros(out_cap, p.dtype).at[tgt].set(p[ri],
+                                                          mode="drop")
+                  for p in r_pay)
+    stats = jnp.stack([jnp.sum(ok), total0,
+                       hash_bad.astype(jnp.int64)])
+    return l_out, r_out, stats

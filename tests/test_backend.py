@@ -386,6 +386,341 @@ def test_engine_backend_parity_presets(preset):
     assert make(backend="jax").label().endswith("@jax")
 
 
+# ---------------------------------------------------------------------------
+# Handle tier: device-resident intermediates bit-match the numpy host twins
+
+
+@pytest.mark.parametrize("ops", device_backends())
+@pytest.mark.parametrize("algo", ["MJ", "HJ"])
+def test_handle_join_gather_parity(ops, algo):
+    l = RNG.randint(0, 25, 260).astype(np.int64) * (1 << 33)
+    r = RNG.randint(0, 25, 140).astype(np.int64) * (1 << 33)
+    lv = RNG.randint(0, 4, 260).astype(np.int64)
+    rv = RNG.randint(0, 4, 140).astype(np.int64)
+    # build operands per backend, run the fused join, compare row sets
+    out = {}
+    for o in (ops, HOST):
+        hk, hr = o.upload(l), o.upload(r)
+        hlv, hrv = o.upload(lv), o.upload(rv)
+        lout, rout, n = o.join_gather_h(hk, hr, [hk, hlv], [hrv],
+                                        [(hlv, hrv)], algo)
+        out[o.name] = (n, sorted(zip(lout[0].host().tolist(),
+                                     lout[1].host().tolist(),
+                                     rout[0].host().tolist())))
+    (n1, rows1), (n2, rows2) = out.values()
+    assert n1 == n2 and rows1 == rows2
+    # oracle: pair join + verify + gather by hand
+    li, ri = HOST.join(l, r, algo)
+    ok = lv[li] == rv[ri]
+    assert n1 == int(ok.sum())
+
+
+@pytest.mark.parametrize("ops", device_backends())
+@pytest.mark.parametrize("algo", ["MJ", "HJ"])
+def test_handle_join_gather_empty(ops, algo):
+    e = np.empty(0, np.int64)
+    some = np.asarray([1, 2, 3], np.int64)
+    for l, r in ((e, some), (some, e), (e, e)):
+        lk, rk = ops.upload(l), ops.upload(r)
+        lout, rout, n = ops.join_gather_h(lk, rk, [lk], [rk], [], algo)
+        assert n == 0
+        assert lout[0].host().shape == (0,)
+        assert rout[0].host().shape == (0,)
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_handle_join_gather_sentinel(ops):
+    # real keys equal to the pad sentinels: right MAX is harmless (left
+    # pad counts are zeroed in-program), left MIN takes the exact host
+    # fallback via the handle bounds guard — either way, parity
+    l = np.asarray([5, INT64_MIN, 5, 9], np.int64)
+    r = np.asarray([5, 9, INT64_MAX, INT64_MIN], np.int64)
+    for a, b in ((l, r), (r, l), (l[:3], r)):
+        for o in (ops,):
+            lk, rk = o.upload(a), o.upload(b)
+            lout, rout, n = o.join_gather_h(lk, rk, [lk], [rk], [], "MJ")
+            li, ri = HOST.join_pairs(a, b)
+            assert n == len(li)
+            assert sorted(zip(lout[0].host().tolist(),
+                              rout[0].host().tolist())) == \
+                sorted(zip(a[li].tolist(), b[ri].tolist()))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_handle_dedup_select_parity(ops):
+    cols = [RNG.randint(0, 6, 300).astype(np.int64) for _ in range(3)]
+    hs = [ops.upload(c) for c in cols]
+    idx, n = ops.dedup_select_h(hs)
+    want = HOST.dedup_rows(cols)
+    assert n == len(want)
+    np.testing.assert_array_equal(idx.host(), want)
+    # gather through the kept index reproduces the distinct rows
+    g = ops.gather_h(hs[0], idx, n)
+    np.testing.assert_array_equal(g.host(), cols[0][want])
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_handle_dedup_select_width_overflow(ops):
+    # key span too wide to tag -> flag-based XLA path, same representative
+    cols = [RNG.choice([INT64_MIN + 2, -7, 0, 7, INT64_MAX - 2],
+                       200).astype(np.int64),
+            RNG.randint(0, 3, 200).astype(np.int64)]
+    idx, n = ops.dedup_select_h([ops.upload(c) for c in cols])
+    want = HOST.dedup_rows(cols)
+    assert n == len(want)
+    np.testing.assert_array_equal(idx.host(), want)
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_handle_semi_join_select_parity(ops):
+    keys = np.asarray([1, INT64_MAX, 3, INT64_MIN] +
+                      RNG.randint(-15, 15, 120).tolist(), np.int64)
+    bound = np.asarray([INT64_MAX, 3, -2], np.int64)
+    kh, bh = ops.upload(keys), ops.upload(bound)
+    mask = ops.semi_join_h(kh, bh)
+    (sel,), kept = ops.select_mask_h([kh], mask)
+    want = keys[HOST.semi_join(keys, bound)]
+    assert kept == len(want)
+    np.testing.assert_array_equal(sel.host(), want)
+    # empty bound -> nothing selected
+    m0 = ops.semi_join_h(kh, ops.upload(np.empty(0, np.int64)))
+    _, k0 = ops.select_mask_h([kh], m0)
+    assert k0 == 0
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_handle_fresh_mask_parity(ops):
+    old_k = RNG.randint(0, 40, 400).astype(np.int64)
+    old_v = RNG.randint(0, 3, 400).astype(np.int64)
+    new_k = RNG.randint(0, 50, 90).astype(np.int64)
+    new_v = RNG.randint(0, 3, 90).astype(np.int64)
+    got = ops.fresh_mask_h(ops.upload(new_k), ops.upload(new_v),
+                           old_k, old_v, cache_uid=("t", 1), version=3)
+    want = HOST.fresh_mask_h(HOST.upload(new_k), HOST.upload(new_v),
+                             old_k, old_v)
+    np.testing.assert_array_equal(got.host(), want.host())
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_handle_concat_pack_const(ops):
+    a = RNG.randint(0, 99, 70).astype(np.int64)
+    b = RNG.randint(0, 99, 30).astype(np.int64)
+    cat = ops.concat_h([ops.upload(a), ops.upload(np.empty(0, np.int64)),
+                        ops.upload(b)])
+    np.testing.assert_array_equal(cat.host(), np.concatenate([a, b]))
+    ids = RNG.randint(0, 1000, 50).astype(np.int64)
+    attrs = RNG.randint(0, 7, 50).astype(np.int64)
+    p = ops.pack_pairs_h(ops.upload(ids), ops.upload(attrs))
+    np.testing.assert_array_equal(p.host(), (ids << 32) | attrs)
+    c = ops.const_h(42, 17)
+    np.testing.assert_array_equal(c.host(), np.full(17, 42, np.int64))
+    np.testing.assert_array_equal(ops.iota_h(9).host(), np.arange(9))
+
+
+def test_handle_memo_repeat_is_free():
+    """Repeating a handle-tier op with the same operand handles is a
+    uid-keyed memo hit: same output handles, zero transfers."""
+    ops = fresh_jax_ops()
+    l = RNG.randint(0, 30, 400).astype(np.int64)
+    r = RNG.randint(0, 30, 200).astype(np.int64)
+    lk, rk = ops.upload(l), ops.upload(r)
+    lout, _, n = ops.join_gather_h(lk, rk, [lk], [rk], [], "MJ")
+    _ = lout[0].host()  # materialization is cached on the handle
+    snap = ops.transfers.snapshot()
+    lout2, _, n2 = ops.join_gather_h(lk, rk, [lk], [rk], [], "MJ")
+    assert lout2[0] is lout[0] and n2 == n
+    _ = lout2[0].host()
+    d = ops.transfers.delta(snap)
+    assert d.h2d_calls == 0 and d.d2h_calls == 0, d
+
+
+# ---------------------------------------------------------------------------
+# Batched rank-1 probes
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_batch_probe_parity(ops):
+    s = np.sort(RNG.randint(0, 200, 1000).astype(np.int64))
+    probes = RNG.randint(-10, 220, 128).astype(np.int64)
+    lo, hi = ops.batch_probe(s, probes, cache_key=("bp", 1), version=1)
+    wlo, whi = HOST.batch_probe(s, probes)
+    np.testing.assert_array_equal(lo, wlo)
+    np.testing.assert_array_equal(hi, whi)
+
+
+def test_batch_probe_resident_mirror():
+    """Repeated batched probes at a fixed version upload only the probe
+    batch (one transfer up, one down) — never the sorted mirror."""
+    ops = fresh_jax_ops()
+    s = np.sort(RNG.randint(0, 500, 4000).astype(np.int64))
+    probes = RNG.randint(0, 500, 64).astype(np.int64)
+    ops.batch_probe(s, probes, cache_key=("bp", 2), version=1)
+    snap = ops.transfers.snapshot()
+    ops.batch_probe(s, probes, cache_key=("bp", 2), version=1)
+    d = ops.transfers.delta(snap)
+    assert d.h2d_calls == 1 and d.d2h_calls == 1, d
+    assert d.h2d_bytes < s.nbytes // 4, d
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax-interpret"])
+def test_store_lookup_many(backend):
+    from repro.core.store import Component
+
+    e = HiperfactEngine(EngineConfig(index_backend="AI", backend=backend))
+    e.insert_facts([Fact("T", f"n{i % 7}", "attr", f"v{i}")
+                    for i in range(40)])
+    t = e.store.tables["T"]
+    values = np.concatenate([t.ids[:10].astype(np.int64),
+                             np.asarray([10**6], np.int64)])
+    rows, offs = e.store.lookup_many("T", Component.ID, values)
+    assert len(offs) == len(values) + 1
+    for i, v in enumerate(values):
+        got = sorted(rows[offs[i]:offs[i + 1]].tolist())
+        want = sorted(t.index.lookup(t, Component.ID, int(v)).tolist())
+        assert got == want
+    # after a delete, tombstoned rows drop out and offsets stay aligned
+    e._delete_matching("T", t.ids[:1], t.attrs[:1], t.vals[:1])
+    rows2, offs2 = e.store.lookup_many("T", Component.ID, values)
+    assert t.alive[rows2].all()
+    assert len(offs2) == len(values) + 1
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: zero transfers inside the join core of a fixed-version
+# multi-condition island fixpoint
+
+
+def island_rule():
+    return Rule("r3", (cond("T", "?x", "type", "?t"),
+                       cond("T", "?x", "knows", "?y"),
+                       cond("T", "?y", "type", "?u")),
+                (AddAction("T", term("?x"), "sees", term("?u")),))
+
+
+def island_facts():
+    facts = [Fact("T", f"n{i}", "type", f"c{i % 3}") for i in range(12)]
+    facts += [Fact("T", f"n{i}", "knows", f"n{(i + 1) % 12}")
+              for i in range(12)]
+    return facts
+
+
+def test_island_fixpoint_zero_transfers_join_core():
+    """A 3-condition island chain re-evaluated at a fixed table version:
+    lookups hit the cached binding handles, the fused joins / AR
+    semi-joins / dedup hit the uid-keyed memos — zero host<->device
+    transfers inside the join core."""
+    from repro.core.islands import evaluate_rule
+
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    rule = island_rule()
+    e.add_rule(rule)
+    e.insert_facts(island_facts())
+    stats = e.infer()
+    assert stats.facts_inferred > 0
+    snap = e.ops.transfers.snapshot()
+    b = evaluate_rule(e.store, rule, join_algo="MJ", rnl_mode="AR",
+                      layout="CR", distinct=True, ops=e.ops, pipeline=True)
+    d = e.ops.transfers.delta(snap)
+    assert d.h2d_calls == 0 and d.d2h_calls == 0, d
+    # ... and the result matches the host backend bit-for-bit
+    e_np = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                        unique="SU", backend="numpy"))
+    e_np.add_rule(rule)
+    e_np.insert_facts(island_facts())
+    e_np.infer()
+    b_np = evaluate_rule(e_np.store, rule, join_algo="MJ", rnl_mode="AR",
+                         layout="CR", distinct=True, ops=e_np.ops)
+    assert b.n == b_np.n
+    rows = sorted(zip(*(b.col(k).tolist() for k in sorted(b.names()))))
+    rows_np = sorted(zip(*(b_np.col(k).tolist()
+                           for k in sorted(b_np.names()))))
+    assert rows == rows_np
+
+
+def test_island_fixpoint_zero_transfers_full_sweep():
+    """Stronger form: force a full rule re-evaluation sweep (joins +
+    actions + write-side dedup/anti-join) at fixed versions — still zero
+    transfers end to end."""
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    e.add_rule(island_rule())
+    e.insert_facts(island_facts())
+    e.infer()
+    snap = e.ops.transfers.snapshot()
+    e._rule_seen_versions.clear()  # forces re-evaluation of every rule
+    s2 = e.infer()
+    d = e.ops.transfers.delta(snap)
+    assert s2.facts_inferred == 0
+    assert d.h2d_calls == 0 and d.d2h_calls == 0, d
+
+
+def test_pipeline_off_matches_pipeline_on():
+    """The per-primitive path (device_pipeline=off) and the fused handle
+    pipeline produce identical engine results."""
+    results = {}
+    for mode in ("on", "off"):
+        e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                         unique="SU", backend="jax",
+                                         device_pipeline=mode))
+        e.add_rules(rdfs_plus_rules())
+        e.insert_facts(kg_facts())
+        s = e.infer()
+        results[mode] = (s.facts_inferred, query_sets(e))
+    assert results["on"] == results["off"]
+
+
+def test_forced_pipeline_mixed_compute_actions():
+    """device_pipeline="on" forced onto the host backend, with one plain
+    and one computed action on the same fact type: handle and ndarray
+    columns meet in the write-side concat (regression: base concat_h must
+    normalize mixed parts)."""
+    from repro.core.facts import ValueType
+
+    for backend in ("numpy", "jax-interpret"):
+        e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                         unique="SU", backend=backend,
+                                         device_pipeline="on"))
+        rule = Rule("mix", (cond("T", "?x", "v", "?a",
+                                 valtype=ValueType.INT64),),
+                    (AddAction("T", term("?x"), "plain", term("?a"),
+                               ValueType.INT64),
+                     AddAction("T", term("?x"), "twice", None,
+                               ValueType.INT64,
+                               compute=lambda b: b["a"] * 2)))
+        e.add_rule(rule)
+        e.insert_facts([Fact("T", f"n{i}", "v", i, ValueType.INT64)
+                        for i in range(5)])
+        stats = e.infer()
+        assert stats.facts_inferred == 10
+        got = {(r["x"], r["b"]) for r in
+               e.query([cond("T", "?x", "twice", "?b",
+                             valtype=ValueType.INT64)])}
+        assert got == {(f"n{i}", 2 * i) for i in range(5)}
+
+
+def test_device_cache_refresh_spill():
+    from repro.backend.device_cache import DeviceArrayCache
+
+    c = DeviceArrayCache(1 << 20)
+    c.put("a", 1, "A", 100)
+    c.put("b", 1, "B", 100)
+    r = c.refresh()  # both touched this generation -> kept
+    assert r["spilled"] == 0 and r["kept"] == 2
+    assert c.get("a", 1) == "A"  # touch a, not b
+    r = c.refresh()
+    r = c.refresh()  # b now idle for 2 cycles > max_idle=1 -> spilled
+    assert c.get("b", 1) is None
+    assert c.stats()["spilled"] >= 1
+    # spill hook pins everything regardless of idleness
+    c.put("c", 1, "C", 100)
+    c.spill_hook = lambda key, e: True
+    for _ in range(4):
+        c.refresh()
+    assert c.get("c", 1) == "C"
+    assert 0.0 <= c.stats()["hit_rate"] <= 1.0
+
+
 def test_engine_interpret_mode_smoke():
     """One tiny fixpoint through the Pallas kernels under the interpreter:
     the full kernel code path runs on CPU, end to end."""
