@@ -61,11 +61,9 @@ def run_hiperfact(cfg: EngineConfig, facts, queries) -> dict:
         # not cumulative totals (entries/bytes are point-in-time gauges);
         # evictions vs spilled distinguishes capacity thrash from
         # cooperative refresh() spills
-        cur = e.ops.cache.stats()
-        out["cache"] = {k: (cur[k] - cache_snap[k]
-                            if k in ("hits", "misses", "stale",
-                                     "evictions", "spilled", "refreshes")
-                            else cur[k]) for k in cur}
+        # per-run view: the backend instance (and its cache) is
+        # process-wide, so report this run's delta, not the totals
+        out["cache"] = e.ops.cache.delta_stats(cache_snap)
         e.ops.cache.refresh()  # engine done: release its idle residency
     return out
 
@@ -131,6 +129,93 @@ def bench(scale: int = 1, wordnet_n: int = 1500, include_rete: bool = True,
                 rows.append((dname, "rete_baseline",
                              run_rete(facts, queries)))
     return rows
+
+
+def _fact_checksum(engine) -> tuple[int, int]:
+    """Order-insensitive digest of every alive fact (type, id, attr,
+    val): the delta-vs-full parity check must be bit-exact on the fact
+    *set*, not on insertion order."""
+    import zlib
+    n = 0
+    acc = 0
+    for ftype, t in sorted(engine.store.tables.items()):
+        alive = t.alive
+        packed = (t.ids.astype("i8") << 40) ^ (t.attrs.astype("i8") << 20) \
+            ^ t.vals.astype("i8")
+        rows = sorted(int(x) for x in packed[alive])
+        acc = zlib.crc32(repr((ftype, rows)).encode(), acc)
+        n += len(rows)
+    return n, acc
+
+
+def bench_streaming(scale: int = 8, backend: str = "numpy",
+                    eval_modes=("full", "delta"), n_rounds: int = 4,
+                    batch: int = 80, runs: int = 2):
+    """Streaming-append scenario: load -> infer -> append small batches
+    -> re-infer, per eval_mode.  Reports per-round wall time, transfer
+    bytes (device backends), and the semi-naive stats; the fact-set
+    checksum asserts delta ≡ full.  Each mode's whole scenario runs
+    ``runs`` times, keeping the best re-infer total (scheduler noise on
+    millisecond rounds would otherwise dominate)."""
+    facts = lubm_like(scale)
+    held = n_rounds * batch
+    base, stream = facts[:-held], facts[-held:]
+    batches = [stream[i * batch:(i + 1) * batch] for i in range(n_rounds)]
+    out = []
+    for mode in eval_modes:
+        best = None
+        for _ in range(max(1, runs)):
+            res = _stream_once(mode, backend, base, batches)
+            if best is None or res["reinfer_total_s"] < best["reinfer_total_s"]:
+                best = res
+        out.append(best)
+    return out
+
+
+def _stream_once(mode, backend, base, batches):
+    import dataclasses
+    cfg = dataclasses.replace(EngineConfig.infer1(backend),
+                              eval_mode=mode)
+    e = HiperfactEngine(cfg)
+    tc = getattr(e.ops, "transfers", None)
+    cache = getattr(e.ops, "cache", None)
+    cache_snap = cache.stats() if tc is not None else None
+    e.add_rules(rdfs_plus_rules())
+    e.insert_facts(base)
+    t0 = time.perf_counter()
+    s0 = e.infer()
+    initial_s = time.perf_counter() - t0
+    rounds = []
+    for b in batches:
+        t0 = time.perf_counter()
+        e.insert_facts(b)
+        append_s = time.perf_counter() - t0
+        snap = tc.snapshot() if tc is not None else None
+        t0 = time.perf_counter()
+        st = e.infer()
+        infer_s = time.perf_counter() - t0
+        row = {"append_s": append_s, "infer_s": infer_s,
+               "inferred": st.facts_inferred,
+               "rows_considered": st.rows_considered,
+               "rows_emitted": st.rows_emitted,
+               "delta_passes": st.delta_passes,
+               "full_evals": st.full_evals}
+        if tc is not None:
+            d = tc.delta(snap)
+            row["h2d_bytes"] = d.h2d_bytes
+            row["d2h_bytes"] = d.d2h_bytes
+        rounds.append(row)
+    n_facts, checksum = _fact_checksum(e)
+    res = {"mode": mode, "facts_loaded": len(base),
+           "initial_infer_s": initial_s,
+           "initial_inferred": s0.facts_inferred,
+           "rounds": rounds,
+           "reinfer_total_s": sum(r["infer_s"] for r in rounds),
+           "n_facts": n_facts, "checksum": checksum}
+    if tc is not None:
+        res["cache"] = cache.delta_stats(cache_snap)
+        e.ops.cache.refresh()
+    return res
 
 
 def main(scale: int = 1, backend: str = "numpy"):

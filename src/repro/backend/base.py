@@ -139,6 +139,21 @@ class Ops(abc.ABC):
         hi = int(arr.max()) if len(arr) else None
         return DeviceCol(arr, len(arr), self, lo, hi, host=arr)
 
+    def upload_resident(self, cache_key, version: int, arr: np.ndarray,
+                        assume_prefix: bool = False,
+                        transient: bool = False) -> DeviceCol:
+        """Upload a column identified as the ``version``-stamped state of
+        an append-frontier source (a condition's binding column over an
+        append-only table): device backends keep the buffer resident and,
+        when the cached entry is a *prefix* of ``arr``, upload only the
+        appended tail (``assume_prefix`` skips the host prefix check when
+        the caller knows rows extend append-only, e.g. a full scan of a
+        tombstone-free table).  ``transient`` marks one-shot state (a
+        delta window at a never-recurring watermark): device backends
+        upload without caching and mark the handle unstable so derived
+        results skip memoization.  Host backends ignore the hints."""
+        return self.upload(arr)
+
     def materialize(self, h: DeviceCol) -> np.ndarray:
         """Host array for ``h`` (device backends download, once)."""
         return np.asarray(h.data[: h.n])
@@ -226,6 +241,38 @@ class Ops(abc.ABC):
         rout = [DeviceCol(p.host()[ri], n, self, p.lo, p.hi)
                 for p in rpay]
         return lout, rout, n
+
+    def cross_join_h(self, lpay: list[DeviceCol], rpay: list[DeviceCol],
+                     n_l: int, n_r: int
+                     ) -> tuple[list[DeviceCol], list[DeviceCol], int]:
+        """Cross product of two binding tables (no shared variable — the
+        island planner only emits this when the rule truly is a cross
+        product, typically refined by a join test right after): left
+        payloads repeat, right payloads tile.  Device backends expand on
+        device so test-bearing cross products stay resident."""
+        total = n_l * n_r
+        li = np.repeat(np.arange(n_l, dtype=np.int64), n_r)
+        ri = np.tile(np.arange(n_r, dtype=np.int64), n_l)
+        lout = [DeviceCol(p.host()[li], total, self, p.lo, p.hi)
+                for p in lpay]
+        rout = [DeviceCol(p.host()[ri], total, self, p.lo, p.hi)
+                for p in rpay]
+        return lout, rout, total
+
+    def test_mask_h(self, a: DeviceCol, b: DeviceCol, op: str,
+                    valtype: int) -> DeviceCol:
+        """Join-test comparison mask (Def. 9) over handle columns: the
+        lanes are decoded to their value domain (float bit-puns,
+        uint64 views) before the ordered compare.  ``b`` may be a
+        constant column (the var⊕const form).  Device backends evaluate
+        the compare in one jit program so test-bearing rules stay
+        resident."""
+        from repro.core.facts import ValueType, decode_lane_array
+        from repro.core.conditions import _TEST_OPS
+        vt = ValueType(valtype)
+        m = _TEST_OPS[op](decode_lane_array(a.host(), vt),
+                          decode_lane_array(b.host()[: a.n], vt))
+        return DeviceCol(m, a.n, self, host=m)
 
     def dedup_select_h(self, cols: list[DeviceCol]
                        ) -> tuple[DeviceCol, int]:

@@ -104,6 +104,7 @@ class DeviceArrayCache:
         self.hits = 0
         self.misses = 0
         self.stale = 0
+        self.extended = 0
         self.evictions = 0
         self.spilled = 0
         self.refreshes = 0
@@ -120,11 +121,17 @@ class DeviceArrayCache:
 
     def stats(self) -> dict:
         total = self.hits + self.misses + self.stale
+        # an extension reused the resident buffer in place (only the
+        # appended tail was uploaded), so the lookup that was counted
+        # ``stale`` did the job of a hit — fold it back in.  Extensions
+        # are a subset of stales, so the rate stays <= 1.
+        eff = self.hits + min(self.extended, self.stale)
         return {"hits": self.hits, "misses": self.misses,
-                "stale": self.stale, "evictions": self.evictions,
+                "stale": self.stale, "extended": self.extended,
+                "evictions": self.evictions,
                 "spilled": self.spilled, "refreshes": self.refreshes,
                 "entries": len(self._entries), "bytes": self._bytes,
-                "hit_rate": (self.hits / total) if total else 0.0}
+                "hit_rate": (eff / total) if total else 0.0}
 
     # -- operations --------------------------------------------------------
     def get(self, key: Hashable, version: int) -> Any | None:
@@ -151,6 +158,30 @@ class DeviceArrayCache:
                 e.gen = self.generation
                 self._entries.move_to_end(key)
             return e
+
+    def delta_stats(self, since: dict) -> dict:
+        """Per-run view of the counters: current ``stats()`` minus a
+        prior snapshot for the monotone counters, with ``hit_rate``
+        recomputed over the window (gauges pass through unchanged).
+        Bench harnesses share one process-wide cache, so this is the
+        only way to attribute traffic to a single engine run."""
+        cur = self.stats()
+        counters = ("hits", "misses", "stale", "extended", "evictions",
+                    "spilled", "refreshes")
+        out = {k: (cur[k] - since[k] if k in counters else cur[k])
+               for k in cur}
+        total = out["hits"] + out["misses"] + out["stale"]
+        eff = out["hits"] + min(out["extended"], out["stale"])
+        out["hit_rate"] = eff / total if total else 0.0
+        return out
+
+    def note_extended(self, key: Hashable = None) -> None:
+        """Record that a stale entry was *extended* in place (append-only
+        buffer sync uploaded only the tail) — the watermark-range form of
+        a hit.  Callers invoke this after a successful extension so
+        fixed-prefix entries stop being accounted as full rebuilds."""
+        with self._lock:
+            self.extended += 1
 
     def put(self, key: Hashable, version: int, value: Any,
             nbytes: int = 0) -> None:

@@ -42,19 +42,30 @@ _HANDLE_UID = itertools.count(1)
 
 class DeviceCol:
     """Immutable handle to a backend-resident int64 column (see module
-    docstring for the field contracts)."""
+    docstring for the field contracts).
 
-    __slots__ = ("data", "n", "uid", "lo", "hi", "owner", "_host")
+    ``stable`` marks handles that can recur across calls (uploads the
+    caller may retain, cache-resident columns, and anything derived from
+    only-stable operands).  Handles born from one-shot state — a
+    semi-naive delta window, whose watermark never repeats — are
+    *transient* (``stable=False``): device backends skip uid-keyed
+    memoization for any op touching them, since the memo entry could
+    never hit again."""
+
+    __slots__ = ("data", "n", "uid", "lo", "hi", "owner", "stable",
+                 "_host")
 
     def __init__(self, data: Any, n: int, owner, lo: int | None = None,
                  hi: int | None = None,
-                 host: np.ndarray | None = None) -> None:
+                 host: np.ndarray | None = None,
+                 stable: bool = True) -> None:
         self.data = data
         self.n = int(n)
         self.uid = next(_HANDLE_UID)
         self.lo = lo  # None when unknown/empty: guards treat as "assume worst"
         self.hi = hi
         self.owner = owner
+        self.stable = stable
         self._host = host
 
     def __len__(self) -> int:

@@ -192,6 +192,39 @@ def _jitted():
         return jnp.stack([jnp.minimum(lo, n_real),
                           jnp.minimum(hi, n_real)])
 
+    def _decode_lanes(x, vt):
+        """Device twin of ``facts.decode_lane_array``: int64 lanes ->
+        comparable value domain (ValueType ints are static)."""
+        if vt == 5:    # FLOAT: low 32 bits are a float32 pattern
+            return jax.lax.bitcast_convert_type(x.astype(jnp.int32),
+                                                jnp.float32)
+        if vt == 6:    # DOUBLE
+            return jax.lax.bitcast_convert_type(x, jnp.float64)
+        if vt == 4:    # UINT64
+            return jax.lax.bitcast_convert_type(x, jnp.uint64)
+        return x
+
+    _CMP = {"==": jnp.equal, "!=": jnp.not_equal,
+            ">=": jnp.greater_equal, "<=": jnp.less_equal,
+            ">": jnp.greater, "<": jnp.less}
+
+    @functools.partial(jax.jit, static_argnames=("op", "vt"))
+    def test_mask(a, b, op, vt):
+        """Join-test compare on decoded lanes (Def. 9); pad lanes
+        produce garbage mask bits that every consumer masks by n."""
+        return _CMP[op](_decode_lanes(a, vt), _decode_lanes(b, vt))
+
+    @functools.partial(jax.jit, static_argnames=("cap",))
+    def cross_gather(lcols, rcols, n_r, cap):
+        """Cross-product expansion: lane k -> (k // n_r, k % n_r)
+        gathers of each payload (pads beyond n_l*n_r are garbage)."""
+        idx = jnp.arange(cap, dtype=jnp.int64)
+        li = idx // jnp.maximum(n_r, 1)
+        ri = idx % jnp.maximum(n_r, 1)
+        louts = tuple(c[jnp.clip(li, 0, c.shape[0] - 1)] for c in lcols)
+        routs = tuple(c[jnp.clip(ri, 0, c.shape[0] - 1)] for c in rcols)
+        return louts, routs
+
     @functools.partial(jax.jit, static_argnames=())
     def extend_buffer(buf, delta, n_old):
         """Append-only column sync: overwrite [n_old, n_old+len(delta))
@@ -205,7 +238,8 @@ def _jitted():
             "extend_buffer": extend_buffer, "semi_join_n": semi_join_n,
             "gather_clip": gather_clip, "pack_pairs": pack_pairs,
             "sort_pairs_xla": sort_pairs_xla, "fresh_pairs": fresh_pairs,
-            "batch_probe_j": batch_probe_j}
+            "batch_probe_j": batch_probe_j, "test_mask": test_mask,
+            "cross_gather": cross_gather}
 
 
 class JaxOps(Ops):
@@ -301,6 +335,7 @@ class JaxOps(Ops):
                          "kmin": min(old["kmin"], int(delta.min())),
                          "kmax": max(old["kmax"], int(delta.max()))}
                 self.cache.put(key, version, value, buf.nbytes)
+                self.cache.note_extended(key)
                 return value
         # full (re-)upload: first sight of this column, non-append-only
         # change, or capacity growth
@@ -511,6 +546,13 @@ class JaxOps(Ops):
 
     prefer_handles = True
 
+    @staticmethod
+    def _memoable(*handles) -> bool:
+        """Memoize only chains built from stable handles — an op with a
+        transient operand (delta-window state) can never see the same
+        uids again, so a memo entry would be a guaranteed-dead miss."""
+        return all(h.stable for h in handles)
+
     def _memo_get(self, key):
         return self.cache.get(("hmemo",) + key, 0)
 
@@ -546,13 +588,118 @@ class JaxOps(Ops):
         n = len(arr)
         if n == 0:
             return self._empty_h()
-        buf = self._to_dev(self._pad(arr, self._bucket(n), 0))
+        # small columns (delta slices, append frontiers) pad to a small
+        # power-of-two bucket — h2d bytes scale with Δ, not with the
+        # kernel block (the device programs re-pad internally, so a
+        # sub-block cap is legal everywhere handles flow)
+        buf = self._to_dev(self._pad(arr, self._delta_bucket(n), 0))
         return DeviceCol(buf, n, self, int(arr.min()), int(arr.max()),
                          host=arr)
 
     def upload(self, arr) -> DeviceCol:
         with self._lock, self._x64():
             return self._upload_locked(arr)
+
+    def upload_resident(self, cache_key, version: int, arr,
+                        assume_prefix: bool = False,
+                        transient: bool = False) -> DeviceCol:
+        """Delta-only upload of an append-frontier column (semi-naive
+        eval): the device buffer for ``cache_key`` stays resident across
+        versions, and when the cached state is a prefix of ``arr`` —
+        rows appended at the frontier, nothing rewritten — only the tail
+        goes up via ``dynamic_update_slice``.  The returned handle is
+        stable per ``(cache_key, version)``, so downstream uid-keyed
+        memos keep hitting between appends."""
+        arr = np.ascontiguousarray(np.asarray(arr, np.int64))
+        n = len(arr)
+        if n == 0:
+            return self._empty_h()
+        if transient:
+            # one-shot window: no resident entry could ever be reused,
+            # so upload straight and poison downstream memoization
+            with self._lock, self._x64():
+                h = self._upload_locked(arr)
+            h.stable = False
+            return h
+        key = ("rescol", cache_key)
+        hit = self.cache.get(key, version)
+        if hit is not None and hit.n == n:
+            return hit
+        jt = _jitted()
+        with self._lock, self._x64():
+            e = self.cache.get_any(key)
+            if e is not None and e.value.n < n:
+                old = e.value
+                cap = old.data.shape[0]
+                n_old = old.n
+                delta = arr[n_old:]
+                dcap = self._delta_bucket(len(delta))
+                prefix_ok = old.bounds_known() and (
+                    assume_prefix or (
+                        old._host is not None and
+                        np.array_equal(arr[:n_old], old._host[:n_old])))
+                if prefix_ok and n <= cap and n_old + dcap <= cap:
+                    buf = jt["extend_buffer"](
+                        old.data, self._to_dev(self._pad(delta, dcap, 0)),
+                        n_old)
+                    lo = min(int(delta.min()), old.lo)
+                    hi = max(int(delta.max()), old.hi)
+                    h = DeviceCol(buf, n, self, lo, hi, host=arr)
+                    self.cache.put(key, version, h, buf.nbytes)
+                    self.cache.note_extended(key)
+                    return h
+            h = self._upload_locked(arr)
+        self.cache.put(key, version, h,
+                       getattr(h.data, "nbytes", 0))
+        return h
+
+    def cross_join_h(self, lpay, rpay, n_l: int, n_r: int):
+        total = n_l * n_r
+        if total == 0:
+            return ([self._empty_h() for _ in lpay],
+                    [self._empty_h() for _ in rpay], 0)
+        memo = self._memoable(*lpay, *rpay)
+        key = ("cross", tuple(p.uid for p in lpay),
+               tuple(p.uid for p in rpay), n_l, n_r)
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
+        cap = self._bucket(total)
+        with self._lock, self._x64():
+            louts, routs = _jitted()["cross_gather"](
+                tuple(p.data for p in lpay), tuple(p.data for p in rpay),
+                n_r, cap=cap)
+        lout = [DeviceCol(d, total, self, p.lo, p.hi, stable=memo)
+                for d, p in zip(louts, lpay)]
+        rout = [DeviceCol(d, total, self, p.lo, p.hi, stable=memo)
+                for d, p in zip(routs, rpay)]
+        out = (lout, rout, total)
+        if memo:
+            return self._memo_put(
+                key, out, sum(d.nbytes for d in louts)
+                + sum(d.nbytes for d in routs))
+        return out
+
+    def test_mask_h(self, a: DeviceCol, b: DeviceCol, op: str,
+                    valtype: int) -> DeviceCol:
+        if a.n == 0:
+            e = np.zeros(0, bool)
+            return DeviceCol(e, 0, self, host=e)
+        memo = self._memoable(a, b)
+        key = ("tm", a.uid, b.uid, op, int(valtype))
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
+        with self._lock, self._x64():
+            buf = _jitted()["test_mask"](
+                a.data, self._fit_cap(b.data, a.data.shape[0]),
+                op=op, vt=int(valtype))
+        h = DeviceCol(buf, a.n, self, stable=memo)
+        if memo:
+            return self._memo_put(key, h, buf.nbytes)
+        return h
 
     def materialize(self, h: DeviceCol) -> np.ndarray:
         if isinstance(h.data, np.ndarray):
@@ -592,12 +739,25 @@ class JaxOps(Ops):
         live = [p for p in parts if p.n] or parts[:1]
         if len(live) == 1:
             return live[0]
+        memo = self._memoable(*live)
         key = ("cat",) + tuple(p.uid for p in live)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         import jax.numpy as jnp
         total = sum(p.n for p in live)
+        if total <= self.block:
+            # small batches (delta-round action columns): device concat
+            # would jit-compile every new piece-shape combination, so
+            # host-concat + one delta-bucket upload is strictly cheaper
+            out = np.concatenate([p.host() for p in live])
+            h = self.upload(out)
+            h.stable = memo
+            if memo:
+                return self._memo_put(key, h,
+                                      getattr(h.data, "nbytes", 0))
+            return h
         with self._lock, self._x64():
             pieces = [p.data[: p.n] if not isinstance(p.data, np.ndarray)
                       else self._to_dev(p.data[: p.n]) for p in live]
@@ -606,50 +766,62 @@ class JaxOps(Ops):
                 pieces.append(jnp.zeros(cap - total, jnp.int64))
             buf = jnp.concatenate(pieces)
         lo, hi = merge_bounds(*live)
-        h = DeviceCol(buf, total, self, lo, hi)
-        return self._memo_put(key, h, buf.nbytes)
+        h = DeviceCol(buf, total, self, lo, hi, stable=memo)
+        if memo:
+            return self._memo_put(key, h, buf.nbytes)
+        return h
 
     def gather_h(self, col: DeviceCol, idx: DeviceCol,
                  n: int | None = None) -> DeviceCol:
         n = idx.n if n is None else n
         if n == 0 or col.n == 0:
             return self._empty_h()
+        memo = self._memoable(col, idx)
         key = ("g", col.uid, idx.uid, n)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         with self._lock, self._x64():
             buf = _jitted()["gather_clip"](col.data, idx.data)
-        h = DeviceCol(buf, n, self, col.lo, col.hi)
-        return self._memo_put(key, h, buf.nbytes)
+        h = DeviceCol(buf, n, self, col.lo, col.hi, stable=memo)
+        if memo:
+            return self._memo_put(key, h, buf.nbytes)
+        return h
 
     def select_mask_h(self, cols, mask: DeviceCol):
         n = cols[0].n
         if n == 0:
             return [self._empty_h() for _ in cols], 0
+        memo = self._memoable(mask, *cols)
         key = ("sel", tuple(c.uid for c in cols), mask.uid)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         from repro.kernels.mergejoin.ops import device_compact
         with self._lock, self._x64():
             cap = mask.data.shape[0]
             datas = tuple(self._fit_cap(c.data, cap) for c in cols)
             outs, cnt = device_compact(datas, mask.data, n)
             kept = int(self._to_host(cnt))
-        handles = [DeviceCol(d, kept, self, c.lo, c.hi)
+        handles = [DeviceCol(d, kept, self, c.lo, c.hi, stable=memo)
                    for d, c in zip(outs, cols)]
-        return self._memo_put(key, (handles, kept),
-                              sum(d.nbytes for d in outs))
+        if memo:
+            return self._memo_put(key, (handles, kept),
+                                  sum(d.nbytes for d in outs))
+        return handles, kept
 
     def semi_join_h(self, keys: DeviceCol, bound: DeviceCol) -> DeviceCol:
         if keys.n == 0:
             e = np.zeros(0, bool)
             return DeviceCol(e, 0, self, host=e)
+        memo = self._memoable(keys, bound)
         key = ("sj", keys.uid, bound.uid)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         import jax.numpy as jnp
         with self._lock, self._x64():
             if bound.n == 0:
@@ -659,24 +831,30 @@ class JaxOps(Ops):
                     keys.data, bound.data, bound.n, block=self.block,
                     force_pallas=self.force_pallas,
                     interpret=self.interpret)
-        h = DeviceCol(buf, keys.n, self)
-        return self._memo_put(key, h, buf.nbytes)
+        h = DeviceCol(buf, keys.n, self, stable=memo)
+        if memo:
+            return self._memo_put(key, h, buf.nbytes)
+        return h
 
     def pack_pairs_h(self, a: DeviceCol, b: DeviceCol) -> DeviceCol:
         if a.n == 0:
             return self._empty_h()
+        memo = self._memoable(a, b)
         key = ("pp", a.uid, b.uid)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         with self._lock, self._x64():
             buf = _jitted()["pack_pairs"](
                 a.data, self._fit_cap(b.data, a.data.shape[0]))
         lo = hi = None
         if a.lo is not None and a.hi is not None:
             lo, hi = (a.lo << 32), (a.hi << 32) | 0xFFFFFFFF
-        h = DeviceCol(buf, a.n, self, lo, hi)
-        return self._memo_put(key, h, buf.nbytes)
+        h = DeviceCol(buf, a.n, self, lo, hi, stable=memo)
+        if memo:
+            return self._memo_put(key, h, buf.nbytes)
+        return h
 
     def join_gather_h(self, lkeys: DeviceCol, rkeys: DeviceCol,
                       lpay, rpay, verify=(), algo: str = "MJ"):
@@ -686,19 +864,27 @@ class JaxOps(Ops):
         if lkeys.n == 0 or rkeys.n == 0:
             return ([self._empty_h() for _ in lpay],
                     [self._empty_h() for _ in rpay], 0)
+        memo = self._memoable(lkeys, rkeys, *lpay, *rpay,
+                              *(a for a, _ in verify),
+                              *(b for _, b in verify))
         key = ("jg", algo, lkeys.uid, rkeys.uid,
                tuple(p.uid for p in lpay), tuple(p.uid for p in rpay),
                tuple((a.uid, b.uid) for a, b in verify))
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         hash_keys = algo == "HJ"
         # a real left key equal to the right pad sentinel would match pad
         # lanes (MJ only; the hash domain is checked inside the program)
         if not hash_keys and (lkeys.lo is None or lkeys.lo == INT64_MIN):
             out = self._join_gather_host(lkeys, rkeys, lpay, rpay,
                                          verify, algo)
-            return self._memo_put(key, out, self._handles_nbytes(out))
+            for h in out[0] + out[1]:
+                h.stable = memo
+            if memo:
+                return self._memo_put(key, out, self._handles_nbytes(out))
+            return out
         from repro.kernels.mergejoin.ops import merge_join_gather_bounded
         cap = self._bucket(max(lkeys.n, rkeys.n))
         bad = False
@@ -723,14 +909,21 @@ class JaxOps(Ops):
         if bad:
             out = self._join_gather_host(lkeys, rkeys, lpay, rpay,
                                          verify, algo)
-            return self._memo_put(key, out, self._handles_nbytes(out))
-        lout = [DeviceCol(d, total, self, p.lo, p.hi)
+            for h in out[0] + out[1]:
+                h.stable = memo
+            if memo:
+                return self._memo_put(key, out, self._handles_nbytes(out))
+            return out
+        lout = [DeviceCol(d, total, self, p.lo, p.hi, stable=memo)
                 for d, p in zip(louts, lpay)]
-        rout = [DeviceCol(d, total, self, p.lo, p.hi)
+        rout = [DeviceCol(d, total, self, p.lo, p.hi, stable=memo)
                 for d, p in zip(routs, rpay)]
-        return self._memo_put(
-            key, (lout, rout, total),
-            sum(d.nbytes for d in louts) + sum(d.nbytes for d in routs))
+        if memo:
+            return self._memo_put(
+                key, (lout, rout, total),
+                sum(d.nbytes for d in louts) + sum(d.nbytes
+                                                   for d in routs))
+        return lout, rout, total
 
     def _join_gather_host(self, lkeys, rkeys, lpay, rpay, verify, algo):
         """Exact host path for sentinel-adversarial keys (downloads and
@@ -749,10 +942,12 @@ class JaxOps(Ops):
         n = cols[0].n
         if n == 0:
             return self._empty_h(), 0
+        memo = self._memoable(*cols)
         key = ("dd", tuple(c.uid for c in cols))
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
+        if memo:
+            hit = self._memo_get(key)
+            if hit is not None:
+                return hit
         from repro.kernels.sortmerge.ops import (device_dedup_rows,
                                                  fits_tagged_width,
                                                  tag_bits_for)
@@ -777,8 +972,10 @@ class JaxOps(Ops):
                     datas, jnp.asarray(n))
             kept = int(self._to_host(cnt))
         h = DeviceCol(rows, kept, self, 0 if kept else None,
-                      (n - 1) if kept else None)
-        return self._memo_put(key, (h, kept), rows.nbytes)
+                      (n - 1) if kept else None, stable=memo)
+        if memo:
+            return self._memo_put(key, (h, kept), rows.nbytes)
+        return h, kept
 
     def fresh_mask_h(self, key_new: DeviceCol, vals_new: DeviceCol,
                      old_keys, old_vals, cache_uid=None,
@@ -788,8 +985,11 @@ class JaxOps(Ops):
             e = np.zeros(0, bool)
             return DeviceCol(e, 0, self, host=e)
         use_cache = cache_uid is not None and version is not None
+        # the table-side sorted pairs stay resident either way; only the
+        # output mask memo needs stable batch operands
+        memo = use_cache and self._memoable(key_new, vals_new)
         key = ("fm", key_new.uid, vals_new.uid, cache_uid, version)
-        if use_cache:
+        if memo:
             hit = self._memo_get(key)
             if hit is not None:
                 return hit
@@ -829,8 +1029,8 @@ class JaxOps(Ops):
                     pkv["ks"], pkv["vs"], pkv["n"], key_new.data,
                     self._fit_cap(vals_new.data,
                                   key_new.data.shape[0]))
-        h = DeviceCol(buf, n_new, self)
-        if use_cache:
+        h = DeviceCol(buf, n_new, self, stable=memo)
+        if memo:
             self._memo_put(key, h, buf.nbytes)
         return h
 

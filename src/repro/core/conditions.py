@@ -55,13 +55,26 @@ _TEST_OPS: dict[str, Callable[[np.ndarray, np.ndarray], np.ndarray]] = {
 
 @dataclasses.dataclass(frozen=True)
 class JoinTest:
-    """Variable join test (Def. 9): ``(<var1> <operator> <var2>)``."""
+    """Join test (Def. 9): ``(<var1> <operator> <var2>)`` where the right
+    operand is either a second bound variable (``var2``) or a constant
+    (``const`` — the var⊕const form; ``var2`` is None then)."""
 
     var1: str
     op: str
-    var2: str
+    var2: str | None
+    const: object = None
+
+    def is_const(self) -> bool:
+        return self.var2 is None
+
+    def const_lane(self, valtype: ValueType,
+                   strings: "StringDictionary") -> int:
+        """The constant operand encoded into the int64 lane domain."""
+        return encode_value(self.const, valtype, strings)
 
     def apply(self, a: np.ndarray, b: np.ndarray, valtype: ValueType) -> np.ndarray:
+        """Elementwise comparison of two lane columns (``b`` may be a
+        scalar lane array for the var⊕const form — numpy broadcasts)."""
         return _TEST_OPS[self.op](
             decode_lane_array(a, valtype), decode_lane_array(b, valtype)
         )
@@ -117,12 +130,18 @@ def _encode_slot(value, comp: Component, valtype: ValueType,
 
 
 def cond(fact_type: str, id, attr, val, valtype: ValueType = ValueType.STRING,
-         tests: Sequence[tuple[str, str, str]] = ()) -> Condition:
-    """Sugar: cond("Person", "?p", "livesIn", "?c") with '?x' variables."""
-    jt = tuple(
-        JoinTest(v1.lstrip("?"), op, v2.lstrip("?")) for (v1, op, v2) in tests
-    )
-    return Condition(fact_type, term(id), term(attr), term(val), valtype, jt)
+         tests: Sequence[tuple[str, str, object]] = ()) -> Condition:
+    """Sugar: cond("Person", "?p", "livesIn", "?c") with '?x' variables.
+    A test's right operand is a variable when it is a '?x' string,
+    otherwise a constant: ``tests=[("?age", ">=", 18)]``."""
+    jt = []
+    for (v1, op, v2) in tests:
+        if isinstance(v2, str) and v2.startswith("?"):
+            jt.append(JoinTest(v1.lstrip("?"), op, v2.lstrip("?")))
+        else:
+            jt.append(JoinTest(v1.lstrip("?"), op, None, v2))
+    return Condition(fact_type, term(id), term(attr), term(val), valtype,
+                     tuple(jt))
 
 
 # ---------------------------------------------------------------------------

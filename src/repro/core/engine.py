@@ -26,7 +26,8 @@ from repro.core.conditions import (AddAction, Condition, DeleteAction,
 from repro.core.derivation import DerivationTrees, build_derivation_trees
 from repro.core.facts import (Fact, ValueType, decode_value, encode_value,
                               facts_to_columns)
-from repro.core.islands import build_islands, evaluate_rule
+from repro.core.islands import (_frontier_rows, build_islands,
+                                evaluate_rule)
 from repro.core.joins import Bindings
 from repro.core.store import FactStore, TypedFactTable
 
@@ -43,6 +44,7 @@ class EngineConfig:
     sort_mode: str = "sortkeys"   # sortkeys | fixed
     backend: str = "numpy"        # numpy | jax | jax-pallas | jax-interpret
     device_pipeline: str = "auto"  # auto | on | off — handle-tier join core
+    eval_mode: str = "auto"       # full | delta | auto — semi-naive rounds
     query_cache: bool = False     # rank-2/3 result cache (paper §5 fut. work)
     lazy: bool = False            # Defs. 10/11 active-rule pruning
     max_iterations: int = 1000
@@ -75,6 +77,15 @@ class InferStats:
     facts_inferred: int = 0
     facts_deleted: int = 0
     seconds: float = 0.0
+    # semi-naive observability: how much each fixpoint round actually
+    # touched (rows fetched by condition lookups) vs produced (facts
+    # written), plus how evaluations split between delta passes and full
+    # re-evaluations.  ``rounds`` holds one dict per iteration.
+    rows_considered: int = 0
+    rows_emitted: int = 0
+    delta_passes: int = 0
+    full_evals: int = 0
+    rounds: list = dataclasses.field(default_factory=list)
 
 
 def _pack_keys(ids: np.ndarray, attrs: np.ndarray) -> np.ndarray:
@@ -138,12 +149,20 @@ def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
 class HiperfactEngine:
     def __init__(self, config: EngineConfig | None = None) -> None:
         self.config = config or EngineConfig()
+        if self.config.eval_mode not in ("full", "delta", "auto"):
+            raise ValueError(
+                f"unknown eval_mode: {self.config.eval_mode!r}")
         self.ops = get_backend(self.config.backend)
         self.store = FactStore(self.config.index_backend, ops=self.ops)
         self.rules: list[Rule] = []
         self._trees: DerivationTrees | None = None
         self._type_version: dict[str, int] = {}
         self._rule_seen_versions: dict[int, dict[str, int]] = {}
+        # semi-naive append watermarks: rule -> {ftype: (n, n_dead)} as
+        # of the rule's last evaluation.  The delta view of a condition
+        # is rows [n, table.n); a changed n_dead (tombstones) voids the
+        # frontier and forces the rule back to full evaluation.
+        self._rule_watermarks: dict[int, dict[str, tuple[int, int]]] = {}
         self._pk_memo = _PackedKeyMemo()
         self.load_seconds = 0.0
         self.last_infer: InferStats = InferStats()
@@ -363,6 +382,61 @@ class HiperfactEngine:
             t: self._type_version.get(t, 0)
             for t in self.rules[ridx].input_types()}
 
+    def _table_marks(self, rule: Rule) -> dict[str, tuple[int, int]]:
+        out = {}
+        for t in rule.input_types():
+            tab = self.store.tables.get(t)
+            out[t] = (tab.n, tab.n_dead) if tab is not None else (0, 0)
+        return out
+
+    def _begin_rule_eval(self, ridx: int) -> dict[int, int] | None:
+        """Snapshot the rule's input watermarks and decide how this
+        evaluation runs: ``None`` -> one full pass; a dict (condition
+        index -> append frontier) -> semi-naive delta passes.
+
+        Delta is sound only for monotone derivations: rules with delete
+        or external actions, rules never evaluated before, and rules
+        whose input tables grew tombstones since the watermark all take
+        the full path.  Called from the scheduling thread *before* the
+        (possibly pooled) evaluation, while table state is quiescent.
+        """
+        rule = self.rules[ridx]
+        old = self._rule_watermarks.get(ridx)
+        self._note_rule_evaluated(ridx)
+        new = self._table_marks(rule)
+        self._rule_watermarks[ridx] = new
+        if self.config.eval_mode == "full" or old is None:
+            return None
+        if self.config.eval_mode == "auto" and self.config.rnl != "AR":
+            # without the AR restriction a delta pass still joins the
+            # full relations of the other conditions — k passes cost
+            # more than one full evaluation, so auto stays full in DR
+            return None
+        if any(not isinstance(a, AddAction) for a in rule.actions):
+            return None  # deletes/externals observe non-delta bindings
+        for t, (n1, d1) in new.items():
+            n0, d0 = old.get(t, (0, 0))
+            if d1 != d0 or n1 < n0:
+                return None  # tombstone churn: frontier is not a delta
+        deltas: dict[int, int] = {}
+        for i, c in enumerate(rule.conditions):
+            n0 = old.get(c.fact_type, (0, 0))[0]
+            n1 = new.get(c.fact_type, (0, 0))[0]
+            if n1 > n0:
+                deltas[i] = n0
+        if self.config.eval_mode == "auto" and deltas:
+            # semi-naive pays when the frontier is small relative to the
+            # relations: a dense recursive closure (wordnet-style) grows
+            # by ~half the table per round, and k delta-joins against
+            # full relations then cost more than one full pass — auto
+            # falls back; eval_mode="delta" forces semi-naive regardless
+            grown = sum(new[t][0] - old.get(t, (0, 0))[0]
+                        for t in rule.input_types())
+            total = sum(new[t][0] for t in rule.input_types())
+            if grown * 8 > total:
+                return None
+        return deltas
+
     def _rl_fn(self):
         if self.query_cache is None:
             return None
@@ -370,15 +444,63 @@ class HiperfactEngine:
         return lambda store, c: cache.lookup(
             store, c, self._type_version.get(c.fact_type, 0))
 
-    def _eval_one(self, ridx: int) -> tuple[int, dict, dict]:
+    def _eval_one(self, ridx: int,
+                  plan: dict[int, int] | None = None
+                  ) -> tuple[int, dict, dict, dict]:
+        """Evaluate one rule: a single full pass (``plan is None``) or
+        the semi-naive decomposition — one pass per condition with a
+        non-empty append frontier, each seeing that condition's delta
+        and every other condition's full relation.  The union of the
+        passes covers every derivation that uses at least one new fact;
+        derivations from all-old rows were produced by earlier rounds
+        and would be dropped by the write-side dedup anyway."""
         rule = self.rules[ridx]
         cfg = self.config
-        bindings = evaluate_rule(
-            self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
-            layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-            rl_fn=self._rl_fn(), ops=self.ops, pipeline=self._pipeline)
-        adds, dels = self._run_actions(rule, bindings)
-        return ridx, adds, dels
+        estats: dict = {"rows_considered": 0}
+        kw = dict(join_algo=cfg.join, rnl_mode=cfg.rnl, layout=cfg.layout,
+                  sort_mode=cfg.sort_mode, distinct=True,
+                  rl_fn=self._rl_fn(), ops=self.ops,
+                  pipeline=self._pipeline, stats=estats)
+        if plan is None:
+            bindings = evaluate_rule(self.store, rule, **kw)
+            adds, dels = self._run_actions(rule, bindings)
+            estats["full_evals"] = 1
+            estats["delta_passes"] = 0
+            return ridx, adds, dels, estats
+        # delta-eligible rules are add-only (_begin_rule_eval falls back
+        # to full for any rule with delete/external actions), so only
+        # adds can come out of the passes
+        adds_parts: dict[str, list] = {}
+        islands = None
+        # delta passes start from a tiny frontier, so planner quality is
+        # irrelevant — the cheap tuple sort beats re-packing sort keys
+        # once per pass
+        kw["sort_mode"] = "fixed"
+        ran = 0
+        for i in sorted(plan):
+            # skip passes whose frontier holds no rows matching the
+            # delta condition: appends to a type only wake the
+            # conditions they can actually feed.  The pass re-scans the
+            # frontier inside _lookup_condition — both scans are O(Δ)
+            # tail filters, cheaper than setting up a dead pass.
+            if len(_frontier_rows(self.store, rule.conditions[i],
+                                  plan[i])) == 0:
+                continue
+            if islands is None:
+                islands = build_islands(self.store, rule)
+            ran += 1
+            bindings = evaluate_rule(self.store, rule, islands=islands,
+                                     delta_for={i: plan[i]}, **kw)
+            if bindings.n == 0:
+                continue
+            adds, _dels = self._run_actions(rule, bindings)
+            for t, cols in adds.items():
+                adds_parts.setdefault(t, []).append(cols)
+        estats["full_evals"] = 0
+        estats["delta_passes"] = ran
+        return (ridx,
+                {t: self._cat_parts(p) for t, p in adds_parts.items()},
+                {}, estats)
 
     def infer(self) -> InferStats:
         """Run the inference loop (Fig. 1) to fixpoint."""
@@ -394,6 +516,8 @@ class HiperfactEngine:
             while changed and stats.iterations < cfg.max_iterations:
                 changed = False
                 stats.iterations += 1
+                round_rows = 0
+                round_emitted = 0
                 for level in trees.levels:
                     level_rules = []
                     for r in level:
@@ -412,25 +536,31 @@ class HiperfactEngine:
                     # Algorithm 2: islands + sort keys rebuilt per level
                     # (cardinalities moved); groups own disjoint output types.
                     groups = trees.out_groups(level_rules, set(level_rules))
-                    results: list[tuple[int, dict, dict]] = []
+                    results: list[tuple[int, dict, dict, dict]] = []
                     if pool is not None and cfg.tree_exec == "PF" and len(groups) > 1:
                         futs = []
                         for g in groups:
                             for r in g:
-                                self._note_rule_evaluated(r)
-                                futs.append(pool.submit(self._eval_one, r))
+                                plan = self._begin_rule_eval(r)
+                                futs.append(pool.submit(self._eval_one, r,
+                                                        plan))
                         results = [f.result() for f in futs]
                     else:
                         for g in groups:
                             for r in g:
-                                self._note_rule_evaluated(r)
-                                results.append(self._eval_one(r))
+                                results.append(
+                                    self._eval_one(r,
+                                                   self._begin_rule_eval(r)))
                     stats.rules_evaluated += len(results)
+                    for _, _, _, es in results:
+                        round_rows += es.get("rows_considered", 0)
+                        stats.delta_passes += es.get("delta_passes", 0)
+                        stats.full_evals += es.get("full_evals", 0)
                     # Writes: PW = concurrent per disjoint fact type;
                     # SW = sequential in schedule order.
                     by_type_adds: dict[str, list] = {}
                     by_type_dels: dict[str, list] = {}
-                    for _, adds, dels in results:
+                    for _, adds, dels, _es in results:
                         for t, cols in adds.items():
                             by_type_adds.setdefault(t, []).append(cols)
                         for t, cols in dels.items():
@@ -453,7 +583,13 @@ class HiperfactEngine:
                         changed |= ndel > 0
                     n_new = sum(wrote.values())
                     stats.facts_inferred += n_new
+                    round_emitted += n_new
                     changed |= n_new > 0
+                stats.rows_considered += round_rows
+                stats.rows_emitted += round_emitted
+                stats.rounds.append({"iteration": stats.iterations,
+                                     "rows_considered": round_rows,
+                                     "rows_emitted": round_emitted})
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)

@@ -136,14 +136,27 @@ def build_islands(store: FactStore, rule: Rule) -> list[Island]:
     return islands
 
 
-def order_islands(islands: list[Island]) -> list[Island]:
+def order_islands(islands: list[Island],
+                  prefer: set[int] | None = None) -> list[Island]:
     """Phase 3 ordering: cheapest island first, then greedily the cheapest
     *connected* island (unconnected islands are delegated until a connection
-    exists — the paper's TPC example)."""
+    exists — the paper's TPC example).
+
+    ``prefer`` (rule-condition indices) biases the entry point: a
+    semi-naive delta pass starts from the island holding the delta
+    condition, so the tiny append frontier is what the AR restriction
+    propagates through the rest of the chain."""
     remaining = sorted(islands, key=lambda i: i.total_cost)
     if not remaining:
         return []
-    out = [remaining.pop(0)]
+    if prefer:
+        seeded = [i for i in remaining
+                  if any(s.index in prefer for s in i.stats)]
+        first = seeded[0] if seeded else remaining[0]
+    else:
+        first = remaining[0]
+    remaining.remove(first)
+    out = [first]
     bound = set(out[0].variables)
     while remaining:
         connected = [i for i in remaining if i.variables & bound]
@@ -154,10 +167,21 @@ def order_islands(islands: list[Island]) -> list[Island]:
     return out
 
 
-def order_conditions(isl: Island, bound: set[str], sort_mode: str) -> list[CondStats]:
+def order_conditions(isl: Island, bound: set[str], sort_mode: str,
+                     prefer: set[int] | None = None) -> list[CondStats]:
     """Within-island order: hook-point conditions (sharing already-bound
     vars) first, then by (cardinality, connected level) — either as a tuple
-    sort ("fixed") or via packed uint32 sort keys ("sortkeys")."""
+    sort ("fixed") or via packed uint32 sort keys ("sortkeys").
+    ``prefer`` front-loads the named conditions (delta passes)."""
+    sts = order_conditions_base(isl, bound, sort_mode)
+    if prefer:
+        sts = ([s for s in sts if s.index in prefer] +
+               [s for s in sts if s.index not in prefer])
+    return sts
+
+
+def order_conditions_base(isl: Island, bound: set[str],
+                          sort_mode: str) -> list[CondStats]:
     sts = list(isl.stats)
     if sort_mode == "sortkeys":
         keys = pack_sort_keys(
@@ -183,10 +207,56 @@ def order_conditions(isl: Island, bound: set[str], sort_mode: str) -> list[CondS
 # Executor (Phases 3-5 of Algorithm 1)
 
 
+def _frontier_rows(store: FactStore, c: Condition, start: int) -> np.ndarray:
+    """O(Δ) fetch of a condition's append frontier: scan only the tail
+    rows ``[start, n)`` with vectorized constant filters — never the
+    rank-1 index over the full relation (``rl`` + a ``>= start`` filter
+    would cost O(result) in the *full* table)."""
+    table = store.tables.get(c.fact_type)
+    if table is None or table.n <= start:
+        return np.empty(0, np.int32)
+    consts = c.const_slots(store.strings)
+    if any(v == -1 for _, v in consts):
+        return np.empty(0, np.int32)
+    rows = np.arange(start, table.n, dtype=np.int32)
+    for comp, v in consts:
+        if len(rows) == 0:
+            break
+        rows = rows[table.column(comp)[rows] == v]
+    return table.filter_alive(rows)
+
+
+def _probe_rows(store: FactStore, c: Condition, acc: Bindings,
+                ) -> tuple[np.ndarray, str] | None:
+    """AR restriction via the rank-1 index: when the accumulated buffer
+    binds one of the condition's variables with a small value set, probe
+    the index for exactly those values instead of fetching the full
+    relation and semi-joining it down — O(Δ·fanout), not O(N).  Returns
+    ``(rows, probed_var)`` or None when no bound variable exists."""
+    table = store.tables.get(c.fact_type)
+    if table is None:
+        return None
+    consts = c.const_slots(store.strings)
+    if any(v == -1 for _, v in consts):  # unknown string constant
+        return np.empty(0, np.int32), next(iter(c.variables()))
+    for name, comp in c.variables().items():
+        if name not in acc.names():
+            continue
+        vals = np.unique(np.asarray(acc.col(name), np.int64))
+        rows, _ = table.index.lookup_batch(table, comp, vals)
+        for comp2, v in consts:
+            if len(rows) == 0:
+                break
+            rows = rows[table.column(comp2)[rows] == v]
+        return table.filter_alive(rows), name
+    return None
+
+
 def _lookup_condition(
     store: FactStore, c: Condition, acc: Bindings | None, rnl_mode: str,
     layout: str, rl_fn=None, ops: Ops | None = None,
-    pipeline: bool = False,
+    pipeline: bool = False, delta_start: int = 0,
+    stats: dict | None = None,
 ) -> Bindings:
     """RL lookup for one condition -> its binding table.
 
@@ -195,38 +265,87 @@ def _lookup_condition(
     to the bound value set before the join — the paper's rank-raising lookup.
     DR performs the plain RL lookup.
 
+    ``delta_start`` selects the condition's *append frontier* (semi-naive
+    evaluation): only rows ``>= delta_start`` — facts appended since the
+    owning rule's watermark — are fetched.  Tables are append-only (row
+    ids are positions; deletes are tombstones and force the caller back
+    to full evaluation), so the frontier is exactly ``[watermark, n)``.
+
     The RL fetch itself is a rank-1 index probe: with the device backend
     it binary-searches the index's cached host mirrors, so repeated
     lookups between fact writes issue zero host<->device transfers (see
     backend/README.md §Device residency).
 
     Device pipeline (``pipeline=True``, CR layout): the fetched binding
-    columns are uploaded once per ``(table, data_version, condition)``
-    and cached as ``DeviceCol`` handles; the AR restriction then runs as
-    a device semi-join + compaction on those handles, so the lookup
-    result enters the join chain already device-resident.  Because the
-    cached handles are stable at a fixed version, a repeated evaluation
-    hits the backend's uid-keyed memos end to end.
+    columns are uploaded once per ``(table, data_version, condition,
+    frontier)`` and cached as ``DeviceCol`` handles; full-relation
+    columns go through ``ops.upload_resident`` so an append round
+    uploads only the delta slice into the resident buffer.  The AR
+    restriction then runs as a device semi-join + compaction on those
+    handles, so the lookup result enters the join chain already
+    device-resident.  Because the cached handles are stable at a fixed
+    version, a repeated evaluation hits the backend's uid-keyed memos
+    end to end.
     """
     table = store.tables.get(c.fact_type)
     pipeline = pipeline and layout == "CR" and ops is not None
-    cache = getattr(ops, "cache", None) if pipeline else None
-    handles = (cache.get(("bind", table.uid, c), table.data_version)
+    # delta windows never recur (the watermark advances every round), so
+    # they skip the handle cache entirely and upload as transient state
+    cache = (getattr(ops, "cache", None)
+             if pipeline and delta_start == 0 else None)
+    handles = (cache.get(("bind", table.uid, c, delta_start),
+                         table.data_version)
                if cache is not None and table is not None else None)
+    probed_var = None
     if handles is None:
         # a cache hit implies the same rows (rl is deterministic at a
         # fixed data_version), so the RL fetch runs only on a miss
-        rows = (rl_fn or rl)(store, c)
+        if delta_start and rl_fn is None:
+            rows = _frontier_rows(store, c, delta_start)
+        elif (not pipeline and rl_fn is None and rnl_mode == "AR"
+              and acc is not None and table is not None
+              and 0 < acc.n * 4 <= table.n and delta_start == 0
+              and not getattr(ops, "prefer_handles", False)):
+            # small bound set over a big relation: probe the rank-1
+            # index for the bound values instead of full-scan+semi-join
+            # (host backends only — a device backend would turn each
+            # lookup into a batch_probe round trip)
+            pr = _probe_rows(store, c, acc)
+            if pr is not None:
+                rows, probed_var = pr
+            else:
+                rows = rl(store, c)
+        else:
+            rows = (rl_fn or rl)(store, c)
+            if delta_start:
+                rows = rows[rows >= delta_start]
+        if stats is not None:
+            stats["rows_considered"] = (stats.get("rows_considered", 0)
+                                        + len(rows))
         if table is None or len(rows) == 0:
             return make_bindings(
                 {v: np.empty(0, np.int64) for v in c.variables()}, layout)
+    elif stats is not None and handles:
+        stats["rows_considered"] = (stats.get("rows_considered", 0)
+                                    + next(iter(handles.values())).n)
     if pipeline:
         if handles is None:
             cols = bindings_for_rows(table, c, rows)
-            handles = {k: ops.upload(v) for k, v in cols.items()}
+            # full-relation scans of tombstone-free tables extend
+            # append-only (rows are arange(n)): skip the prefix memcmp
+            vs = c.var_slots()
+            assume_prefix = (delta_start == 0 and c.rank() == 0
+                             and table.n_dead == 0
+                             and len({n for n, _ in vs}) == len(vs))
+            handles = {
+                k: ops.upload_resident(
+                    ("bindcol", table.uid, c, k, delta_start),
+                    table.data_version, v, assume_prefix,
+                    transient=delta_start > 0)
+                for k, v in cols.items()}
             if cache is not None:
-                cache.put(("bind", table.uid, c), table.data_version,
-                          handles,
+                cache.put(("bind", table.uid, c, delta_start),
+                          table.data_version, handles,
                           sum(getattr(h.data, "nbytes", 0)
                               for h in handles.values()))
         b = ColumnarBindings(handles)
@@ -244,7 +363,7 @@ def _lookup_condition(
         return b
     if rnl_mode == "AR" and acc is not None and acc.n > 0:
         for name, comp in c.variables().items():
-            if name in acc.names():
+            if name in acc.names() and name != probed_var:
                 keys = table.column(comp)[rows].astype(np.int64)
                 rows = rows[semi_join_rows(keys, acc.col(name), ops)]
                 if len(rows) == 0:
@@ -252,12 +371,42 @@ def _lookup_condition(
     return make_bindings(bindings_for_rows(table, c, rows), layout)
 
 
+def _apply_test(store: FactStore, acc: Bindings, t, vt, ops: Ops | None,
+                pipeline: bool) -> Bindings:
+    """Fire one join test (Def. 9) on the accumulated bindings.
+
+    On the device pipeline the comparison (var⊕var or var⊕const) and the
+    surviving-row compaction run on handles (``test_mask_h`` +
+    ``select_mask_h``) so test-bearing rules stay device-resident; the
+    host path is the original decode-and-compare."""
+    if (pipeline and ops is not None and isinstance(acc, ColumnarBindings)
+            and acc.device_backed()):
+        a = acc.handle(t.var1, ops)
+        if t.is_const():
+            b = ops.const_h(t.const_lane(vt, store.strings), acc.n)
+        else:
+            b = acc.handle(t.var2, ops)
+        mask = ops.test_mask_h(a, b, t.op, int(vt))
+        names = acc.names()
+        sel, _ = ops.select_mask_h([acc.handle(k, ops) for k in names],
+                                   mask)
+        return ColumnarBindings(dict(zip(names, sel)))
+    if t.is_const():
+        rhs = np.asarray([t.const_lane(vt, store.strings)], np.int64)
+    else:
+        rhs = acc.col(t.var2)
+    ok = t.apply(acc.col(t.var1), rhs, vt)
+    return acc.select(np.nonzero(ok)[0])
+
+
 def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                   rnl_mode: str = "AR", layout: str = "CR",
                   sort_mode: str = "sortkeys", distinct: bool = False,
                   islands: list[Island] | None = None,
                   rl_fn=None, ops: Ops | None = None,
-                  pipeline: bool | None = None) -> Bindings:
+                  pipeline: bool | None = None,
+                  delta_for: dict[int, int] | None = None,
+                  stats: dict | None = None) -> Bindings:
     """Full island-based evaluation of one rule -> final binding table.
 
     ``islands`` may be passed in pre-built (derivation-tree executor re-sorts
@@ -268,28 +417,43 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
     dedup); ``None`` defers to ``ops.prefer_handles`` — on by default for
     device backends, off for the host backend.  CR layout only (RR is
     the paper's internal-evaluation loser and stays host-side).
+
+    ``delta_for`` maps rule-condition indices to append frontiers (row
+    watermarks): one semi-naive pass where the named conditions see only
+    rows ``>= frontier`` and every other condition sees the full
+    relation.  The delta condition's island is evaluated first so the AR
+    restriction propagates the (small) frontier through the chain —
+    this is what makes a fixpoint round cost O(Δ) instead of O(N).
     """
     if islands is None:
         islands = build_islands(store, rule)
     if pipeline is None:
         pipeline = bool(getattr(ops, "prefer_handles", False))
     pipeline = pipeline and layout == "CR" and ops is not None
-    ordered = order_islands(islands)
-    # A join test (Def. 9) fires as soon as both its variables are bound.
+    delta_for = {i: s for i, s in (delta_for or {}).items() if s > 0} \
+        if delta_for is not None else None
+    prefer = set(delta_for) if delta_for else None
+    ordered = order_islands(islands, prefer)
+    # A join test (Def. 9) fires as soon as its operands are bound (the
+    # var⊕const form needs only its left variable).
     pending = [(t, c.valtype) for c in rule.conditions for t in c.tests]
     acc: Bindings | None = None
     bound: set[str] = set()
     for isl in ordered:
-        for st in order_conditions(isl, bound, sort_mode):
+        for st in order_conditions(isl, bound, sort_mode, prefer):
+            ds = delta_for.get(st.index, 0) if delta_for else 0
             if not st.cond.variables():
                 # variable-free (rank-3) condition == existence filter
-                if len((rl_fn or rl)(store, st.cond)) == 0:
+                rows = (rl_fn or rl)(store, st.cond)
+                if ds:
+                    rows = rows[rows >= ds]
+                if len(rows) == 0:
                     return make_bindings(
                         {v: np.empty(0, np.int64) for v in bound} or
                         {"_exists": np.empty(0, np.int64)}, layout)
                 continue
             rhs = _lookup_condition(store, st.cond, acc, rnl_mode, layout,
-                                    rl_fn, ops, pipeline)
+                                    rl_fn, ops, pipeline, ds, stats)
             if acc is None:
                 acc = rhs
             else:
@@ -298,10 +462,9 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
             bound |= set(st.cond.variables().keys())
             still = []
             for t, vt in pending:
-                if t.var1 in bound and t.var2 in bound:
+                if t.var1 in bound and (t.is_const() or t.var2 in bound):
                     if acc.n > 0:
-                        ok = t.apply(acc.col(t.var1), acc.col(t.var2), vt)
-                        acc = acc.select(np.nonzero(ok)[0])
+                        acc = _apply_test(store, acc, t, vt, ops, pipeline)
                 else:
                     still.append((t, vt))
             pending = still

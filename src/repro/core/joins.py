@@ -212,17 +212,23 @@ def join_bindings(left: Bindings, right: Bindings, keys: list[str],
     ops = ops or _NUMPY_OPS
     if left.n == 0 or right.n == 0:
         return left.select(np.empty(0, np.int64))
-    if (keys and isinstance(left, ColumnarBindings)
+    if (isinstance(left, ColumnarBindings)
             and isinstance(right, ColumnarBindings)
             and (left.device_backed() or right.device_backed())):
-        lk = left.handle(keys[0], ops)
-        rk = right.handle(keys[0], ops)
         extra = [k for k in right.names() if k not in left.names()]
         lpay = [left.handle(k, ops) for k in left.names()]
         rpay = [right.handle(k, ops) for k in extra]
-        verify = [(left.handle(k, ops), right.handle(k, ops))
-                  for k in keys[1:]]
-        lout, rout, _ = ops.join_gather_h(lk, rk, lpay, rpay, verify, algo)
+        if keys:
+            lk = left.handle(keys[0], ops)
+            rk = right.handle(keys[0], ops)
+            verify = [(left.handle(k, ops), right.handle(k, ops))
+                      for k in keys[1:]]
+            lout, rout, _ = ops.join_gather_h(lk, rk, lpay, rpay,
+                                              verify, algo)
+        else:
+            # keyless join = cross product (a test-bearing rule shape):
+            # expanded on device so the chain stays resident
+            lout, rout, _ = ops.cross_join_h(lpay, rpay, left.n, right.n)
         cols: dict[str, DeviceCol] = {}
         for name, h in zip(left.names(), lout):
             cols[name] = h

@@ -84,7 +84,12 @@ class _JoinNode:
             else:
                 merged[k] = v
         for t in self.tests:
-            if t.var1 in merged and t.var2 in merged:
+            if t.var1 not in merged:
+                continue
+            if t.is_const():
+                if not _NUMERIC_OPS[t.op](merged[t.var1], t.const):
+                    return None
+            elif t.var2 in merged:
                 if not _NUMERIC_OPS[t.op](merged[t.var1], merged[t.var2]):
                     return None
         return merged

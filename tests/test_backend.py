@@ -611,8 +611,13 @@ def test_island_fixpoint_zero_transfers_join_core():
     transfers inside the join core."""
     from repro.core.islands import evaluate_rule
 
+    # eval_mode="full": this asserts the fixed-version memo property of
+    # the full-evaluation chain (the semi-naive delta rounds leave
+    # different — smaller — memo chains behind; tests/test_delta.py
+    # holds the delta-mode transfer assertions)
     e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
-                                     unique="SU", backend="jax-interpret"))
+                                     unique="SU", backend="jax-interpret",
+                                     eval_mode="full"))
     rule = island_rule()
     e.add_rule(rule)
     e.insert_facts(island_facts())
@@ -643,7 +648,8 @@ def test_island_fixpoint_zero_transfers_full_sweep():
     actions + write-side dedup/anti-join) at fixed versions — still zero
     transfers end to end."""
     e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
-                                     unique="SU", backend="jax-interpret"))
+                                     unique="SU", backend="jax-interpret",
+                                     eval_mode="full"))
     e.add_rule(island_rule())
     e.insert_facts(island_facts())
     e.infer()
