@@ -32,6 +32,8 @@ def run_hiperfact(cfg: EngineConfig, facts, queries) -> dict:
     tc = getattr(e.ops, "transfers", None)  # JaxOps: measure residency
     snap = tc.snapshot() if tc is not None else None
     cache_snap = e.ops.cache.stats() if tc is not None else None
+    sw = getattr(e.ops, "sort_work", None)  # mirror merge maintenance
+    sw_snap = sw.snapshot() if sw is not None else None
     e.add_rules(rdfs_plus_rules())
     t0 = time.perf_counter()
     e.insert_facts(facts)
@@ -64,6 +66,11 @@ def run_hiperfact(cfg: EngineConfig, facts, queries) -> dict:
         # per-run view: the backend instance (and its cache) is
         # process-wide, so report this run's delta, not the totals
         out["cache"] = e.ops.cache.delta_stats(cache_snap)
+        if sw is not None:
+            # device sort work split by path: full mirror sorts
+            # (sorted_bytes) vs incremental delta-run merges
+            # (merged_bytes) — see backend/README.md §Merge-maintained
+            out["sort_work"] = sw.delta(sw_snap).as_dict()
         e.ops.cache.refresh()  # engine done: release its idle residency
     return out
 
@@ -71,6 +78,11 @@ def run_hiperfact(cfg: EngineConfig, facts, queries) -> dict:
 def fmt_transfers(t: dict) -> str:
     return (f"h2d={t['h2d_calls']}x/{t['h2d_bytes']}B "
             f"d2h={t['d2h_calls']}x/{t['d2h_bytes']}B")
+
+
+def fmt_sort_work(s: dict) -> str:
+    return (f"sorted={s['full_sorts']}x/{s['sorted_bytes']}B "
+            f"merged={s['delta_merges']}x/{s['merged_bytes']}B")
 
 
 def run_rete(facts, queries) -> dict:
@@ -153,10 +165,18 @@ def bench_streaming(scale: int = 8, backend: str = "numpy",
                     batch: int = 80, runs: int = 2):
     """Streaming-append scenario: load -> infer -> append small batches
     -> re-infer, per eval_mode.  Reports per-round wall time, transfer
-    bytes (device backends), and the semi-naive stats; the fact-set
-    checksum asserts delta ≡ full.  Each mode's whole scenario runs
-    ``runs`` times, keeping the best re-infer total (scheduler noise on
-    millisecond rounds would otherwise dominate)."""
+    bytes (device backends), the semi-naive stats, and the index
+    sort-work split; the fact-set checksum asserts delta ≡ full.  Each
+    mode's whole scenario runs ``runs`` times, keeping the best re-infer
+    total (scheduler noise on millisecond rounds would otherwise
+    dominate).
+
+    The engine runs the AI (sorted-mirror) index — the paper's
+    load-time winner / append-time loser — precisely because its
+    eager per-append rebuild is the case merge maintenance targets:
+    at steady state the per-round ``merged_bytes`` is the delta
+    bucket while ``sorted_bytes`` stays 0 (LPIM would instead defer
+    appends into an unsorted tail and show nothing per round)."""
     facts = lubm_like(scale)
     held = n_rounds * batch
     base, stream = facts[:-held], facts[-held:]
@@ -175,11 +195,12 @@ def bench_streaming(scale: int = 8, backend: str = "numpy",
 def _stream_once(mode, backend, base, batches):
     import dataclasses
     cfg = dataclasses.replace(EngineConfig.infer1(backend),
-                              eval_mode=mode)
+                              eval_mode=mode, index_backend="AI")
     e = HiperfactEngine(cfg)
     tc = getattr(e.ops, "transfers", None)
     cache = getattr(e.ops, "cache", None)
     cache_snap = cache.stats() if tc is not None else None
+    sw = getattr(e.ops, "sort_work", None)
     e.add_rules(rdfs_plus_rules())
     e.insert_facts(base)
     t0 = time.perf_counter()
@@ -187,6 +208,7 @@ def _stream_once(mode, backend, base, batches):
     initial_s = time.perf_counter() - t0
     rounds = []
     for b in batches:
+        sw_snap = sw.snapshot() if sw is not None else None
         t0 = time.perf_counter()
         e.insert_facts(b)
         append_s = time.perf_counter() - t0
@@ -204,6 +226,15 @@ def _stream_once(mode, backend, base, batches):
             d = tc.delta(snap)
             row["h2d_bytes"] = d.h2d_bytes
             row["d2h_bytes"] = d.d2h_bytes
+        if sw is not None:
+            # per-round device sort work (append + re-infer): at steady
+            # state merged_bytes ∝ Δ while a full re-sort would pay the
+            # whole column per touched mirror — the acceptance signal
+            # for incremental index maintenance
+            ds = sw.delta(sw_snap)
+            row["sorted_bytes"] = ds.sorted_bytes
+            row["merged_bytes"] = ds.merged_bytes
+            row["delta_merges"] = ds.delta_merges
         rounds.append(row)
     n_facts, checksum = _fact_checksum(e)
     res = {"mode": mode, "facts_loaded": len(base),

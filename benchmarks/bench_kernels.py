@@ -95,8 +95,11 @@ def bench_backends(n: int = 1 << 15, names=("numpy", "jax")):
 def bench_residency(n: int = 1 << 14, batches: int = 16,
                     batch: int = 512):
     """Device residency: an append-heavy index-build loop with and without
-    the version cache.  Reports wall time and host->device bytes — the
-    cached loop uploads only each appended tail."""
+    the version cache.  Reports wall time, host->device bytes (the cached
+    loop uploads only each appended tail), and the sort-work split — the
+    cached loop *merge-maintains* the resident mirror, so per-append sort
+    bytes are the delta bucket (``merged_bytes``) instead of the whole
+    column (``sorted_bytes``)."""
     from repro.backend.jax_ops import JaxOps
 
     rng = np.random.RandomState(2)
@@ -114,6 +117,10 @@ def bench_residency(n: int = 1 << 14, batches: int = 16,
         rows.append((f"residency[{label}]_sort_perm", dt))
         rows.append((f"residency[{label}]_h2d_bytes",
                      ops.transfers.h2d_bytes))
+        rows.append((f"residency[{label}]_sorted_bytes",
+                     ops.sort_work.sorted_bytes))
+        rows.append((f"residency[{label}]_merged_bytes",
+                     ops.sort_work.merged_bytes))
     return rows
 
 

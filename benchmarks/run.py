@@ -59,8 +59,10 @@ def main() -> None:
               f"requery={r.get('requery_s', 0):.5f}s,"
               f"inferred={r['inferred']}")
         if "transfers" in r:
+            sw = (" " + bench_inference.fmt_sort_work(r["sort_work"])
+                  if "sort_work" in r else "")
             print(f"#   {ename}: "
-                  f"{bench_inference.fmt_transfers(r['transfers'])} "
+                  f"{bench_inference.fmt_transfers(r['transfers'])}{sw} "
                   f"cache={r['cache']}")
 
     section(f"Streaming appends: semi-naive delta vs full "
@@ -79,6 +81,13 @@ def main() -> None:
         if "h2d_bytes" in r["rounds"][0]:
             xfer = (" h2d=" + ",".join(str(x["h2d_bytes"])
                                        for x in r["rounds"]))
+        if "merged_bytes" in r["rounds"][0]:
+            # incremental index maintenance: merged (delta-run) vs full
+            # re-sort bytes per append round
+            xfer += (" sorted=" + ",".join(str(x["sorted_bytes"])
+                                           for x in r["rounds"]) +
+                     " merged=" + ",".join(str(x["merged_bytes"])
+                                           for x in r["rounds"]))
         print(f"eval_mode={r['mode']},initial={r['initial_infer_s']:.4f}s,"
               f"reinfer=[{per_round}],facts={r['n_facts']},"
               f"checksum={r['checksum']}{xfer}")

@@ -34,7 +34,28 @@ def splitmix64(x: np.ndarray) -> np.ndarray:
 
 
 class Ops(abc.ABC):
-    """The five bulk primitives of the inference/query hot path."""
+    """The bulk primitives of the inference/query hot path.
+
+    Three tiers (each documented in backend/README.md and
+    docs/ARCHITECTURE.md):
+
+    * **array primitives** — the abstract methods below plus derived
+      composites (``sort_perm``, ``hash_join_pairs``, ``merge_runs``):
+      numpy in, numpy out; backends own padding, transfer, and jit
+      caches internally.
+    * **residency hints** — optional ``cache_key``/``version`` (and
+      ``n_dead``) keywords on ``sort_perm``/``join_pairs``/
+      ``batch_probe``/``upload_resident``/``fresh_mask_h`` identify an
+      argument as the version-stamped state of an append-only column so
+      device backends can keep it (and anything derived from it)
+      resident, re-uploading only appended tails and maintaining sorted
+      index mirrors by delta-run *merge* instead of full re-sort.  Host
+      backends ignore every hint.
+    * **handle tier** — ``*_h`` methods consume and produce opaque
+      ``DeviceCol`` handles so intermediate join state never round-trips
+      through the host (see handles.py); the defaults below are the
+      numpy host twins, which makes ``NumpyOps`` the parity oracle.
+    """
 
     name: str = "?"
 
@@ -76,7 +97,7 @@ class Ops(abc.ABC):
 
     # -- shared derived algorithms ---------------------------------------
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
-                  version: int | None = None
+                  version: int | None = None, n_dead: int = 0
                   ) -> tuple[np.ndarray, np.ndarray]:
         """(sorted keys, permutation) — the index-build form of the KV
         sort, **stable** (equal keys keep input order) on every backend.
@@ -85,12 +106,37 @@ class Ops(abc.ABC):
 
         ``cache_key``/``version`` optionally identify ``keys`` as a
         version-stamped append-only column (a rank-1 index build): device
-        backends keep the column and its (sorted, perm) mirrors resident
-        and return cached results at an unchanged version without any
-        transfer.  Host backends ignore the hint."""
+        backends keep the column and its (sorted, perm) mirrors resident,
+        return cached results at an unchanged version without any
+        transfer, and when the version advanced append-only they
+        *merge-maintain* the mirror — sort only the appended tail and
+        merge it into the resident sorted run (O(Δ log Δ) instead of
+        O(N log N); see ``merge_runs``).  ``n_dead`` is the owning
+        table's tombstone count: any movement since the resident run's
+        baseline forces a full rebuild instead of a merge.  Host
+        backends ignore all three hints."""
         keys = np.asarray(keys)
         return self.sort_kv(keys.astype(np.int64, copy=False),
                             np.arange(len(keys), dtype=np.int64))
+
+    def merge_runs(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Merge two individually sorted key arrays into one sorted
+        array.  Equal keys keep the ``a``-run elements first; with
+        distinct tagged codes (key ``<<`` tag_bits ``|`` lane) that tie
+        discipline is exactly what makes the merge of two stable runs
+        bit-match the full stable sort.  The mirror-maintenance
+        composite (``device_merge_sorted_mirror``) shares the same
+        rank+scatter core on device; this standalone form is its
+        host-checkable surface — the host twin here is the parity
+        oracle for ``kernels/sortmerge/ops.device_merge_runs``."""
+        a = np.asarray(a, np.int64)
+        b = np.asarray(b, np.int64)
+        if len(a) == 0 or len(b) == 0:
+            return (b if len(a) == 0 else a).copy()
+        out = np.empty(len(a) + len(b), np.int64)
+        out[np.arange(len(a)) + np.searchsorted(b, a, side="left")] = a
+        out[np.arange(len(b)) + np.searchsorted(a, b, side="right")] = b
+        return out
 
     def hash_join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray
                         ) -> tuple[np.ndarray, np.ndarray]:

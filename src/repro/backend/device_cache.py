@@ -71,6 +71,100 @@ class TransferCounter:
 
 
 @dataclasses.dataclass
+class SortWorkCounter:
+    """Device sort-work accounting for the resident index mirrors.
+
+    ``sorted_bytes`` counts bytes fed through *full* mirror sorts
+    (O(N log N) — cold builds, width-overflow/tombstone rebuilds, and
+    compactions); ``merged_bytes`` counts bytes fed through the
+    *delta-run* sorter on the incremental merge path (O(Δ log Δ) + a
+    linear merge).  At a steady streaming-append state ``merged_bytes``
+    per append is the delta bucket, not the column — the measurable form
+    of "per-append index cost scales with Δ" (the bench transfer report
+    carries both, next to the h2d/d2h counters)."""
+
+    full_sorts: int = 0
+    sorted_bytes: int = 0
+    delta_merges: int = 0
+    merged_bytes: int = 0
+    compactions: int = 0
+    rebuilds: int = 0  # forced full paths: tombstone churn, width overflow
+
+    def count_full(self, nbytes: int, *, compaction: bool = False,
+                   rebuild: bool = False) -> None:
+        self.full_sorts += 1
+        self.sorted_bytes += int(nbytes)
+        self.compactions += bool(compaction)
+        self.rebuilds += bool(rebuild)
+
+    def count_merge(self, nbytes: int) -> None:
+        self.delta_merges += 1
+        self.merged_bytes += int(nbytes)
+
+    def snapshot(self) -> "SortWorkCounter":
+        return SortWorkCounter(self.full_sorts, self.sorted_bytes,
+                               self.delta_merges, self.merged_bytes,
+                               self.compactions, self.rebuilds)
+
+    def delta(self, since: "SortWorkCounter") -> "SortWorkCounter":
+        return SortWorkCounter(
+            self.full_sorts - since.full_sorts,
+            self.sorted_bytes - since.sorted_bytes,
+            self.delta_merges - since.delta_merges,
+            self.merged_bytes - since.merged_bytes,
+            self.compactions - since.compactions,
+            self.rebuilds - since.rebuilds)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __repr__(self) -> str:  # compact: shows up in bench reports
+        return (f"SortWorkCounter(full={self.full_sorts}x/"
+                f"{self.sorted_bytes}B, merge={self.delta_merges}x/"
+                f"{self.merged_bytes}B, compact={self.compactions}, "
+                f"rebuild={self.rebuilds})")
+
+
+@dataclasses.dataclass
+class MirrorRuns:
+    """Run-tracking state for one resident ``(sorted, perm)`` index
+    mirror — the value stored under a ``("runs", cache_key)`` entry.
+
+    ``tagged`` is the resident sorted run in tagged form (``(key - kmin)
+    << tag_bits | lane`` over the real prefix, per-lane pad codes above
+    every real code past ``n``).  An append becomes a *pending delta
+    run*: the tail is tagged-sorted on its own and merged into the
+    resident run by the bounded two-run merge kernel.  Because every
+    ``sort_perm`` call must hand back the complete mirror, pending runs
+    are collapsed within the maintenance call that created them — the
+    entry tracks how many merges the resident run has absorbed
+    (``merges``) rather than a live run list.
+
+    Maintenance policy (enforced by ``JaxOps._mirror_sort_device``):
+
+    * **merge** while the column grew append-only at an unchanged buffer
+      capacity, the key span still fits the tagged width, and the run
+      has absorbed fewer than the compaction threshold of merges;
+    * **compaction** (full re-sort, ``merges`` reset) once the run count
+      crosses the threshold — bounds re-base drift and keeps the merge
+      chain shallow;
+    * **full rebuild fallback** on tombstone churn (``n_dead`` moved —
+      the mirror itself stays sound under tombstones, but dead weight
+      accumulating past the baseline is re-sorted rather than merged
+      around), on width overflow, and on any non-append change
+      (capacity growth, shrink, rewrite).
+    """
+
+    tagged: Any
+    n: int
+    kmin: int
+    cap: int
+    tag_bits: int
+    merges: int = 0
+    n_dead: int = 0
+
+
+@dataclasses.dataclass
 class CacheEntry:
     version: int
     value: Any

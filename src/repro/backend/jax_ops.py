@@ -30,6 +30,19 @@ Every host<->device conversion goes through ``self.transfers`` — a
 ``TransferCounter`` — so residency is measurable: repeated index builds
 and write-side dedups at an unchanged version cost zero transfers.
 
+Merge maintenance: resident index mirrors are not re-sorted per append.
+Each mirror carries a ``MirrorRuns`` entry (the sorted run in tagged
+form); an append sorts only the O(Δ) tail into a delta run and merges it
+into the resident run with the bounded two-run merge kernel
+(``kernels/sortmerge/ops.device_merge_sorted_mirror``), bit-matching the
+full stable re-sort.  Compaction (a full re-sort) triggers when the run
+has absorbed ``MIRROR_COMPACT_RUNS`` merges; tombstone churn, tagged
+width overflow, and non-append changes force the full-rebuild fallback.
+``self.sort_work`` (a ``SortWorkCounter``) splits the device sort bytes
+into ``sorted_bytes`` (full sorts) vs ``merged_bytes`` (delta runs) so
+"per-append index cost scales with Δ" is measurable in the bench
+transfer report.
+
 Shape discipline: inputs are padded to power-of-two buckets with sentinel
 keys (``int64 max`` at the tail for sorts, ``int64 min`` on the join's
 right side) so the jit cache stays logarithmic in observed sizes.
@@ -52,7 +65,8 @@ import threading
 import numpy as np
 
 from repro.backend.base import Ops
-from repro.backend.device_cache import DeviceArrayCache, TransferCounter
+from repro.backend.device_cache import (DeviceArrayCache, MirrorRuns,
+                                        SortWorkCounter, TransferCounter)
 from repro.backend.handles import DeviceCol, merge_bounds
 from repro.backend.numpy_ops import NumpyOps
 
@@ -246,6 +260,11 @@ class JaxOps(Ops):
     """Bounded-shape, jit-cached, device-resident implementation of
     ``Ops``."""
 
+    # mirror compaction threshold: after this many absorbed delta runs a
+    # full re-sort re-establishes the baseline (bounds re-base drift and
+    # keeps the tagged run's merge history shallow)
+    MIRROR_COMPACT_RUNS = 64
+
     def __init__(self, mode: str = "auto", block: int = 1024,
                  min_bucket: int | None = None,
                  cache_bytes: int = 256 << 20) -> None:
@@ -260,6 +279,7 @@ class JaxOps(Ops):
         self._host = NumpyOps()  # exact fallback for sentinel collisions
         self._lock = threading.Lock()
         self.transfers = TransferCounter()
+        self.sort_work = SortWorkCounter()
         self.cache = DeviceArrayCache(cache_bytes)
 
     # -- plumbing ---------------------------------------------------------
@@ -361,8 +381,63 @@ class JaxOps(Ops):
                 **self._sort_args())
         return _jitted()["stable_sort_perm_xla"](buf, n)
 
+    def _mirror_sort_device(self, cache_key, version: int, buf, n: int,
+                            kmin: int, kmax: int, n_dead: int):
+        """(sorted, perm) device arrays for a cached mirror, maintained
+        incrementally: when the resident ``MirrorRuns`` entry is an
+        append-only prefix of the column at an unchanged capacity, only
+        the tail is tagged-sorted (O(Δ log Δ)) and merged into the
+        resident run; otherwise — cold build, capacity growth, width
+        overflow, tombstone churn, shrink/rewrite, or the compaction
+        threshold — the full sort runs and (when taggable) seeds a fresh
+        run entry.  Caller holds the lock and the x64 scope."""
+        from repro.kernels.sortmerge.ops import (device_merge_sorted_mirror,
+                                                 fits_tagged_width,
+                                                 tag_bits_for,
+                                                 tagged_from_sorted)
+        cap = buf.shape[0]
+        tb = tag_bits_for(cap)
+        fits = fits_tagged_width(kmin, kmax, cap)
+        key = ("runs", cache_key)
+        ent = self.cache.get_any(key)
+        runs = ent.value if ent is not None else None
+        compacting = (runs is not None and
+                      runs.merges >= self.MIRROR_COMPACT_RUNS)
+        if (runs is not None and fits and not compacting
+                and runs.cap == cap and runs.tag_bits == tb
+                and runs.n < n and runs.n_dead == n_dead
+                and runs.kmin >= kmin):
+            d = n - runs.n
+            dcap = self._delta_bucket(d)
+            if dcap <= cap:  # the slice window slides back if needed
+                sk, perm, merged = device_merge_sorted_mirror(
+                    buf, runs.tagged, runs.n, n, kmin, runs.kmin,
+                    dcap=dcap, tag_bits=tb, **self._sort_args())
+                self.cache.put(key, version, MirrorRuns(
+                    tagged=merged, n=n, kmin=kmin, cap=cap, tag_bits=tb,
+                    merges=runs.merges + 1, n_dead=n_dead),
+                    merged.nbytes)
+                self.sort_work.count_merge(dcap * 8)
+                return sk, perm
+        sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
+        rebuild = (runs is not None and not compacting and
+                   (not fits or runs.n_dead != n_dead))
+        self.sort_work.count_full(cap * 8, compaction=compacting,
+                                  rebuild=rebuild)
+        if fits:
+            tagged = tagged_from_sorted(sk, perm, n, kmin, tag_bits=tb)
+            self.cache.put(key, version, MirrorRuns(
+                tagged=tagged, n=n, kmin=kmin, cap=cap, tag_bits=tb,
+                merges=0, n_dead=n_dead), tagged.nbytes)
+        else:
+            # width overflow: the XLA-lexsort output has no tagged form
+            # to merge into — appends keep re-sorting until the span
+            # shrinks (it cannot) or the capacity bucket grows
+            self.cache.invalidate(key)
+        return sk, perm
+
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
-                  version: int | None = None
+                  version: int | None = None, n_dead: int = 0
                   ) -> tuple[np.ndarray, np.ndarray]:
         keys = np.asarray(keys)
         n = len(keys)
@@ -379,11 +454,14 @@ class JaxOps(Ops):
                 colv = self._resident_column(cache_key, version, keys64,
                                              INT64_MAX)
                 buf, kmin, kmax = colv["buf"], colv["kmin"], colv["kmax"]
+                sk, perm = self._mirror_sort_device(
+                    cache_key, version, buf, n, kmin, kmax, int(n_dead))
             else:
                 kmin, kmax = int(keys64.min()), int(keys64.max())
                 buf = self._to_dev(
                     self._pad(keys64, self._bucket(n), INT64_MAX))
-            sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
+                sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
+                self.sort_work.count_full(buf.shape[0] * 8)
             if use_cache:
                 # stash the device-side sorted mirror too: batched
                 # rank-1 probes (`batch_probe`) search it without ever
@@ -423,6 +501,28 @@ class JaxOps(Ops):
             ks = self._to_host(sk)
             vs = self._to_host(vs)
         return ks[:n], vs[:n]
+
+    def merge_runs(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Bounded two-run merge on device (kernels/sortmerge).  No
+        sentinel-collision fallback is needed: the rank searches run
+        over MAX-padded arrays but are clamped by the runs' real
+        lengths, so real keys equal to the sentinel still land in the
+        right positions (every real key is <= MAX and the clamp equals
+        the true rank)."""
+        a = np.asarray(a, np.int64)
+        b = np.asarray(b, np.int64)
+        n_a, n_b = len(a), len(b)
+        if n_a == 0 or n_b == 0:
+            return (b if n_a == 0 else a).copy()
+        from repro.kernels.sortmerge.ops import device_merge_runs
+        cap = self._bucket(n_a + n_b)
+        with self._lock, self._x64():
+            ap = self._to_dev(self._pad(a, cap, INT64_MAX))
+            bp = self._to_dev(
+                self._pad(b, self._delta_bucket(n_b), INT64_MAX))
+            out = self._to_host(device_merge_runs(
+                ap, bp, n_a, n_b, **self._sort_args()))
+        return out[: n_a + n_b]
 
     def join_pairs(self, lkeys: np.ndarray, rkeys: np.ndarray, *,
                    rkeys_key=None, rkeys_version: int | None = None

@@ -23,10 +23,11 @@ class NumpyOps(Ops):
         return keys[order], vals[order]
 
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
-                  version: int | None = None
+                  version: int | None = None, n_dead: int = 0
                   ) -> tuple[np.ndarray, np.ndarray]:
         # native-dtype fast path: no int64 casts, no arange payload.
-        # cache_key/version are device-residency hints — meaningless here.
+        # cache_key/version/n_dead are device-residency hints (mirror
+        # caching + merge maintenance) — meaningless here.
         keys = np.asarray(keys)
         order = np.argsort(keys, kind="stable")
         return keys[order], order

@@ -34,6 +34,36 @@ from repro.core.store import FactStore, TypedFactTable
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Configuration axes of the engine (paper Table 1 + the repo's
+    execution axes).
+
+    The paper axes select *algorithms*: ``index_backend`` (rank-1 index
+    family), ``join`` (sort-merge vs radix-hash), ``rnl`` (AR restricts
+    each island chain by the bound set; DR defers all restriction to the
+    join), ``layout`` (columnar vs row result buffers), ``tree_exec`` /
+    ``index_write`` (parallel vs sequential derivation-tree levels and
+    index writes), ``unique`` (bulk sort-merge dedup vs incremental
+    hashtable), ``sort_mode`` (condition ordering by cardinality sort
+    keys vs fixed order).
+
+    The execution axes select *where* those algorithms run (see
+    docs/ARCHITECTURE.md for the full matrix):
+
+    * ``backend`` — which ``Ops`` implements the bulk primitives:
+      ``numpy`` host twins, or the jax tiers (``jax`` = XLA-lowered
+      with Pallas on TPU, ``jax-pallas`` = force the compiled Pallas
+      kernels, ``jax-interpret`` = Pallas through the interpreter, the
+      CPU-container test mode).
+    * ``device_pipeline`` — route the island join chain and write-side
+      dedup through device-resident ``DeviceCol`` handles (``auto``
+      follows ``Ops.prefer_handles``: on for jax backends).
+    * ``eval_mode`` — fixpoint rounds re-evaluate rules in ``full``, or
+      semi-naive over append frontiers (``delta``); ``auto`` picks per
+      rule per round and reverts to full where semi-naive cannot win.
+    * ``query_cache`` / ``lazy`` — the paper §5 rank-N result cache and
+      Defs. 10/11 active-rule pruning.
+    """
+
     index_backend: str = "AI"     # AI | HI | LPIM | LPID
     join: str = "MJ"              # MJ | HJ
     rnl: str = "AR"               # AR | DR
@@ -70,6 +100,18 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class InferStats:
+    """Observability record returned by ``HiperfactEngine.infer()``.
+
+    ``iterations`` counts fixpoint rounds; ``rules_evaluated`` /
+    ``rules_skipped_inactive`` / ``rules_skipped_unchanged`` decompose
+    scheduling (Defs. 10/11 pruning and per-type version tracking);
+    ``facts_inferred`` / ``facts_deleted`` are write-side outcomes
+    *after* dedup.  The semi-naive fields below measure the delta
+    machinery: backend-level transfer/sort-work counters live on the
+    ``Ops`` instance (``ops.transfers``, ``ops.sort_work``,
+    ``ops.cache.stats()``), not here.
+    """
+
     iterations: int = 0
     rules_evaluated: int = 0
     rules_skipped_inactive: int = 0

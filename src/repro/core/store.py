@@ -51,9 +51,11 @@ class Rank1Index(abc.ABC):
 
     Each build passes the owning table's ``(uid, version)`` as a cache
     identity: the device backend keeps the column and its (sorted, perm)
-    mirrors resident across calls, re-uploading only appended tails when
+    mirrors resident across calls, uploading only appended tails when
     the version advances (columns are append-only; deletes are tombstones
-    that never touch them).
+    that never touch them) and maintaining the sorted mirror by delta-run
+    *merge* rather than a full re-sort — so per-append index cost scales
+    with the batch, not the table.
     """
 
     name: str = "?"
@@ -64,11 +66,19 @@ class Rank1Index(abc.ABC):
     def _perm_sort(self, col: np.ndarray, table: "TypedFactTable | None" = None,
                    comp: "Component | int | None" = None, variant: str = ""
                    ) -> tuple[np.ndarray, np.ndarray]:
-        """(sorted column, permutation) via the backend's stable sort."""
+        """(sorted column, permutation) via the backend's stable sort.
+
+        With a table identity the backend keeps the column and its
+        (sorted, perm) mirrors device-resident under ``(uid, comp,
+        version)`` and *merge-maintains* them across appends: only the
+        tail past the resident run is sorted and merged in.  The
+        table's tombstone count rides along so heavy delete churn
+        triggers the full-rebuild fallback instead of merging around
+        dead weight."""
         kw = {}
         if table is not None and comp is not None:
             kw = {"cache_key": (table.uid, int(comp), variant),
-                  "version": table.version}
+                  "version": table.version, "n_dead": table.n_dead}
         skeys, perm = self.ops.sort_perm(col, **kw)
         return skeys.astype(col.dtype, copy=False), perm.astype(np.int32)
 
@@ -505,10 +515,16 @@ class FactStore:
 
     def lookup_many(self, ftype: str, comp: Component,
                     values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Bulk point lookup: alive row ids for every probe value, CSR
-        form ``(rows, offsets)``.  One batched index probe (a single
-        device kernel call on the jax backends for AI tables) instead of
-        a Python loop of per-value bisections."""
+        """Bulk point lookup: alive row ids for every probe value in CSR
+        form — rows for ``values[i]`` are ``rows[offsets[i]:
+        offsets[i+1]]``.  Routed through ``Rank1Index.lookup_batch`` →
+        ``Ops.batch_probe``: on the jax backends an AI table resolves
+        every probe in one kernel launch against the device-resident
+        sorted mirror that ``sort_perm`` stashed (and now
+        merge-maintains) under the table's ``(uid, comp, version)``
+        identity — one upload for the probe batch, one download for the
+        run bounds.  Tombstoned rows are filtered and offsets
+        re-aligned; an unknown ``ftype`` returns an empty CSR."""
         values = np.asarray(values)
         t = self.tables.get(ftype)
         if t is None:

@@ -19,6 +19,18 @@ Width guard: tagging needs ``ceil(log2(cap))`` low bits, so the key span
 ``kmax - kmin`` must fit the remaining ``63 - tag_bits`` — the *caller*
 checks ``fits_tagged_width`` and falls back to the XLA lexsort composite
 otherwise (see backend/jax_ops.py).
+
+Incremental merge maintenance: an append to a version-stamped column is
+an O(Δ) change, so re-running the full O(N log N) tagged sort per append
+wastes exactly the asymptotics the semi-naive fixpoint saves elsewhere.
+``device_merge_runs`` merges two individually sorted runs with two rank
+launches (``merge_ranks``, the Pallas binary-search kernel) plus one XLA
+scatter — final position = own lane + rank in the other run, stable with
+left-run-first tie discipline.  ``device_merge_sorted_mirror`` is the
+index-maintenance composite built on it: slice the appended tail out of
+the resident column buffer, tagged-sort only the tail (O(Δ log Δ)),
+re-base the resident tagged run if the key minimum moved, merge, and
+de-tag — one jit program, no host materialization.
 """
 
 import functools
@@ -26,7 +38,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sortmerge.sortmerge import bitonic_sort, bitonic_sort_kv
+from repro.kernels.sortmerge.sortmerge import (bitonic_sort, bitonic_sort_kv,
+                                               merge_ranks)
 
 
 def _on_tpu() -> bool:
@@ -134,3 +147,139 @@ def device_dedup_rows(cols: tuple, n_real, kmins: jnp.ndarray, *,
     keep = diff & (order < n_real)
     rows = jnp.sort(jnp.where(keep, order, cap))
     return rows, jnp.sum(keep)
+
+
+# ---------------------------------------------------------------------------
+# Incremental merge maintenance
+
+
+def _run_ranks(a, b, n_a, n_b, *, block, force_pallas, interpret):
+    """Ranks for a stable two-run merge: for each ``a`` lane the count of
+    *real* ``b`` elements strictly below it (side=left), and for each
+    ``b`` lane the count of real ``a`` elements at or below it
+    (side=right) — a's elements win ties, which is what makes the merge
+    of two stable runs equal the full stable sort.  Pad tails must sort
+    above every real key on both sides (the searches run over the full
+    padded arrays), and ranks are clamped by the other run's real length
+    so pad *content* never leaks into positions."""
+    if force_pallas or _on_tpu():
+        ra = merge_ranks(a, b, side_right=False, block=block,
+                         interpret=interpret)
+        rb = merge_ranks(b, a, side_right=True, block=block,
+                         interpret=interpret)
+    else:
+        ra = jnp.searchsorted(b, a, side="left").astype(jnp.int32)
+        rb = jnp.searchsorted(a, b, side="right").astype(jnp.int32)
+    return (jnp.minimum(ra.astype(jnp.int64), n_b),
+            jnp.minimum(rb.astype(jnp.int64), n_a))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "force_pallas", "interpret"))
+def device_merge_runs(a, b, n_a, n_b, *, block: int = 1024,
+                      force_pallas: bool = False, interpret: bool = False):
+    """Bounded two-run merge: ``a[:n_a]`` and ``b[:n_b]`` are each sorted
+    ascending; returns one sorted array of ``a.shape[0]`` lanes whose
+    real prefix ``[:n_a + n_b]`` is the stable merge (ties keep ``a``
+    elements first) and whose pad tail is ``int64 max``.
+
+    Shape contract: the output capacity is ``a.shape[0]`` — the caller
+    guarantees ``n_a + n_b <= a.shape[0]`` and pads both inputs with
+    ``int64 max`` tails (real keys equal to the sentinel are the
+    caller's sentinel-collision guard, as everywhere else in this
+    family)."""
+    cap = a.shape[0]
+    ra, rb = _run_ranks(a, b, n_a, n_b, block=block,
+                        force_pallas=force_pallas, interpret=interpret)
+    lane_a = jnp.arange(cap, dtype=jnp.int64)
+    lane_b = jnp.arange(b.shape[0], dtype=jnp.int64)
+    pos_a = jnp.where(lane_a < n_a, lane_a + ra, cap)
+    pos_b = jnp.where(lane_b < n_b, lane_b + rb, cap)
+    out = jnp.full((cap,), jnp.iinfo(jnp.int64).max, jnp.int64)
+    out = out.at[pos_a].set(a, mode="drop")
+    out = out.at[pos_b].set(b, mode="drop")
+    return out
+
+
+def _pad_codes(cap: int, tag_bits: int):
+    """Per-lane pad codes that sort strictly above every real tagged
+    code at this width (``fits_tagged_width`` keeps real high parts
+    below ``max_code``)."""
+    max_code = (jnp.int64(1) << (63 - tag_bits)) - 1
+    return (max_code << tag_bits) | jnp.arange(cap, dtype=jnp.int64)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dcap", "tag_bits", "block", "force_pallas", "interpret"))
+def device_merge_sorted_mirror(buf, base_tagged, n_base, n_total, kmin,
+                               kmin_old, *, dcap: int, tag_bits: int,
+                               block: int = 1024,
+                               force_pallas: bool = False,
+                               interpret: bool = False):
+    """Incremental (sorted, perm) maintenance for an append-only column.
+
+    ``buf``: the resident padded column buffer at the *new* version
+    (rows ``[n_base, n_total)`` are the appended tail).  ``base_tagged``:
+    the resident sorted run in tagged form — ``(key - kmin_old) <<
+    tag_bits | lane`` for lanes ``< n_base``, pad codes above.  The
+    composite (one jit program, nothing touches the host):
+
+    1. slice the ``dcap``-lane appended tail out of ``buf`` and
+       tagged-sort it with *absolute* lane tags (``lane + n_base``) —
+       the O(Δ log Δ) part;
+    2. re-base the resident run's codes if the key minimum moved
+       (``kmin < kmin_old``: a constant shift of the high part, order
+       preserved);
+    3. merge the two runs (ranks + scatter, O(N) linear);
+    4. de-tag: sorted keys (pads ``int64 max``) + permutation (pads own
+       index) — bit-identical to a full stable re-sort of ``buf``.
+
+    Returns ``(sorted_keys, perm, merged_tagged)`` — the caller stores
+    ``merged_tagged`` back as the next resident run.
+    """
+    cap = buf.shape[0]
+    d = n_total - n_base
+    # 1. tagged delta run (absolute lane tags so low bits stay the perm).
+    # The dcap-lane window may not fit past n_base near the top of the
+    # buffer, so it slides back and the real rows are masked by their
+    # *global* lane — pad content on either side is re-tagged away.
+    start = jnp.minimum(n_base, cap - dcap)
+    seg = jax.lax.dynamic_slice(buf, (start,), (dcap,))
+    lane_d = jnp.arange(dcap, dtype=jnp.int64)
+    gl = lane_d + start  # global lane of each window element
+    drun = jnp.where((gl >= n_base) & (gl < n_total),
+                     ((seg - kmin) << tag_bits) | gl,
+                     _pad_codes(dcap, tag_bits))
+    drun = device_sort(drun, block=block, force_pallas=force_pallas,
+                       interpret=interpret)
+    # 2. re-base the resident run to the new key minimum
+    lane = jnp.arange(cap, dtype=jnp.int64)
+    shift = (kmin_old - kmin) << tag_bits
+    base = jnp.where(lane < n_base, base_tagged + shift,
+                     _pad_codes(cap, tag_bits))
+    # 3. merge (tagged codes are all distinct, so ties cannot occur; the
+    # left-first discipline is inherited from device_merge_runs anyway)
+    ra, rb = _run_ranks(base, drun, n_base, d, block=block,
+                        force_pallas=force_pallas, interpret=interpret)
+    pos_a = jnp.where(lane < n_base, lane + ra, cap)
+    pos_b = jnp.where(lane_d < d, lane_d + rb, cap)
+    merged = _pad_codes(cap, tag_bits)
+    merged = merged.at[pos_a].set(base, mode="drop")
+    merged = merged.at[pos_b].set(drun, mode="drop")
+    # 4. de-tag
+    mask = (jnp.int64(1) << tag_bits) - 1
+    perm = merged & mask
+    skeys = jnp.where(lane < n_total, (merged >> tag_bits) + kmin,
+                      jnp.iinfo(jnp.int64).max)
+    return skeys, perm, merged
+
+
+@functools.partial(jax.jit, static_argnames=("tag_bits",))
+def tagged_from_sorted(skeys, perm, n_real, kmin, *, tag_bits: int):
+    """Re-pack a (sorted, perm) mirror into its tagged-run form — the
+    seed a full sort leaves behind so the *next* append can take the
+    merge path instead of re-sorting."""
+    cap = skeys.shape[0]
+    lane = jnp.arange(cap, dtype=jnp.int64)
+    return jnp.where(lane < n_real, ((skeys - kmin) << tag_bits) | perm,
+                     _pad_codes(cap, tag_bits))

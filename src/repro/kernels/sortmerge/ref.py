@@ -10,3 +10,11 @@ def sort_ref(x: jnp.ndarray) -> jnp.ndarray:
 def sort_kv_ref(keys: jnp.ndarray, vals: jnp.ndarray):
     order = jnp.argsort(keys, stable=True)
     return keys[order], vals[order]
+
+
+def merge_runs_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Two-run merge oracle.  Equal keys are indistinguishable in a
+    key-only merge, so the merged array is simply the sorted union; the
+    left-run-first tie discipline of the kernel only becomes observable
+    through the tagged (distinct-code) mirror path."""
+    return jnp.sort(jnp.concatenate([a, b]))

@@ -18,6 +18,14 @@ addressing.  For a (padded) power-of-two array and network parameters
 Key-value (id+object) variants carry a payload through every exchange —
 the paper's fork-join instance 4 used by sort keys and columnar join
 results.
+
+``merge_ranks`` is the incremental-maintenance companion: given one
+sorted run per side, it computes each element's rank in the *other* run
+(a branch-free vectorized binary search, the same VPU idiom as the
+mergejoin probe).  Rank + own lane index = the element's final position
+in the merged run, so a two-run merge is two rank launches plus one XLA
+scatter — O(Δ log N) work instead of the O(N log N) full re-sort
+(see ops.py ``device_merge_runs``).
 """
 
 from __future__ import annotations
@@ -137,6 +145,57 @@ def _cross_kernel_kv(k_ref, v_ref, pk_ref, pv_ref, ok_ref, ov_ref, *,
     lo_k, lo_v, hi_k, hi_v = _cmp_exchange_kv(a_k, a_v, b_k, b_v, asc)
     ok_ref[...] = jnp.where(is_lo, lo_k, hi_k)
     ov_ref[...] = jnp.where(is_lo, lo_v, hi_v)
+
+
+# ---------------------------------------------------------------------------
+# Two-run merge: rank computation (fork over blocks of one run, the other
+# run VMEM-resident per launch — the probe kernel's shape, reused for
+# incremental index maintenance)
+
+
+def _rank_kernel(x_ref, r_ref, o_ref, *, m: int, side_right: bool):
+    keys = x_ref[...]
+    r = r_ref[...]
+    steps = max(1, (m - 1).bit_length())
+    lo = jnp.zeros(keys.shape, jnp.int32)
+    hi = jnp.full(keys.shape, m, jnp.int32)
+    for _ in range(steps + 1):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        v = r[jnp.clip(mid, 0, m - 1)]
+        go_right = (v <= keys) if side_right else (v < keys)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    o_ref[...] = lo
+
+
+def merge_ranks(x: jnp.ndarray, other_sorted: jnp.ndarray,
+                side_right: bool = False, block: int = DEF_BLOCK,
+                interpret: bool = False) -> jnp.ndarray:
+    """Rank of every ``x`` element inside the sorted run ``other_sorted``
+    (``searchsorted`` semantics: ``side_right=False`` counts strictly
+    smaller elements, ``True`` counts <=).  Both arrays may carry pad
+    tails as long as the pads sort above every real key — the caller
+    masks pad lanes of ``x`` and bounds the ranks by the other run's
+    real length."""
+    n = x.shape[0]
+    m = other_sorted.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    n_pad = ((n + block - 1) // block) * block
+    big = jnp.asarray(jnp.iinfo(x.dtype).max, x.dtype)
+    xp = jnp.full((n_pad,), big, x.dtype).at[:n].set(x)
+    grid = (n_pad // block,)
+    ranks = pl.pallas_call(
+        functools.partial(_rank_kernel, m=m, side_right=side_right),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(xp, other_sorted)
+    return ranks[:n]
 
 
 # ---------------------------------------------------------------------------

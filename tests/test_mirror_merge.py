@@ -1,0 +1,311 @@
+"""Merge-path parity: incrementally maintained index mirrors ≡ full sort.
+
+PR 2 made the rank-1 ``(sorted, perm)`` mirrors device-resident but
+re-sorted the whole column on every append — O(N log N) work for an O(Δ)
+change.  The merge path sorts only the appended tail and merges it into
+the resident tagged run (``kernels/sortmerge/ops.device_merge_sorted_
+mirror``), so the contract under test is *bit-identity*: after any chain
+of appends, the merged mirror must equal ``np.argsort(kind="stable")`` of
+the full column — stability, duplicates, and pad tails included.  The
+fallback matrix (width overflow, tombstone churn, capacity growth,
+compaction threshold) and the two-run ``merge_runs`` primitive are
+covered here too, plus the residency invariants the merge path must not
+regress: zero transfers at a fixed version and delta-bucket uploads on
+append.
+"""
+
+import numpy as np
+import pytest
+
+from repro.backend import get_backend
+from repro.backend.jax_ops import JaxOps
+from repro.backend.numpy_ops import NumpyOps
+
+HOST = NumpyOps()
+RNG = np.random.RandomState(77)
+
+
+def fresh_ops():
+    return JaxOps(mode="interpret", block=256)
+
+
+def device_backends():
+    return [pytest.param(get_backend("jax"), id="jax-auto"),
+            pytest.param(fresh_ops(), id="jax-interpret")]
+
+
+def assert_mirror_exact(ops, col, key, version, **kw):
+    s, p = ops.sort_perm(col, cache_key=key, version=version, **kw)
+    order = np.argsort(col, kind="stable")
+    np.testing.assert_array_equal(p, order)
+    np.testing.assert_array_equal(s, col[order])
+
+
+# ---------------------------------------------------------------------------
+# merge_runs primitive parity (host twin is the oracle)
+
+
+@pytest.mark.parametrize("ops", device_backends())
+@pytest.mark.parametrize("na,nb", [(500, 77), (64, 64), (1, 300), (9, 1)])
+def test_merge_runs_parity(ops, na, nb):
+    a = np.sort(RNG.randint(0, 80, na)).astype(np.int64)
+    b = np.sort(RNG.randint(0, 80, nb)).astype(np.int64)
+    got = ops.merge_runs(a, b)
+    np.testing.assert_array_equal(got, HOST.merge_runs(a, b))
+    np.testing.assert_array_equal(got, np.sort(np.concatenate([a, b])))
+
+
+@pytest.mark.parametrize("ops", device_backends())
+def test_merge_runs_empty_and_sentinel(ops):
+    e = np.empty(0, np.int64)
+    a = np.sort(RNG.randint(0, 50, 20)).astype(np.int64)
+    np.testing.assert_array_equal(ops.merge_runs(a, e), a)
+    np.testing.assert_array_equal(ops.merge_runs(e, a), a)
+    np.testing.assert_array_equal(ops.merge_runs(e, e), e)
+    # real keys equal to the pad sentinel: the rank clamp keeps them
+    # exact (no host fallback needed — see JaxOps.merge_runs)
+    mx = np.iinfo(np.int64).max
+    a2 = np.sort(np.concatenate([a, [mx, mx]]))
+    b2 = np.sort(np.concatenate([RNG.randint(0, 50, 7), [mx]])).astype(
+        np.int64)
+    np.testing.assert_array_equal(ops.merge_runs(a2, b2),
+                                  HOST.merge_runs(a2, b2))
+
+
+def test_merge_runs_stability_via_tagged_codes():
+    """The left-first tie discipline is unobservable on raw keys, so
+    assert it through distinct tagged codes: merging (key << 8 | lane)
+    runs must interleave exactly like the full stable sort."""
+    ops = fresh_ops()
+    keys_a = np.sort(RNG.randint(0, 10, 40)).astype(np.int64)
+    keys_b = np.sort(RNG.randint(0, 10, 24)).astype(np.int64)
+    a = (keys_a << 8) | np.arange(40, dtype=np.int64)
+    b = (keys_b << 8) | (np.arange(24, dtype=np.int64) + 40)
+    # a/b are sorted runs of distinct codes whose key parts collide
+    merged = ops.merge_runs(np.sort(a), np.sort(b))
+    np.testing.assert_array_equal(
+        merged, np.sort(np.concatenate([a, b]), kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# Mirror maintenance: merged ≡ full stable re-sort, bit for bit
+
+
+def test_mirror_append_chain_bit_identical():
+    ops = fresh_ops()
+    col = RNG.randint(0, 1000, 2000).astype(np.int64)
+    assert_mirror_exact(ops, col, ("m", 1), 1)
+    assert ops.sort_work.full_sorts == 1
+    for v in range(2, 10):
+        col = np.concatenate(
+            [col, RNG.randint(0, 1000, 5).astype(np.int64)])
+        assert_mirror_exact(ops, col, ("m", 1), v)
+    # every append fits the capacity bucket -> all merges, no re-sorts
+    assert ops.sort_work.delta_merges == 8
+    assert ops.sort_work.full_sorts == 1
+    # per-append sorted work scaled with the delta bucket, not the column
+    assert ops.sort_work.merged_bytes < ops.sort_work.sorted_bytes // 4
+
+
+def test_mirror_merge_duplicates_and_stability():
+    """Heavy duplicate keys across the append boundary: the merged perm
+    must keep old rows before new rows of the same key (stable order)."""
+    ops = fresh_ops()
+    col = RNG.randint(0, 5, 600).astype(np.int64)  # ~120 rows per key
+    assert_mirror_exact(ops, col, ("dup", 1), 1)
+    for v in range(2, 6):
+        col = np.concatenate([col, RNG.randint(0, 5, 33).astype(np.int64)])
+        assert_mirror_exact(ops, col, ("dup", 1), v)
+    assert ops.sort_work.delta_merges == 4
+
+
+def test_mirror_merge_kmin_shift():
+    """A delta that lowers the key minimum re-bases the resident run's
+    tagged codes; the merged mirror must stay exact."""
+    ops = fresh_ops()
+    col = RNG.randint(100, 1000, 800).astype(np.int64)
+    assert_mirror_exact(ops, col, ("km", 1), 1)
+    col = np.concatenate([col, RNG.randint(-500, 100, 21).astype(np.int64)])
+    assert_mirror_exact(ops, col, ("km", 1), 2)
+    assert ops.sort_work.delta_merges == 1
+
+
+def test_mirror_width_overflow_falls_back_to_full_sort():
+    """Key spans past the tagged width cannot merge (the XLA lexsort
+    output has no tagged run to merge into): every version re-sorts,
+    results stay exact, and no runs entry is left behind."""
+    ops = fresh_ops()
+    col = RNG.randint(-(2 ** 62), 2 ** 62, 400).astype(np.int64)
+    assert_mirror_exact(ops, col, ("w", 1), 1)
+    col = np.concatenate([col, RNG.randint(-(2 ** 62), 2 ** 62, 9)
+                          .astype(np.int64)])
+    assert_mirror_exact(ops, col, ("w", 1), 2)
+    assert ops.sort_work.delta_merges == 0
+    assert ops.sort_work.full_sorts == 2
+    assert ops.cache.get_any(("runs", ("w", 1))) is None
+
+
+def test_mirror_tombstone_churn_triggers_rebuild():
+    """n_dead moving since the resident run's baseline forces the
+    full-rebuild fallback instead of a merge."""
+    ops = fresh_ops()
+    col = RNG.randint(0, 300, 900).astype(np.int64)
+    assert_mirror_exact(ops, col, ("d", 1), 1, n_dead=0)
+    col = np.concatenate([col, RNG.randint(0, 300, 11).astype(np.int64)])
+    assert_mirror_exact(ops, col, ("d", 1), 2, n_dead=4)
+    assert ops.sort_work.delta_merges == 0
+    assert ops.sort_work.rebuilds == 1
+    # stable n_dead afterwards: merging resumes from the new baseline
+    col = np.concatenate([col, RNG.randint(0, 300, 11).astype(np.int64)])
+    assert_mirror_exact(ops, col, ("d", 1), 3, n_dead=4)
+    assert ops.sort_work.delta_merges == 1
+
+
+def test_mirror_compaction_threshold():
+    """After MIRROR_COMPACT_RUNS absorbed merges the next append
+    re-sorts (compaction) and resets the run count."""
+    ops = fresh_ops()
+    ops.MIRROR_COMPACT_RUNS = 3  # instance override keeps the test fast
+    col = RNG.randint(0, 500, 600).astype(np.int64)
+    for v in range(1, 7):
+        assert_mirror_exact(ops, col, ("c", 1), v)
+        col = np.concatenate([col, RNG.randint(0, 500, 13)
+                              .astype(np.int64)])
+    # v1 cold sort; v2-v4 merge; v5 compaction; v6 merge
+    assert ops.sort_work.compactions == 1
+    assert ops.sort_work.delta_merges == 4
+    ent = ops.cache.get_any(("runs", ("c", 1)))
+    assert ent is not None and ent.value.merges == 1
+
+
+def test_mirror_capacity_growth_reseeds():
+    """Appends that cross the power-of-two capacity re-upload and
+    re-sort (the buffer itself changed shape), then resume merging at
+    the new capacity."""
+    ops = fresh_ops()
+    col = RNG.randint(0, 100, 1000).astype(np.int64)  # cap 1024
+    assert_mirror_exact(ops, col, ("g", 1), 1)
+    col = np.concatenate([col, RNG.randint(0, 100, 200).astype(np.int64)])
+    assert_mirror_exact(ops, col, ("g", 1), 2)  # 1200 > 1024: full
+    merges_after_growth = ops.sort_work.delta_merges
+    col = np.concatenate([col, RNG.randint(0, 100, 50).astype(np.int64)])
+    assert_mirror_exact(ops, col, ("g", 1), 3)  # fits 2048: merge again
+    assert ops.sort_work.delta_merges == merges_after_growth + 1
+
+
+# ---------------------------------------------------------------------------
+# Residency invariants the merge path must not regress
+
+
+def test_merged_mirror_fixed_version_zero_transfers():
+    ops = fresh_ops()
+    col = RNG.randint(0, 1000, 1500).astype(np.int64)
+    ops.sort_perm(col, cache_key=("z", 1), version=1)
+    col = np.concatenate([col, RNG.randint(0, 1000, 40).astype(np.int64)])
+    s1, p1 = ops.sort_perm(col, cache_key=("z", 1), version=2)
+    assert ops.sort_work.delta_merges == 1
+    snap = ops.transfers.snapshot()
+    s2, p2 = ops.sort_perm(col, cache_key=("z", 1), version=2)
+    d = ops.transfers.delta(snap)
+    assert d.h2d_calls == 0 and d.d2h_calls == 0, d
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_merged_mirror_append_uploads_delta_bucket():
+    ops = fresh_ops()
+    col = RNG.randint(0, 1000, 4000).astype(np.int64)
+    ops.sort_perm(col, cache_key=("b", 1), version=1)
+    col = np.concatenate([col, RNG.randint(0, 1000, 48).astype(np.int64)])
+    snap = ops.transfers.snapshot()
+    ops.sort_perm(col, cache_key=("b", 1), version=2)
+    d = ops.transfers.delta(snap)
+    # h2d is the delta bucket; d2h is the two cap-sized host mirrors
+    assert 0 < d.h2d_bytes <= 64 * 8, d
+    assert ops.sort_work.delta_merges == 1
+
+
+def test_merged_mirror_feeds_batch_probe():
+    """batch_probe consumes the ("permdev", …) mirror the merge path
+    stashes — probes after an append must see the appended rows without
+    re-uploading the sorted column."""
+    ops = fresh_ops()
+    col = RNG.randint(0, 200, 1200).astype(np.int64)
+    ops.sort_perm(col, cache_key=("p", 1), version=1)
+    col = np.concatenate([col, RNG.randint(0, 200, 30).astype(np.int64)])
+    sk, _ = ops.sort_perm(col, cache_key=("p", 1), version=2)
+    probes = RNG.randint(0, 200, 64).astype(np.int64)
+    snap = ops.transfers.snapshot()
+    lo, hi = ops.batch_probe(sk, probes, cache_key=("p", 1), version=2)
+    d = ops.transfers.delta(snap)
+    # one upload — the (min-bucket padded) probe batch, never the
+    # sorted column
+    assert d.h2d_calls == 1 and d.h2d_bytes < sk.nbytes, d
+    np.testing.assert_array_equal(lo, np.searchsorted(sk, probes, "left"))
+    np.testing.assert_array_equal(hi, np.searchsorted(sk, probes, "right"))
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end: the store's index builds ride the merge path
+
+
+def test_engine_streaming_appends_use_merge_path():
+    from repro.core import EngineConfig, Fact, HiperfactEngine, Rule
+    from repro.core.conditions import AddAction, cond, term
+
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    e.add_rule(Rule("trans", (cond("T", "?x", "next", "?y"),
+                              cond("T", "?y", "next", "?z")),
+                    (AddAction("T", term("?x"), "next", term("?z")),)))
+    e.insert_facts([Fact("T", f"n{i}", "next", f"n{i+1}")
+                    for i in range(40)])
+    e.infer()
+    sw = e.ops.sort_work.snapshot()
+    assert sw.delta_merges > 0  # fixpoint rounds appended incrementally
+    # streaming appends: each batch merge-maintains, none re-sorts
+    for i in range(3):
+        e.insert_facts([Fact("T", f"m{i}", "next", f"n{i}")])
+        e.infer()
+    d = e.ops.sort_work.delta(sw)
+    assert d.delta_merges > 0
+    assert d.full_sorts == 0  # steady state: appends never re-sort
+    # the decoded fact set matches the host oracle exactly
+    host = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                        unique="SU", backend="numpy"))
+    host.add_rule(Rule("trans", (cond("T", "?x", "next", "?y"),
+                                 cond("T", "?y", "next", "?z")),
+                       (AddAction("T", term("?x"), "next", term("?z")),)))
+    host.insert_facts([Fact("T", f"n{i}", "next", f"n{i+1}")
+                       for i in range(40)])
+    host.infer()
+    for i in range(3):
+        host.insert_facts([Fact("T", f"m{i}", "next", f"n{i}")])
+        host.infer()
+    q = [cond("T", "?x", "next", "?y")]
+    assert ({tuple(sorted(r.items())) for r in e.query(q)} ==
+            {tuple(sorted(r.items())) for r in host.query(q)})
+
+
+def test_engine_delete_then_append_stays_exact():
+    """Tombstones route the next index build through the rebuild
+    fallback; lookups must stay exact afterwards."""
+    from repro.core import EngineConfig, Fact, HiperfactEngine
+    from repro.core.conditions import cond
+    from repro.core.store import Component
+
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    e.insert_facts([Fact("T", f"n{i}", "next", f"n{i+1}")
+                    for i in range(30)])
+    t = e.store.tables["T"]
+    t.delete_rows(np.asarray([3, 7]))
+    e.insert_facts([Fact("T", "x", "next", "y")])
+    rows, _ = e.store.lookup_many(
+        "T", Component.ID,
+        np.asarray([e.store.strings.intern("n5"),
+                    e.store.strings.intern("x")], np.int64))
+    ids = {int(t.ids[r]) for r in rows}
+    assert ids == {e.store.strings.intern("n5"),
+                   e.store.strings.intern("x")}
+    assert e.ops.sort_work.rebuilds >= 1

@@ -1,0 +1,95 @@
+"""Docs link check: every relative link/path reference in the repo's
+markdown must resolve.
+
+    python tools/check_links.py [root]
+
+Checked per markdown file:
+
+* inline links  `[text](target)` — external schemes (http/https/mailto)
+  are skipped, anchors are stripped, relative targets must exist on disk
+  relative to the file;
+* backtick path references like `docs/ARCHITECTURE.md`,
+  `src/repro/backend/jax_ops.py`, `examples/streaming_append.py`,
+  `tests/test_mirror_merge.py` — anything in backticks that looks like a
+  repo path (contains a ``/`` and one of the tracked suffixes) must
+  exist relative to the file or the repo root.  Dotted python
+  references (`module.attr`) are not paths and are ignored.
+
+Exit code 1 with a per-file report when anything dangles — wired into
+the CI tier-1 workflow next to the bench-schema check.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
+             ".claude", "out"}
+PATH_SUFFIXES = (".md", ".py", ".json", ".yml", ".yaml", ".txt", ".toml")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`\s]+)`")
+
+
+def md_files(root: Path) -> list[Path]:
+    out = []
+    for p in root.rglob("*.md"):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            out.append(p)
+    return sorted(out)
+
+
+def resolve(target: str, md: Path, root: Path) -> bool:
+    t = target.split("#", 1)[0]
+    if not t:
+        return True  # pure anchor
+    # repo convention: module paths are written relative to the python
+    # package root (`core/joins.py` == `src/repro/core/joins.py`)
+    cand = (md.parent / t, root / t, root / "src" / "repro" / t)
+    return any(c.exists() for c in cand)
+
+
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    text = FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+            continue
+        if not resolve(target, md, root):
+            errors.append(f"link target missing: ({target})")
+    for m in TICK_RE.finditer(text):
+        ref = m.group(1).rstrip(".,;:")
+        # a path-shaped backtick ref: has a separator and a known suffix
+        # (globs and wildcard refs like `BENCH_<pr>.json` are prose)
+        if ("/" not in ref or not ref.endswith(PATH_SUFFIXES)
+                or any(ch in ref for ch in "*<>{}")):
+            continue
+        if not resolve(ref, md, root):
+            errors.append(f"path reference missing: `{ref}`")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    failed = 0
+    checked = 0
+    for md in md_files(root):
+        errs = check_file(md, root)
+        checked += 1
+        if errs:
+            failed += 1
+            print(f"{md.relative_to(root)}:")
+            for e in errs:
+                print(f"  {e}")
+    print(f"checked {checked} markdown files, {failed} with dangling "
+          f"references")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,139 @@
+"""Schema validation for the repo's perf snapshots (``BENCH_<pr>.json``).
+
+    python tools/validate_bench.py BENCH_*.json [bench_smoke.json ...]
+
+``benchmarks/run.py --json`` snapshots the perf trajectory across PRs;
+this validator keeps the snapshot shape stable so cross-PR comparisons
+(and the CI artifact) cannot silently drift.  Checked without any
+third-party dependency:
+
+* top level: ``backend`` (known name), ``smoke``/``full`` bools,
+  ``wall_seconds`` number, ``sections`` dict;
+* ``sections.inference`` rows: dataset/engine labels + the timing
+  fields; device rows carry ``transfers`` (h2d/d2h calls+bytes) and,
+  since PR 5, ``sort_work`` with the ``sorted_bytes``/``merged_bytes``
+  split;
+* ``sections.streaming`` rows: per-mode scenario with per-round
+  ``infer_s``/``delta_passes``/``full_evals`` (+ transfer and
+  sort-byte counters on device backends) and the fact-set ``checksum``
+  the delta≡full parity compares;
+* ``sections.kernels`` rows: ``{"op", "value"}``.
+
+Unknown extra keys are allowed everywhere (snapshots may grow); missing
+required keys fail with a path-qualified message and exit code 1.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+KNOWN_BACKENDS = {"numpy", "jax", "jax-pallas", "jax-interpret"}
+NUM = (int, float)
+
+
+class Invalid(Exception):
+    pass
+
+
+def need(obj: dict, key: str, types, where: str):
+    if key not in obj:
+        raise Invalid(f"{where}: missing required key {key!r}")
+    if types is not None and not isinstance(obj[key], types):
+        raise Invalid(f"{where}.{key}: expected {types}, got "
+                      f"{type(obj[key]).__name__}")
+    return obj[key]
+
+
+def check_transfers(t: dict, where: str) -> None:
+    for k in ("h2d_calls", "h2d_bytes", "d2h_calls", "d2h_bytes"):
+        need(t, k, NUM, where)
+
+
+def check_sort_work(s: dict, where: str) -> None:
+    for k in ("full_sorts", "sorted_bytes", "delta_merges",
+              "merged_bytes"):
+        need(s, k, NUM, where)
+
+
+def check_inference(rows: list, where: str) -> None:
+    for i, r in enumerate(rows):
+        w = f"{where}[{i}]"
+        need(r, "dataset", str, w)
+        need(r, "engine", str, w)
+        for k in ("load_s", "infer_s", "query_s", "inferred"):
+            need(r, k, NUM, w)
+        if "transfers" in r:
+            check_transfers(r["transfers"], f"{w}.transfers")
+        if "sort_work" in r:
+            check_sort_work(r["sort_work"], f"{w}.sort_work")
+
+
+def check_streaming(rows: list, where: str) -> None:
+    for i, r in enumerate(rows):
+        w = f"{where}[{i}]"
+        need(r, "mode", str, w)
+        need(r, "initial_infer_s", NUM, w)
+        need(r, "reinfer_total_s", NUM, w)
+        need(r, "checksum", NUM, w)
+        need(r, "n_facts", NUM, w)
+        rounds = need(r, "rounds", list, w)
+        for j, rd in enumerate(rounds):
+            wr = f"{w}.rounds[{j}]"
+            for k in ("append_s", "infer_s", "inferred", "delta_passes",
+                      "full_evals"):
+                need(rd, k, NUM, wr)
+            # device rows carry transfer + sort-work counters in pairs
+            if "h2d_bytes" in rd:
+                need(rd, "d2h_bytes", NUM, wr)
+            if "merged_bytes" in rd:
+                need(rd, "sorted_bytes", NUM, wr)
+
+
+def check_kernels(rows: list, where: str) -> None:
+    for i, r in enumerate(rows):
+        w = f"{where}[{i}]"
+        need(r, "op", str, w)
+        need(r, "value", NUM, w)
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    backend = need(doc, "backend", str, path)
+    if backend not in KNOWN_BACKENDS:
+        raise Invalid(f"{path}.backend: unknown backend {backend!r}")
+    need(doc, "smoke", bool, path)
+    need(doc, "full", bool, path)
+    need(doc, "wall_seconds", NUM, path)
+    sections = need(doc, "sections", dict, path)
+    need(sections, "inference", list, f"{path}.sections")
+    check_inference(sections["inference"], f"{path}.sections.inference")
+    if "streaming" in sections:
+        check_streaming(sections["streaming"],
+                        f"{path}.sections.streaming")
+    if "kernels" in sections:
+        check_kernels(sections["kernels"], f"{path}.sections.kernels")
+
+
+def main() -> int:
+    paths = sys.argv[1:]
+    if not paths:
+        print("usage: python tools/validate_bench.py BENCH.json [...]")
+        return 2
+    bad = 0
+    for p in paths:
+        try:
+            validate(p)
+            print(f"{p}: OK")
+        except Invalid as e:
+            print(f"{p}: INVALID — {e}")
+            bad += 1
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{p}: UNREADABLE — {e}")
+            bad += 1
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
