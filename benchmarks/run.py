@@ -37,7 +37,19 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable snapshot "
                          "(BENCH_<pr>.json convention)")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="also bench the sharded fixpoint "
+                         "(EngineConfig(shards=N) vs shards=1); forces "
+                         "N host devices via XLA_FLAGS when no real "
+                         "device mesh is configured")
     args = ap.parse_args()
+
+    if args.shards > 1 and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        # must happen before the first jax import in this process
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.shards}").strip()
 
     t_start = time.perf_counter()
     report: dict = {"backend": args.backend, "smoke": args.smoke,
@@ -108,6 +120,30 @@ def main() -> None:
             "steady_reinfer_speedup": sps}
         print(f"delta-vs-full: bit_identical={ok},reinfer_speedup={sp:.1f}x,"
               f"steady={sps:.1f}x")
+
+    if args.shards > 1:
+        section(f"Sharded fixpoint: {args.shards}-way hash partition + "
+                f"frontier all-to-all")
+        sh = bench_inference.bench_sharded(
+            shards=args.shards, scale=2 if args.full else 1,
+            smoke=args.smoke)
+        report["sections"]["sharded"] = sh
+        for r in sh["runs"]:
+            extra = ""
+            if r["shards"] > 1:
+                a2a = ",".join(str(x["a2a_payload_bytes"])
+                               for x in r["append_rounds"])
+                extra = (f",device={r['exchange_device']},"
+                         f"critical_path={r['critical_path_s']:.4f}s,"
+                         f"max_shard_b={max(r['shard_bytes'])},"
+                         f"append_a2a_b=[{a2a}]")
+            print(f"shards={r['shards']},load={r['load_s']:.4f}s,"
+                  f"infer={r['infer_s']:.4f}s,facts={r['n_facts']},"
+                  f"checksum={r['checksum']}{extra}")
+        print(f"bit_identical={sh['bit_identical']},"
+              f"max_shard_fraction={sh['max_shard_fraction']:.3f},"
+              f"append_a2a_bytes={sh['append_a2a_bytes']},"
+              f"resident_payload_bytes={sh['resident_payload_bytes']}")
 
     if not args.smoke:
         section(f"Table 4 analog: query config matrix "

@@ -24,8 +24,16 @@ def main() -> None:
     from jax.sharding import Mesh
     from repro.core.distributed import ClosureConfig, DistributedClosure
 
-    mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4),
-                ("data", "model"))
+    devices = jax.devices()
+    if len(devices) < 8:
+        # a silent [:N] slice would build a degenerate mesh and skew
+        # every number printed below — fail with the fix instead
+        raise SystemExit(
+            f"need 8 devices for the 2x4 mesh, found {len(devices)}.\n"
+            f"XLA_FLAGS was already set in the environment, so this "
+            f"script did not force host devices; either unset it or "
+            f"add: --xla_force_host_platform_device_count=8")
+    mesh = Mesh(np.array(devices[:8]).reshape(2, 4), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     # random DAG-ish edge set

@@ -26,25 +26,35 @@ BACKENDS = ("numpy", "jax", "jax-pallas", "jax-interpret")
 _CACHE: dict[str, Ops] = {}
 
 
+def fresh_backend(name: str = "numpy") -> Ops:
+    """A new, uncached ``Ops`` instance.
+
+    Shard workers (``EngineConfig(shards=N)``) each get their own
+    instance so transfer/sort-work counters and the device-array cache
+    stay attributable per shard; the module-level jit caches are shared
+    regardless, so extra instances do not recompile kernels.
+    """
+    if name == "numpy":
+        return NumpyOps()
+    if name in ("jax", "jax-pallas", "jax-interpret"):
+        from repro.backend.jax_ops import JaxOps
+        mode = {"jax": "auto", "jax-pallas": "pallas",
+                "jax-interpret": "interpret"}[name]
+        # interpret mode uses small blocks: it exists to exercise the
+        # kernel code path on CPU, not to win benchmarks
+        kw = {"block": 256} if mode == "interpret" else {}
+        return JaxOps(mode=mode, **kw)
+    raise ValueError(
+        f"unknown backend {name!r}; expected one of {BACKENDS}")
+
+
 def get_backend(name: str = "numpy") -> Ops:
     ops = _CACHE.get(name)
     if ops is None:
-        if name == "numpy":
-            ops = NumpyOps()
-        elif name in ("jax", "jax-pallas", "jax-interpret"):
-            from repro.backend.jax_ops import JaxOps
-            mode = {"jax": "auto", "jax-pallas": "pallas",
-                    "jax-interpret": "interpret"}[name]
-            # interpret mode uses small blocks: it exists to exercise the
-            # kernel code path on CPU, not to win benchmarks
-            kw = {"block": 256} if mode == "interpret" else {}
-            ops = JaxOps(mode=mode, **kw)
-        else:
-            raise ValueError(
-                f"unknown backend {name!r}; expected one of {BACKENDS}")
-        _CACHE[name] = ops
+        ops = _CACHE[name] = fresh_backend(name)
     return ops
 
 
 __all__ = ["BACKENDS", "DeviceArrayCache", "DeviceCol", "NumpyOps", "Ops",
-           "TransferCounter", "get_backend", "is_handle", "splitmix64"]
+           "TransferCounter", "fresh_backend", "get_backend", "is_handle",
+           "splitmix64"]

@@ -97,8 +97,8 @@ class Ops(abc.ABC):
 
     # -- shared derived algorithms ---------------------------------------
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
-                  version: int | None = None, n_dead: int = 0
-                  ) -> tuple[np.ndarray, np.ndarray]:
+                  version: int | None = None, n_dead: int = 0,
+                  alive=None) -> tuple[np.ndarray, np.ndarray]:
         """(sorted keys, permutation) — the index-build form of the KV
         sort, **stable** (equal keys keep input order) on every backend.
         Default: carry an arange payload through ``sort_kv``; backends may
@@ -113,9 +113,23 @@ class Ops(abc.ABC):
         merge it into the resident sorted run (O(Δ log Δ) instead of
         O(N log N); see ``merge_runs``).  ``n_dead`` is the owning
         table's tombstone count: any movement since the resident run's
-        baseline forces a full rebuild instead of a merge.  Host
-        backends ignore all three hints."""
+        baseline forces a full rebuild instead of a merge.
+
+        ``alive`` (bool mask over the owning table's rows, or ``None``)
+        enables **tombstone compaction**: when given with ``n_dead >
+        0``, full sorts and rebuilds drop the dead rows — the returned
+        mirror covers only alive rows (perm values stay *original* row
+        ids, relative order preserved), so downstream consumers see the
+        same row sets they would after their own alive-filtering, and
+        dead rows stop paying sort cost.  Backends without mirror state
+        apply the filter directly."""
         keys = np.asarray(keys)
+        if alive is not None and n_dead:
+            rows = np.flatnonzero(np.asarray(alive[:len(keys)], bool))
+            sk, perm = self.sort_kv(
+                keys[rows].astype(np.int64, copy=False),
+                rows.astype(np.int64))
+            return sk, perm
         return self.sort_kv(keys.astype(np.int64, copy=False),
                             np.arange(len(keys), dtype=np.int64))
 

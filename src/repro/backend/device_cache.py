@@ -153,6 +153,14 @@ class MirrorRuns:
       accumulating past the baseline is re-sorted rather than merged
       around), on width overflow, and on any non-append change
       (capacity growth, shrink, rewrite).
+
+    ``n`` is the run's *lane* count; ``src_n`` is how many source rows
+    the run has consumed.  They coincide for a full mirror, but every
+    full-sort event on a tombstoned column **compacts**: the rebuilt
+    run holds only the alive rows (``n = src_n - n_dead``) with their
+    original row ids in the tag bits, so dead rows stop paying sort and
+    merge cost forever after.  Appends merge the tail ``[src_n,
+    table_n)`` into the compacted run.
     """
 
     tagged: Any
@@ -162,6 +170,11 @@ class MirrorRuns:
     tag_bits: int
     merges: int = 0
     n_dead: int = 0
+    src_n: int = -1  # -1 = uncompacted (src_n == n)
+
+    def __post_init__(self) -> None:
+        if self.src_n < 0:
+            self.src_n = self.n
 
 
 @dataclasses.dataclass

@@ -382,17 +382,25 @@ class JaxOps(Ops):
         return _jitted()["stable_sort_perm_xla"](buf, n)
 
     def _mirror_sort_device(self, cache_key, version: int, buf, n: int,
-                            kmin: int, kmax: int, n_dead: int):
-        """(sorted, perm) device arrays for a cached mirror, maintained
-        incrementally: when the resident ``MirrorRuns`` entry is an
-        append-only prefix of the column at an unchanged capacity, only
-        the tail is tagged-sorted (O(Δ log Δ)) and merged into the
-        resident run; otherwise — cold build, capacity growth, width
-        overflow, tombstone churn, shrink/rewrite, or the compaction
-        threshold — the full sort runs and (when taggable) seeds a fresh
-        run entry.  Caller holds the lock and the x64 scope."""
-        from repro.kernels.sortmerge.ops import (device_merge_sorted_mirror,
-                                                 fits_tagged_width,
+                            kmin: int, kmax: int, n_dead: int,
+                            keys64=None, alive=None):
+        """(sorted, perm, real length) device arrays for a cached
+        mirror, maintained incrementally: when the resident
+        ``MirrorRuns`` entry is an append-only prefix of the column at
+        an unchanged capacity, only the tail is tagged-sorted
+        (O(Δ log Δ)) and merged into the resident run; otherwise — cold
+        build, capacity growth, width overflow, tombstone churn,
+        shrink/rewrite, or the compaction threshold — the full sort
+        runs and (when taggable) seeds a fresh run entry.
+
+        Every full-sort event on a tombstoned column (``alive`` given,
+        ``n_dead > 0``) **compacts**: only the alive rows are sorted
+        (host-gathered, transient upload) and the seeded run maps its
+        tag bits back to original row ids, so the mirror — and every
+        merge after it — stops carrying dead rows.  Caller holds the
+        lock and the x64 scope."""
+        from repro.kernels.sortmerge.ops import (fits_tagged_width,
+                                                 merge_sorted_mirror_impl,
                                                  tag_bits_for,
                                                  tagged_from_sorted)
         cap = buf.shape[0]
@@ -405,40 +413,81 @@ class JaxOps(Ops):
                       runs.merges >= self.MIRROR_COMPACT_RUNS)
         if (runs is not None and fits and not compacting
                 and runs.cap == cap and runs.tag_bits == tb
-                and runs.n < n and runs.n_dead == n_dead
+                and runs.src_n < n and runs.n_dead == n_dead
                 and runs.kmin >= kmin):
-            d = n - runs.n
+            d = n - runs.src_n
             dcap = self._delta_bucket(d)
             if dcap <= cap:  # the slice window slides back if needed
-                sk, perm, merged = device_merge_sorted_mirror(
-                    buf, runs.tagged, runs.n, n, kmin, runs.kmin,
-                    dcap=dcap, tag_bits=tb, **self._sort_args())
+                sk, perm, merged = merge_sorted_mirror_impl(
+                    buf, runs.tagged, runs.n, runs.src_n, n, kmin,
+                    runs.kmin, dcap=dcap, tag_bits=tb,
+                    **self._sort_args())
                 self.cache.put(key, version, MirrorRuns(
-                    tagged=merged, n=n, kmin=kmin, cap=cap, tag_bits=tb,
-                    merges=runs.merges + 1, n_dead=n_dead),
-                    merged.nbytes)
+                    tagged=merged, n=runs.n + d, kmin=kmin, cap=cap,
+                    tag_bits=tb, merges=runs.merges + 1, n_dead=n_dead,
+                    src_n=n), merged.nbytes)
                 self.sort_work.count_merge(dcap * 8)
-                return sk, perm
-        sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
+                return sk, perm, runs.n + d
         rebuild = (runs is not None and not compacting and
                    (not fits or runs.n_dead != n_dead))
+        if alive is not None and n_dead > 0 and keys64 is not None:
+            # tombstone compaction: sort only the alive rows.  The
+            # compacted column is a transient upload (the resident
+            # column buffer stays as-is for future merge tail slices);
+            # perm maps back to original row ids through the gather.
+            rows = np.flatnonzero(np.asarray(alive[:n], bool))
+            m = len(rows)
+            if m == 0:
+                self.cache.invalidate(key)
+                self.sort_work.count_full(0, compaction=compacting,
+                                          rebuild=rebuild)
+                return None, None, 0
+            ckeys = keys64[rows]
+            ccap = self._bucket(m)
+            cbuf = self._to_dev(self._pad(ckeys, ccap, INT64_MAX))
+            sk, permc = self._stable_perm_device(
+                cbuf, m, int(ckeys.min()), int(ckeys.max()))
+            rows_dev = self._to_dev(self._pad(rows.astype(np.int64),
+                                              ccap, 0))
+            perm = _jitted()["gather"](rows_dev, permc)
+            self.sort_work.count_full(ccap * 8, compaction=compacting,
+                                      rebuild=rebuild)
+            if fits:  # seed a compacted run at the column buffer's cap
+                import jax.numpy as jnp
+                pad_n = cap - ccap
+                if pad_n > 0:
+                    sk_f = jnp.concatenate([
+                        sk, jnp.full(pad_n, INT64_MAX, jnp.int64)])
+                    pm_f = jnp.concatenate([
+                        perm, jnp.arange(ccap, cap, dtype=jnp.int64)])
+                else:
+                    sk_f, pm_f = sk, perm
+                tagged = tagged_from_sorted(sk_f, pm_f, m, kmin,
+                                            tag_bits=tb)
+                self.cache.put(key, version, MirrorRuns(
+                    tagged=tagged, n=m, kmin=kmin, cap=cap, tag_bits=tb,
+                    merges=0, n_dead=n_dead, src_n=n), tagged.nbytes)
+            else:
+                self.cache.invalidate(key)
+            return sk, perm, m
+        sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
         self.sort_work.count_full(cap * 8, compaction=compacting,
                                   rebuild=rebuild)
         if fits:
             tagged = tagged_from_sorted(sk, perm, n, kmin, tag_bits=tb)
             self.cache.put(key, version, MirrorRuns(
                 tagged=tagged, n=n, kmin=kmin, cap=cap, tag_bits=tb,
-                merges=0, n_dead=n_dead), tagged.nbytes)
+                merges=0, n_dead=n_dead, src_n=n), tagged.nbytes)
         else:
             # width overflow: the XLA-lexsort output has no tagged form
             # to merge into — appends keep re-sorting until the span
             # shrinks (it cannot) or the capacity bucket grows
             self.cache.invalidate(key)
-        return sk, perm
+        return sk, perm, n
 
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
-                  version: int | None = None, n_dead: int = 0
-                  ) -> tuple[np.ndarray, np.ndarray]:
+                  version: int | None = None, n_dead: int = 0,
+                  alive=None) -> tuple[np.ndarray, np.ndarray]:
         keys = np.asarray(keys)
         n = len(keys)
         if n == 0:
@@ -454,26 +503,49 @@ class JaxOps(Ops):
                 colv = self._resident_column(cache_key, version, keys64,
                                              INT64_MAX)
                 buf, kmin, kmax = colv["buf"], colv["kmin"], colv["kmax"]
-                sk, perm = self._mirror_sort_device(
-                    cache_key, version, buf, n, kmin, kmax, int(n_dead))
+                sk, perm, n_real = self._mirror_sort_device(
+                    cache_key, version, buf, n, kmin, kmax, int(n_dead),
+                    keys64=keys64, alive=alive)
+                if sk is None:  # fully tombstoned: empty mirror
+                    out = (np.empty(0, np.int64), np.empty(0, np.int64))
+                    self.cache.invalidate(("permdev", cache_key))
+                    self.cache.put(("perm", cache_key), version, out, 0)
+                    return out
+            elif alive is not None and n_dead:
+                # uncached + tombstoned: compact on the host, sort the
+                # alive rows, map the perm back to original row ids
+                rows = np.flatnonzero(np.asarray(alive[:n], bool))
+                if len(rows) == 0:
+                    return np.empty(0, np.int64), np.empty(0, np.int64)
+                kept = keys64[rows]
+                buf = self._to_dev(
+                    self._pad(kept, self._bucket(len(rows)), INT64_MAX))
+                sk, perm = self._stable_perm_device(
+                    buf, len(rows), int(kept.min()), int(kept.max()))
+                self.sort_work.count_full(buf.shape[0] * 8)
+                n_real = len(rows)
+                perm_h = self._to_host(perm)[:n_real].astype(np.int64)
+                return (np.ascontiguousarray(self._to_host(sk)[:n_real]),
+                        rows[perm_h])
             else:
                 kmin, kmax = int(keys64.min()), int(keys64.max())
                 buf = self._to_dev(
                     self._pad(keys64, self._bucket(n), INT64_MAX))
                 sk, perm = self._stable_perm_device(buf, n, kmin, kmax)
                 self.sort_work.count_full(buf.shape[0] * 8)
+                n_real = n
             if use_cache:
                 # stash the device-side sorted mirror too: batched
                 # rank-1 probes (`batch_probe`) search it without ever
                 # re-uploading the sorted column (the permutation is
                 # consumed host-side only, so it is not pinned)
                 self.cache.put(("permdev", cache_key), version,
-                               {"sk": sk, "perm": None, "n": n},
+                               {"sk": sk, "perm": None, "n": n_real},
                                sk.nbytes)
             # copy the slices: a view would pin the whole cap-sized base
             # array while the cache accounts only the sliced bytes
-            out = (np.ascontiguousarray(self._to_host(sk)[:n]),
-                   np.ascontiguousarray(self._to_host(perm)[:n]))
+            out = (np.ascontiguousarray(self._to_host(sk)[:n_real]),
+                   np.ascontiguousarray(self._to_host(perm)[:n_real]))
         if use_cache:
             # hits hand out these exact arrays (aliased into engine index
             # state): freeze them so an in-place write fails loudly

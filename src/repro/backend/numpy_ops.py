@@ -23,12 +23,19 @@ class NumpyOps(Ops):
         return keys[order], vals[order]
 
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
-                  version: int | None = None, n_dead: int = 0
-                  ) -> tuple[np.ndarray, np.ndarray]:
+                  version: int | None = None, n_dead: int = 0,
+                  alive=None) -> tuple[np.ndarray, np.ndarray]:
         # native-dtype fast path: no int64 casts, no arange payload.
-        # cache_key/version/n_dead are device-residency hints (mirror
-        # caching + merge maintenance) — meaningless here.
+        # cache_key/version are device-residency hints (mirror caching +
+        # merge maintenance) — meaningless here.  The alive mask is not:
+        # tombstone compaction filters dead rows out of the mirror (perm
+        # keeps original row ids, stable order preserved).
         keys = np.asarray(keys)
+        if alive is not None and n_dead:
+            rows = np.flatnonzero(np.asarray(alive[:len(keys)], bool))
+            kept = keys[rows]
+            order = np.argsort(kept, kind="stable")
+            return kept[order], rows[order]
         order = np.argsort(keys, kind="stable")
         return keys[order], order
 

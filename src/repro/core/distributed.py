@@ -51,6 +51,14 @@ def _mix64(z: jnp.ndarray) -> jnp.ndarray:
     return (z ^ (z >> jnp.uint64(31))).astype(jnp.int64)
 
 
+def _owner(keys: jnp.ndarray, n_dev: int) -> jnp.ndarray:
+    """Owner shard per key — device twin of ``core.sharded.shard_of``.
+    The modulo runs in uint64 so signed lanes agree with the host twin
+    for any device count, not just powers of two."""
+    h = _mix64(keys.astype(jnp.int64)).astype(jnp.uint64)
+    return (h % jnp.uint64(n_dev)).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # In-shard primitives (static shapes, sentinel padded)
 
@@ -196,7 +204,7 @@ def closure_step(state: dict, cfg: ClosureConfig, axis_names: Sequence[str],
 
     # 1. route Δ to the owner of its join key y
     _, y = unpack_pair(delta)
-    dest = (_mix64(y.astype(jnp.int64)) % n_dev).astype(jnp.int32)
+    dest = _owner(y, n_dev)
     valid = delta != SENTINEL
     buf, ovf1 = bucket_scatter(dest, delta, n_dev, cfg.slot_cap, valid)
     dj = _exchange(buf, axis_names, n_dev, cfg.slot_cap)
@@ -216,7 +224,7 @@ def closure_step(state: dict, cfg: ClosureConfig, axis_names: Sequence[str],
 
     # 3. route new pairs to owner hash(x)
     nx, _ = unpack_pair(new_pairs)
-    dest2 = (_mix64(nx.astype(jnp.int64)) % n_dev).astype(jnp.int32)
+    dest2 = _owner(nx, n_dev)
     buf2, ovf3 = bucket_scatter(dest2, new_pairs, n_dev, cfg.slot_cap,
                                 new_pairs != SENTINEL)
     arrived = _exchange(buf2, axis_names, n_dev, cfg.slot_cap)
@@ -263,11 +271,19 @@ class DistributedClosure:
     # -- state construction --------------------------------------------------
     def init_state(self, src: np.ndarray, dst: np.ndarray) -> dict:
         """Partition concrete edges: E shards by hash(src) (join side),
-        closure/Δ shards by hash(x)."""
+        closure/Δ shards by hash(x).
+
+        Ownership uses the same ``shard_of`` as the engine's sharded mode
+        (``core/sharded.py``), which is the host twin of the device
+        ``_mix64`` used inside ``closure_step`` — the toy and the engine
+        agree on which shard owns a key by construction.
+        """
+        from repro.core.sharded import shard_of
+
         cfg, D = self.cfg, self.n_dev
         packed = np.asarray(
             (src.astype(np.int64) << 32) | (dst.astype(np.int64) & 0xFFFFFFFF))
-        h = np.asarray(_mix64(jnp.asarray(src, jnp.int64)) % D)
+        h = shard_of(src.astype(np.int64), D)
 
         def shard_by(keys: np.ndarray, owners: np.ndarray, cap: int) -> np.ndarray:
             out = np.full((D, cap), np.iinfo(np.int64).max, np.int64)

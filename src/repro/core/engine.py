@@ -62,6 +62,19 @@ class EngineConfig:
       rule per round and reverts to full where semi-naive cannot win.
     * ``query_cache`` / ``lazy`` — the paper §5 rank-N result cache and
       Defs. 10/11 active-rule pruning.
+    * ``shards`` — N > 1 hash-partitions every fact table by the rank-1
+      key across N shard workers (one per device when the backend is a
+      jax tier) and runs the semi-naive fixpoint per shard with an
+      all-to-all frontier exchange between rounds; ``"auto"`` uses
+      ``jax.device_count()`` on device backends and 1 on numpy.
+      Constructing ``HiperfactEngine(config)`` with shards > 1 returns a
+      ``core.sharded.ShardedEngine``; ``shards=1`` is byte-for-byte the
+      unsharded engine.
+    * ``result_cache`` — repeat-query fast path: decoded results of
+      ``query()`` are memoized per (conditions, input-table versions)
+      and re-served without re-entering evaluation.  Disabled when
+      ``query_cache`` is on (the rank-N cache memoizes inside
+      evaluation and must see every query to earn its hits).
     """
 
     index_backend: str = "AI"     # AI | HI | LPIM | LPID
@@ -79,6 +92,8 @@ class EngineConfig:
     lazy: bool = False            # Defs. 10/11 active-rule pruning
     max_iterations: int = 1000
     max_workers: int = 8
+    shards: int | str = 1         # 1 | N | "auto" — hash-partitioned engine
+    result_cache: bool = True     # repeat-query (version-keyed) fast path
 
     @staticmethod
     def infer1(backend: str = "numpy") -> "EngineConfig":
@@ -128,6 +143,10 @@ class InferStats:
     delta_passes: int = 0
     full_evals: int = 0
     rounds: list = dataclasses.field(default_factory=list)
+    # repeat-query fast path (EngineConfig.result_cache): queries served
+    # straight from the decoded-result cache vs evaluated
+    query_cache_hits: int = 0
+    query_cache_misses: int = 0
 
 
 def _pack_keys(ids: np.ndarray, attrs: np.ndarray) -> np.ndarray:
@@ -188,7 +207,33 @@ def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
     return exists
 
 
+def _resolve_shards(config: EngineConfig) -> int:
+    """Resolve ``EngineConfig.shards`` to a concrete worker count."""
+    s = config.shards
+    if s is None or s == 1:
+        return 1
+    if s == "auto":
+        if config.backend == "numpy":
+            return 1
+        import jax
+        return max(1, jax.device_count())
+    n = int(s)
+    if n < 1:
+        raise ValueError(f"shards must be >= 1 or 'auto', got {s!r}")
+    return n
+
+
 class HiperfactEngine:
+    def __new__(cls, config: EngineConfig | None = None, *args, **kwargs):
+        # shards > 1 transparently constructs the hash-partitioned
+        # engine; subclasses (ShardedEngine, its workers) skip the
+        # dispatch so their own __init__ chains stay ordinary
+        if (cls is HiperfactEngine and config is not None
+                and _resolve_shards(config) > 1):
+            from repro.core.sharded import ShardedEngine
+            return super().__new__(ShardedEngine)
+        return super().__new__(cls)
+
     def __init__(self, config: EngineConfig | None = None) -> None:
         self.config = config or EngineConfig()
         if self.config.eval_mode not in ("full", "delta", "auto"):
@@ -208,9 +253,15 @@ class HiperfactEngine:
         self._pk_memo = _PackedKeyMemo()
         self.load_seconds = 0.0
         self.last_infer: InferStats = InferStats()
-        from repro.core.querycache import RankNCache
+        from repro.core.querycache import QueryResultCache, RankNCache
         self.query_cache = (RankNCache() if self.config.query_cache
                             else None)
+        # the rank-N cache memoizes *inside* evaluation; when the user
+        # opted into it, let it see every query instead of serving
+        # repeats from the decoded-result layer above it
+        self._result_cache = (QueryResultCache()
+                              if self.config.result_cache
+                              and not self.config.query_cache else None)
         # handle-tier join core: on device backends the island chain and
         # the write-side dedup run on DeviceCol handles end to end
         self._pipeline = (
@@ -219,7 +270,37 @@ class HiperfactEngine:
             else self.config.device_pipeline == "on")
 
     # ------------------------------------------------------------------ API
+    def _intern_rule_constants(self, rule: Rule) -> None:
+        """Pre-intern every string constant a rule can touch.
+
+        Evaluation and actions intern lazily, so without this the id a
+        constant gets depends on evaluation order — across PF pool
+        threads and across shard workers that would make encoded lanes
+        (and decoded-fact checksums) order-dependent.  Interning at
+        ``add_rule`` pins the assignment to rule-registration order.
+        """
+        strings = self.store.strings
+        for c in rule.conditions:
+            for slot in (c.id, c.attr):
+                if slot is not None and not is_var(slot):
+                    strings.intern(slot)
+            if c.val is not None and not is_var(c.val):
+                encode_value(c.val, c.valtype, strings)
+            for t in c.tests:
+                if t.is_const() and isinstance(t.const, str):
+                    strings.intern(t.const)
+        for a in rule.actions:
+            if isinstance(a, ExternalAction):
+                continue
+            for slot in (a.id, a.attr):
+                if slot is not None and not is_var(slot):
+                    strings.intern(slot)
+            if (a.val is not None and not is_var(a.val)
+                    and getattr(a, "compute", None) is None):
+                encode_value(a.val, a.valtype, strings)
+
     def add_rule(self, rule: Rule) -> None:
+        self._intern_rule_constants(rule)
         self.rules.append(rule)
         self._trees = None  # derivation trees are rebuilt on rule changes
         self._rule_seen_versions.clear()
@@ -640,17 +721,47 @@ class HiperfactEngine:
         return stats
 
     # --------------------------------------------------------------- query
+    def _query_version_token(self, types) -> tuple:
+        """Hashable snapshot of the query's input-table versions — the
+        repeat-query cache key invalidator (version covers appends,
+        data_version covers tombstones)."""
+        out = []
+        for t in sorted(types):
+            tab = self.store.tables.get(t)
+            out.append((t,) + ((tab.version, tab.data_version)
+                               if tab is not None else (-1, -1)))
+        return tuple(out)
+
     def query(self, conditions: list[Condition], decode: bool = True):
-        """Evaluate an ad-hoc query (a rule with no actions, Def. 10)."""
+        """Evaluate an ad-hoc query (a rule with no actions, Def. 10).
+
+        A query re-issued at unchanged input-table versions is served
+        from the decoded-result cache without re-entering evaluation
+        (``EngineConfig.result_cache``; hits/misses are counted in
+        ``last_infer``).
+        """
         rule = Rule("<adhoc>", tuple(conditions))
         cfg = self.config
+        key = None
+        if decode and self._result_cache is not None:
+            key = self._result_cache.key(
+                conditions, self._query_version_token(rule.input_types()))
+            if key is not None:
+                hit = self._result_cache.lookup(key)
+                if hit is not None:
+                    self.last_infer.query_cache_hits += 1
+                    return [dict(r) for r in hit]
+                self.last_infer.query_cache_misses += 1
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
             layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
             rl_fn=self._rl_fn(), ops=self.ops, pipeline=self._pipeline)
         if not decode:
             return bindings
-        return decode_bindings(self.store, conditions, bindings)
+        rows = decode_bindings(self.store, conditions, bindings)
+        if key is not None:
+            self._result_cache.put(key, [dict(r) for r in rows])
+        return rows
 
 
 def var_valtypes(conditions: list[Condition]) -> dict[str, ValueType | None]:

@@ -62,3 +62,57 @@ class RankNCache:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._data),
                 "hit_rate": self.hits / total if total else 0.0}
+
+
+class QueryResultCache:
+    """Repeat-query fast path: decoded ``engine.query()`` results keyed
+    by (conditions, input-table version token).
+
+    Where ``RankNCache`` memoizes per-*condition* row sets inside
+    evaluation, this memoizes the finished decoded result of a whole
+    query: a query re-issued at unchanged ``(version, data_version)``
+    for every input table never re-enters evaluation at all.  The
+    version token is computed by the engine (plain per-table for the
+    unsharded engine, per-worker for ``shards=N``), so one cache class
+    serves both.  Entries hold decoded dict-rows; callers copy rows on
+    the way in and out, so mutating a returned row cannot poison the
+    cache.  Eviction is bounded LRU, invalidation exact via the token.
+    """
+
+    def __init__(self, max_entries: int = 1024):
+        self.max_entries = max_entries
+        self._data: OrderedDict[tuple, list] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(conditions, version_token: tuple) -> tuple | None:
+        """Cache key, or ``None`` when the conditions are unhashable
+        (e.g. a test carrying a callable const) — such queries are
+        simply not cached."""
+        k = (tuple(conditions), version_token)
+        try:
+            hash(k)
+        except TypeError:
+            return None
+        return k
+
+    def lookup(self, key: tuple) -> list | None:
+        hit = self._data.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._data.move_to_end(key)
+        return hit
+
+    def put(self, key: tuple, rows: list) -> None:
+        self._data[key] = rows
+        if len(self._data) > self.max_entries:
+            self._data.popitem(last=False)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._data),
+                "hit_rate": self.hits / total if total else 0.0}

@@ -1,0 +1,623 @@
+"""Sharded multi-device semi-naive fixpoint (``EngineConfig(shards=N)``).
+
+The paper's derivation trees exist to give parallel read/write access to
+the fact store: each writer owns a memory range (§2.4).  The device-mesh
+generalization implemented here: each of N shard workers owns the facts
+whose rank-1 key (the ``<id>`` component) hashes to its index.  Every
+worker is a complete ``HiperfactEngine`` (same island executor, same
+semi-naive delta fixpoint, same kernels) over its partition; the global
+fixpoint alternates local fixpoints with an all-to-all *frontier
+exchange* that moves only the derived rows whose keys land on a foreign
+shard (``distributed.pipeline.FrontierExchange`` — ``bucket_scatter`` +
+``lax.all_to_all`` on three packed int64 lanes, or a host permute when
+the process has fewer devices than shards).
+
+Partitioned joins.  Conditions that share an ``<id>`` variable (an
+*island*, §2.3) are co-located for free: all rows of one id hash to one
+shard.  Cross-island joins are localized by rewriting each rule against
+*view tables* — system-maintained copies of a base table re-partitioned
+by a different component:
+
+* the **home island** H (highest locality score) keeps its conditions on
+  the owner partition;
+* in every other island, one condition that binds H's id variable at
+  component ``comp`` becomes a **hashed view** (rows of its table living
+  at ``hash(row[comp])`` — for transitive closure this is exactly the
+  delta re-partitioning of ``core.distributed.closure_step``);
+* remaining conditions become **replicated views** (full copy on every
+  shard).  Replication cannot double derivations: every binding is
+  anchored through the home island's owner rows, which exist on exactly
+  one shard.  Rules with no variable-keyed island run on shard 0 only.
+
+View tables are fed eagerly: whenever a row of a base table is inserted
+(loaded or derived), copies for every registered view ride the same
+exchange round as the owner copy, so no multi-hop forwarding rounds are
+needed — duplicates die in the destination table's write-side dedup.
+Traffic per round is O(Δ) — proportional to the round's derived rows,
+never to table size.
+
+``shards=1`` never constructs this class (``HiperfactEngine.__new__``
+dispatches only for N > 1), so the single-shard path is bit-identical
+to the unsharded engine; ``tests/test_sharded.py`` +
+``tests/test_distributed.py`` assert decoded-fact checksum parity of
+``shards=1`` vs ``shards=8``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import zlib
+
+import numpy as np
+
+from repro.backend import fresh_backend, is_handle, splitmix64
+from repro.core.conditions import Condition, Rule, is_var
+from repro.core.engine import (EngineConfig, HiperfactEngine, InferStats,
+                               _resolve_shards, decode_bindings)
+from repro.core.facts import ValueType, decode_value
+from repro.core.islands import evaluate_rule
+from repro.core.store import Component, FactStore
+
+VIEW_PREFIX = "__shard_view:"
+_ADD, _DEL = 0, 1
+
+
+def view_name(ftype: str, comp: "Component | None") -> str:
+    """Name of the view of ``ftype`` re-partitioned by ``comp`` (``None``
+    = replicated).  Views are shared across rules: two rules needing the
+    same (table, component) re-partition feed one table."""
+    tag = "rep" if comp is None else str(int(comp))
+    return f"{VIEW_PREFIX}{ftype}:{tag}"
+
+
+def shard_of(lanes: np.ndarray, n_shards: int) -> np.ndarray:
+    """Owner shard per int64 lane — host twin of the device ``_mix64``
+    route in ``core.distributed`` (same splitmix64 constants)."""
+    h = splitmix64(np.asarray(lanes).astype(np.int64))
+    return (h % np.uint64(n_shards)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Rule analysis: home island + view rewrite
+
+
+def _island_groups(rule: Rule) -> dict:
+    """Conditions grouped by island key: the ``<id>`` variable name, or a
+    per-condition const marker (const-id conditions are their own
+    islands, cf. ``islands.build_islands``)."""
+    groups: dict[object, list[int]] = {}
+    for i, c in enumerate(rule.conditions):
+        key = c.id.name if is_var(c.id) else ("#const", i)
+        groups.setdefault(key, []).append(i)
+    return groups
+
+
+def _binding_comp(c: Condition, var: str) -> "Component | None":
+    """First non-ID component of ``c`` binding ``var`` (a home id variable
+    can only reappear at ATTR/VAL — at ID it would be the same island)."""
+    for comp, t in c.slots().items():
+        if comp != Component.ID and is_var(t) and t.name == var:
+            return comp
+    return None
+
+
+def _pick_home(rule: Rule) -> tuple[str, list[int]] | None:
+    """Choose the home island: the id variable whose partition localizes
+    the most foreign rows (conditions elsewhere binding it become hashed
+    views; everything else must replicate)."""
+    groups = _island_groups(rule)
+    best, best_score = None, None
+    for key, idxs in groups.items():
+        if not isinstance(key, str):
+            continue
+        score = 0.01 * len(idxs)  # tie-break: keep big islands local
+        for i, c in enumerate(rule.conditions):
+            if i in idxs:
+                continue
+            comp = _binding_comp(c, key)
+            if comp is None:
+                score -= 1.0 if c.rank() < 2 else 0.25
+            elif comp == Component.ATTR:
+                score += 0.5  # attr domains are small: poor balance
+            else:
+                score += 2.0
+        if best_score is None or score > best_score:
+            best, best_score = (key, idxs), score
+    return best
+
+
+def _rewrite_rule(rule: Rule, home: tuple[str, list[int]] | None
+                  ) -> tuple[Rule, list[tuple[str, "Component | None"]]]:
+    """Rewrite non-home conditions onto view tables.
+
+    Returns the rewritten rule plus the (base table, component) views it
+    needs.  Per non-home island at most ONE condition becomes a hashed
+    view (two hashed conditions of one island could land rows of the
+    same island id on different shards and miss their intra-island
+    join); the rest replicate.
+    """
+    groups = _island_groups(rule)
+    home_key, home_idxs = home if home is not None else (None, [])
+    new_conds = list(rule.conditions)
+    views: list[tuple[str, Component | None]] = []
+    for key, idxs in groups.items():
+        if home_key is not None and key == home_key:
+            continue
+        anchor = None  # (cond idx, comp) — prefer VAL/ID-width keys
+        if home_key is not None:
+            for i in idxs:
+                comp = _binding_comp(rule.conditions[i], home_key)
+                if comp is None:
+                    continue
+                if anchor is None or (comp != Component.ATTR
+                                      and anchor[1] == Component.ATTR):
+                    anchor = (i, comp)
+        for i in idxs:
+            c = rule.conditions[i]
+            comp = anchor[1] if anchor is not None and i == anchor[0] else None
+            views.append((c.fact_type, comp))
+            new_conds[i] = dataclasses.replace(
+                c, fact_type=view_name(c.fact_type, comp))
+    if not views:
+        return rule, []
+    return (Rule(rule.name, tuple(new_conds), rule.actions, rule.priority),
+            views)
+
+
+# ---------------------------------------------------------------------------
+# Shard worker
+
+
+class _ShardWorker(HiperfactEngine):
+    """One shard: a full engine over the owner partition + its views.
+
+    Non-view writes and deletes are routed through the parent — local
+    owner rows (and local view copies) apply immediately so the local
+    fixpoint keeps running; foreign-owned rows land in the parent's
+    outbox for the next frontier exchange.  Arrivals are applied by the
+    parent via the *unbound* base-class methods, bypassing this router.
+    """
+
+    def __init__(self, config: EngineConfig, shard: int, n_shards: int,
+                 parent: "ShardedEngine") -> None:
+        super().__init__(config)
+        self.shard = shard
+        self.n_shards = n_shards
+        self.parent = parent
+        # per-shard counters + device-array cache: a fresh Ops instance
+        # (get_backend shares one per process; jit caches stay shared)
+        self.ops = fresh_backend(config.backend)
+        self.store = FactStore(config.index_backend, ops=self.ops)
+        self.store.strings = parent.store.strings  # ONE dictionary
+        self._result_cache = None  # the parent caches query results
+
+    def _insert_columns(self, ftype, ids, attrs, vals, valtypes) -> int:
+        ids, attrs, vals = (x.host() if is_handle(x) else x
+                            for x in (ids, attrs, vals))
+        ids = np.asarray(ids, np.int32)
+        attrs = np.asarray(attrs, np.int32)
+        vals = np.asarray(vals, np.int64)
+        valtypes = np.asarray(valtypes, np.int8)
+        if len(ids) == 0:
+            return 0
+        return self.parent._route_add(ftype, ids, attrs, vals, valtypes,
+                                      src=self.shard)
+
+    def _delete_matching(self, ftype, ids, attrs, vals) -> int:
+        ids = np.asarray(ids, np.int32)
+        attrs = np.asarray(attrs, np.int32)
+        vals = np.asarray(vals, np.int64)
+        if len(ids) == 0:
+            return 0
+        return self.parent._route_del(ftype, ids, attrs, vals,
+                                      src=self.shard)
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine
+
+
+class ShardedEngine(HiperfactEngine):
+    """Hash-partitioned engine over N shard workers + frontier exchange.
+
+    Constructed automatically by ``HiperfactEngine(config)`` whenever
+    ``config.shards`` resolves to N > 1.  The public API is unchanged;
+    ``self.store`` holds only the shared string dictionary (fact rows
+    live in ``self.workers[*].store``).
+    """
+
+    def __init__(self, config: EngineConfig | None = None) -> None:
+        config = config or EngineConfig()
+        super().__init__(dataclasses.replace(config, shards=1))
+        self.config = config
+        self.n_shards = _resolve_shards(config)
+        wcfg = dataclasses.replace(config, shards=1)
+        self.workers = [_ShardWorker(wcfg, s, self.n_shards, self)
+                        for s in range(self.n_shards)]
+        # ftype -> registered view components (None = replicated)
+        self._views: dict[str, set] = {}
+        self._table_ids: dict[str, int] = {}
+        self._table_names: list[str] = []
+        self._outbox: list[list] = [[] for _ in range(self.n_shards)]
+        self._lock = threading.Lock()
+        from repro.distributed.pipeline import FrontierExchange
+        self.exchange = FrontierExchange(
+            self.n_shards, prefer_device=config.backend != "numpy")
+        self.exchange_log: list[dict] = []
+        self._gather_memo: tuple | None = None
+
+    # ------------------------------------------------------------------ API
+    def add_rule(self, rule: Rule) -> None:
+        self._intern_rule_constants(rule)
+        self.rules.append(rule)  # originals, for introspection
+        home = _pick_home(rule)
+        wrule, views = _rewrite_rule(rule, home)
+        self._register_views(views)
+        if home is None:
+            # no variable-keyed island: every condition replicated, so
+            # one shard must own the (constant-anchored) derivation
+            self.workers[0].add_rule(wrule)
+        else:
+            for w in self.workers:
+                w.add_rule(wrule)
+
+    def infer(self) -> InferStats:
+        """Global fixpoint: local fixpoints + frontier exchanges until no
+        shard derives anything that changes any other shard."""
+        t0 = time.perf_counter()
+        agg = InferStats()
+        rounds = 0
+        while rounds < self.config.max_iterations:
+            rounds += 1
+            worker_secs = []
+            for w in self.workers:
+                st = w.infer()
+                worker_secs.append(st.seconds)
+                agg.rules_evaluated += st.rules_evaluated
+                agg.rules_skipped_inactive += st.rules_skipped_inactive
+                agg.rules_skipped_unchanged += st.rules_skipped_unchanged
+                agg.facts_inferred += st.facts_inferred
+                agg.facts_deleted += st.facts_deleted
+                agg.rows_considered += st.rows_considered
+                agg.rows_emitted += st.rows_emitted
+                agg.delta_passes += st.delta_passes
+                agg.full_evals += st.full_evals
+            fresh, changed, log = self._flush_outbox("infer")
+            agg.facts_inferred += log["owner_fresh"]
+            agg.facts_deleted += log["owner_deleted"]
+            agg.rounds.append({
+                "round": rounds,
+                "worker_seconds": worker_secs,
+                "critical_path_s": max(worker_secs) if worker_secs else 0.0,
+                "a2a_rows": log["rows"],
+                "a2a_payload_bytes": log["payload_bytes"],
+                "a2a_padded_bytes": log["padded_bytes"],
+                "applied_fresh": changed,
+            })
+            if changed == 0:
+                break
+        agg.iterations = rounds
+        agg.seconds = time.perf_counter() - t0
+        self.last_infer = agg
+        return agg
+
+    def query(self, conditions: list[Condition], decode: bool = True):
+        rule = Rule("<adhoc>", tuple(conditions))
+        key = None
+        if decode and self._result_cache is not None:
+            key = self._result_cache.key(
+                conditions, self._query_version_token(rule.input_types()))
+            hit = self._result_cache.lookup(key) if key is not None else None
+            if hit is not None:
+                self.last_infer.query_cache_hits += 1
+                return [dict(r) for r in hit]
+            if key is not None:
+                self.last_infer.query_cache_misses += 1
+        groups = _island_groups(rule)
+        single_var_island = (len(groups) == 1 and
+                             all(isinstance(k, str) for k in groups))
+        if decode and single_var_island:
+            # one island == one id variable: each id's rows live on one
+            # shard, so per-shard results are disjoint — a plain union
+            rows = []
+            for w in self.workers:
+                rows.extend(HiperfactEngine.query(w, conditions, decode=True))
+        else:
+            cfg = self.config
+            gst = self._gathered_store(sorted(rule.input_types()))
+            bindings = evaluate_rule(
+                gst, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
+                layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
+                ops=self.ops, pipeline=False)
+            if not decode:
+                return bindings
+            rows = decode_bindings(gst, conditions, bindings)
+        if key is not None:
+            self._result_cache.put(key, [dict(r) for r in rows])
+        return rows
+
+    def num_facts(self) -> int:
+        """Alive owner-table facts across all shards (views excluded)."""
+        return sum(int(t.alive.sum())
+                   for w in self.workers
+                   for name, t in w.store.tables.items()
+                   if not name.startswith(VIEW_PREFIX))
+
+    def resident_facts(self) -> int:
+        """Total resident rows incl. view copies — the capacity metric
+        that scales with shard count."""
+        return sum(t.n for w in self.workers
+                   for t in w.store.tables.values())
+
+    def shard_bytes(self) -> list[int]:
+        return [w.store.memory_bytes() for w in self.workers]
+
+    def _query_version_token(self, types) -> tuple:
+        out = []
+        for t in sorted(types):
+            for w in self.workers:
+                tab = w.store.tables.get(t)
+                out.append((t, w.shard) + ((tab.version, tab.data_version)
+                                           if tab is not None else (-1, -1)))
+        return tuple(out)
+
+    # ---------------------------------------------------------------- write
+    def _insert_columns(self, ftype, ids, attrs, vals, valtypes) -> int:
+        ids, attrs, vals = (x.host() if is_handle(x) else x
+                            for x in (ids, attrs, vals))
+        ids = np.asarray(ids, np.int32)
+        attrs = np.asarray(attrs, np.int32)
+        vals = np.asarray(vals, np.int64)
+        valtypes = np.asarray(valtypes, np.int8)
+        if len(ids) == 0:
+            return 0
+        self._route_add(ftype, ids, attrs, vals, valtypes, src=None)
+        fresh, _changed, _log = self._flush_outbox("load")
+        if fresh:
+            self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
+        return fresh
+
+    def _delete_matching(self, ftype, ids, attrs, vals) -> int:
+        ids = np.asarray(ids, np.int32)
+        attrs = np.asarray(attrs, np.int32)
+        vals = np.asarray(vals, np.int64)
+        if len(ids) == 0:
+            return 0
+        self._route_del(ftype, ids, attrs, vals, src=None)
+        _fresh, _changed, log = self._flush_outbox("delete")
+        return log["owner_deleted"]
+
+    # --------------------------------------------------------------- router
+    def _targets(self, ftype, ids, attrs, vals):
+        """(table name, owner shard per row | None=broadcast) for the
+        owner copy + every registered view of ``ftype``."""
+        D = self.n_shards
+        targets = [(ftype, shard_of(ids, D))]
+        for comp in self._views.get(ftype, ()):
+            if comp is None:
+                targets.append((view_name(ftype, None), None))
+            else:
+                col = (ids, attrs, vals)[int(comp)]
+                targets.append((view_name(ftype, comp), shard_of(col, D)))
+        return targets
+
+    def _route_add(self, ftype, ids, attrs, vals, valtypes, src) -> int:
+        """Partition an insert batch into owner + view copies.  Rows for
+        shard ``src`` (the caller) apply immediately so its local
+        fixpoint continues; the rest go to the outbox.  Returns the
+        locally inserted fresh owner-row count."""
+        wrote = 0
+        for tname, owner in self._targets(ftype, ids, attrs, vals):
+            for d in range(self.n_shards):
+                if owner is None:
+                    part = (ids, attrs, vals, valtypes)
+                else:
+                    m = owner == d
+                    if not m.any():
+                        continue
+                    part = (ids[m], attrs[m], vals[m], valtypes[m])
+                if src is not None and d == src:
+                    n = HiperfactEngine._insert_columns(
+                        self.workers[d], tname, *part)
+                    if tname == ftype:
+                        wrote += n
+                else:
+                    self._enqueue(src or 0, d, tname, _ADD, part)
+        return wrote
+
+    def _route_del(self, ftype, ids, attrs, vals, src) -> int:
+        deleted = 0
+        zeros = np.zeros(len(ids), np.int8)
+        for tname, owner in self._targets(ftype, ids, attrs, vals):
+            for d in range(self.n_shards):
+                if owner is None:
+                    part = (ids, attrs, vals, zeros)
+                else:
+                    m = owner == d
+                    if not m.any():
+                        continue
+                    part = (ids[m], attrs[m], vals[m], zeros[:int(m.sum())])
+                if src is not None and d == src:
+                    n = HiperfactEngine._delete_matching(
+                        self.workers[d], tname, part[0], part[1], part[2])
+                    if tname == ftype:
+                        deleted += n
+                else:
+                    self._enqueue(src or 0, d, tname, _DEL, part)
+        return deleted
+
+    def _tid(self, name: str) -> int:
+        tid = self._table_ids.get(name)
+        if tid is None:
+            tid = self._table_ids[name] = len(self._table_names)
+            self._table_names.append(name)
+        return tid
+
+    def _enqueue(self, src: int, dest: int, tname: str, kind: int,
+                 part: tuple) -> None:
+        with self._lock:
+            tid = self._tid(tname)
+            self._outbox[src].append((dest, tid, kind) + part)
+
+    def _register_views(self, views) -> None:
+        for ftype, comp in views:
+            have = self._views.setdefault(ftype, set())
+            if comp in have:
+                continue
+            have.add(comp)
+            self._backfill_view(ftype, comp)
+
+    def _backfill_view(self, ftype, comp) -> None:
+        """Seed a freshly registered view from rows already resident."""
+        vname = view_name(ftype, comp)
+        D = self.n_shards
+        queued = False
+        for w in self.workers:
+            tab = w.store.tables.get(ftype)
+            if tab is None or tab.n == 0:
+                continue
+            rows = tab.all_rows()
+            if len(rows) == 0:
+                continue
+            ids = tab.ids[rows]
+            attrs = tab.attrs[rows]
+            vals = tab.vals[rows]
+            valtypes = tab.valtypes[rows]
+            if comp is None:
+                owner = None
+            else:
+                owner = shard_of((ids, attrs, vals)[int(comp)], D)
+            for d in range(D):
+                if owner is None:
+                    part = (ids, attrs, vals, valtypes)
+                else:
+                    m = owner == d
+                    if not m.any():
+                        continue
+                    part = (ids[m], attrs[m], vals[m], valtypes[m])
+                self._enqueue(w.shard, d, vname, _ADD, part)
+                queued = True
+        if queued:
+            self._flush_outbox("backfill")
+
+    # ------------------------------------------------------------- exchange
+    def _flush_outbox(self, phase: str) -> tuple[int, int, dict]:
+        """Run one frontier exchange over the queued rows and apply the
+        arrivals.  Returns (fresh owner-table inserts, total applied
+        changes incl. view tables, log dict)."""
+        with self._lock:
+            outbox, self._outbox = (self._outbox,
+                                    [[] for _ in range(self.n_shards)])
+        D = self.n_shards
+        dest, key, val, meta = [], [], [], []
+        for s in range(D):
+            entries = outbox[s]
+            if not entries:
+                e64 = np.empty(0, np.int64)
+                dest.append(np.empty(0, np.int32))
+                key.append(e64)
+                val.append(e64)
+                meta.append(e64)
+                continue
+            ds, ks, vs, ms = [], [], [], []
+            for (d, tid, kind, ids, attrs, vals, valtypes) in entries:
+                n = len(ids)
+                ds.append(np.full(n, d, np.int32))
+                ks.append((ids.astype(np.int64) << 32)
+                          | (attrs.astype(np.int64) & 0xFFFFFFFF))
+                vs.append(vals)
+                ms.append(np.full(n, (tid << 16) | (kind << 8), np.int64)
+                          | (valtypes.astype(np.int64) & 0xFF))
+            dest.append(np.concatenate(ds))
+            key.append(np.concatenate(ks))
+            val.append(np.concatenate(vs))
+            meta.append(np.concatenate(ms))
+        recv, stats = self.exchange.exchange(dest, key, val, meta)
+        owner_fresh = owner_deleted = changed = 0
+        for d in range(D):
+            k, v, m = recv[d]
+            if len(k) == 0:
+                continue
+            tids = (m >> 16).astype(np.int64)
+            kinds = ((m >> 8) & 0xFF).astype(np.int64)
+            vts = (m & 0xFF).astype(np.int8)
+            ids = (k >> 32).astype(np.int32)
+            attrs = (k & 0xFFFFFFFF).astype(np.int32)
+            for g in np.unique(tids * 2 + kinds):
+                sel = (tids * 2 + kinds) == g
+                tname = self._table_names[int(g) >> 1]
+                is_view = tname.startswith(VIEW_PREFIX)
+                if int(g) & 1:
+                    n = HiperfactEngine._delete_matching(
+                        self.workers[d], tname, ids[sel], attrs[sel], v[sel])
+                    changed += n
+                    if not is_view:
+                        owner_deleted += n
+                else:
+                    n = HiperfactEngine._insert_columns(
+                        self.workers[d], tname, ids[sel], attrs[sel],
+                        v[sel], vts[sel])
+                    changed += n
+                    if not is_view:
+                        owner_fresh += n
+        log = {"phase": phase, **stats, "owner_fresh": owner_fresh,
+               "owner_deleted": owner_deleted, "applied": changed}
+        self.exchange_log.append(log)
+        return owner_fresh, changed, log
+
+    # ---------------------------------------------------------------- query
+    def _gathered_store(self, types: list[str]) -> FactStore:
+        """Union of the owner partitions of ``types`` (multi-island
+        ad-hoc queries evaluate against this; owner partitions are
+        disjoint, so no dedup is needed).  Memoized per version token."""
+        token = (tuple(types), self._query_version_token(types))
+        if self._gather_memo is not None and self._gather_memo[0] == token:
+            return self._gather_memo[1]
+        gst = FactStore(self.config.index_backend, ops=self.ops)
+        gst.strings = self.store.strings
+        for t in types:
+            for w in self.workers:
+                tab = w.store.tables.get(t)
+                if tab is None or tab.n == 0:
+                    continue
+                rows = tab.all_rows()
+                if len(rows) == 0:
+                    continue
+                gst.table(t).insert(tab.ids[rows], tab.attrs[rows],
+                                    tab.vals[rows], tab.valtypes[rows],
+                                    dedup=False)
+        self._gather_memo = (token, gst)
+        return gst
+
+
+# ---------------------------------------------------------------------------
+# Parity helpers (tests + benchmarks)
+
+
+def iter_decoded_facts(engine: HiperfactEngine):
+    """Yield every alive fact fully decoded, from a plain or sharded
+    engine (owner tables only — view copies are infrastructure)."""
+    if isinstance(engine, ShardedEngine):
+        stores = [w.store for w in engine.workers]
+    else:
+        stores = [engine.store]
+    for st in stores:
+        for ftype, tab in st.tables.items():
+            if ftype.startswith(VIEW_PREFIX):
+                continue
+            for r in np.flatnonzero(tab.alive):
+                vt = ValueType(int(tab.valtypes[r]))
+                yield (ftype,
+                       st.strings.lookup_id(int(tab.ids[r])),
+                       st.strings.lookup_id(int(tab.attrs[r])),
+                       repr(decode_value(int(tab.vals[r]), vt, st.strings)),
+                       int(vt))
+
+
+def decoded_fact_checksum(engine: HiperfactEngine) -> int:
+    """Order-independent crc32 over the decoded fact set — identical for
+    ``shards=1`` and ``shards=N`` runs of the same workload."""
+    lines = sorted("\t".join(map(str, f)) for f in iter_decoded_facts(engine))
+    return zlib.crc32("\n".join(lines).encode())

@@ -74,11 +74,16 @@ class Rank1Index(abc.ABC):
         tail past the resident run is sorted and merged in.  The
         table's tombstone count rides along so heavy delete churn
         triggers the full-rebuild fallback instead of merging around
-        dead weight."""
+        dead weight; the alive mask lets full sorts and rebuilds
+        *compact* — the mirror drops tombstoned rows instead of
+        re-sorting them forever (perm values stay original row ids, so
+        lookups see exactly the rows their own alive-filtering would
+        keep)."""
         kw = {}
         if table is not None and comp is not None:
             kw = {"cache_key": (table.uid, int(comp), variant),
-                  "version": table.version, "n_dead": table.n_dead}
+                  "version": table.version, "n_dead": table.n_dead,
+                  "alive": table.alive if table.n_dead else None}
         skeys, perm = self.ops.sort_perm(col, **kw)
         return skeys.astype(col.dtype, copy=False), perm.astype(np.int32)
 

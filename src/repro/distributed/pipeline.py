@@ -1,17 +1,29 @@
-"""Pipeline parallelism over the ``pod`` axis (GPipe-style).
+"""Inter-device pipelines: GPipe stages over ``pod`` and the sharded
+fact engine's frontier all-to-all.
 
-The multi-pod mesh has slow inter-pod ICI; mapping pipeline *stages* to
-pods moves only per-microbatch activations across the pod boundary
-instead of per-layer FSDP all-gathers.  Implementation: layer-stacked
-params are sharded on the ``layers`` dim over ``pod`` (each pod owns a
-contiguous stage), and the step runs under ``shard_map`` with
-``collective_permute`` handing activations stage->stage while microbatches
-stream through (1F schedule; the bubble is ``(stages-1)/microbatches``).
+Pipeline parallelism (``pipeline_apply``): the multi-pod mesh has slow
+inter-pod ICI; mapping pipeline *stages* to pods moves only
+per-microbatch activations across the pod boundary instead of per-layer
+FSDP all-gathers.  Implementation: layer-stacked params are sharded on
+the ``layers`` dim over ``pod`` (each pod owns a contiguous stage), and
+the step runs under ``shard_map`` with ``collective_permute`` handing
+activations stage->stage while microbatches stream through (1F
+schedule; the bubble is ``(stages-1)/microbatches``).
 
-This is an optional flag on the trainer (``pipeline_over_pod``); the
-default multi-pod layout keeps pods as extra FSDP.  Exercised by
-``tests/test_pipeline.py`` on a host-device mesh and dry-runnable on the
-production mesh.
+Frontier exchange (``FrontierExchange``): the transport of
+``EngineConfig(shards=N)`` — each fixpoint round, every shard worker
+hands over the *append frontier* rows whose derived keys hash to a
+foreign shard.  Rows are packed into three int64 lanes (packed
+``(id, attr)`` key / raw value / table-and-kind meta), bucketed per
+destination with ``core.distributed.bucket_scatter``, and moved with
+one ``lax.all_to_all`` under ``shard_map`` over a 1-D ``shards`` mesh
+(``distributed.sharding.fact_mesh``).  Send-buffer capacity is exact:
+the host knows every bucket count, so ``slot_cap`` is the
+power-of-two-rounded max bucket — no overflow/retry loop, and the jit
+cache only sees log-many ``(in_cap, slot_cap)`` shapes.  When the
+process has fewer devices than shards (or the engine runs the numpy
+backend) the same exchange runs as a host permute with identical
+semantics and byte accounting.
 """
 
 from __future__ import annotations
@@ -20,6 +32,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -87,3 +100,138 @@ def pipeline_apply(block_fn, stacked_params, h: jnp.ndarray, *, mesh: Mesh,
         out_specs=P(),
         check_rep=False)
     return fn(stacked_params, h)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-engine frontier exchange
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+class FrontierExchange:
+    """All-to-all transport for the sharded engine's append frontiers.
+
+    ``exchange(dest, key, val, meta)`` takes per-source-shard host
+    arrays (``dest``: int32 destination shard per row; the three int64
+    payload lanes) and returns per-destination-shard received lanes
+    plus a byte-accounting dict.  Row validity on the receive side is
+    carried by the ``meta`` lane (small non-negative values; the
+    sentinel never collides), so ``val`` may hold any int64 bit
+    pattern.
+
+    Device path: one jitted ``shard_map`` over ``fact_mesh(n_shards)``
+    running ``bucket_scatter`` per lane + ``lax.all_to_all`` — the
+    exact transport of ``core.distributed.closure_step``, generalized
+    to arbitrary fact rows.  Host path (too few devices, or numpy
+    backend): the same permutation on host arrays.
+    """
+
+    def __init__(self, n_shards: int, prefer_device: bool = True) -> None:
+        self.n_shards = n_shards
+        self.mesh = None
+        self._fns: dict[tuple[int, int], object] = {}
+        if prefer_device and n_shards > 1:
+            try:
+                from repro.distributed.sharding import fact_mesh
+                self.mesh = fact_mesh(n_shards)
+            except Exception:
+                self.mesh = None  # host fallback
+
+    @property
+    def device(self) -> bool:
+        return self.mesh is not None
+
+    # -- device path -------------------------------------------------------
+    def _build(self, in_cap: int, slot_cap: int):
+        fn = self._fns.get((in_cap, slot_cap))
+        if fn is not None:
+            return fn
+        from repro.core.distributed import _exchange, bucket_scatter
+        D = self.n_shards
+        axis = self.mesh.axis_names[0]
+
+        def step(dest, key, val, meta):
+            d = dest.reshape(-1)
+            valid = d >= 0
+            out = []
+            for lane in (key, val, meta):
+                buf, _ovf = bucket_scatter(d, lane.reshape(-1), D, slot_cap,
+                                           valid)
+                out.append(_exchange(buf, (axis,), D, slot_cap)[None, :])
+            return tuple(out)
+
+        fn = jax.jit(shard_map(
+            step, mesh=self.mesh,
+            in_specs=(P(axis),) * 4, out_specs=(P(axis),) * 3,
+            check_rep=False))
+        self._fns[(in_cap, slot_cap)] = fn
+        return fn
+
+    def _exchange_device(self, dest, key, val, meta, slot_cap):
+        D = self.n_shards
+        in_cap = _pow2(max(1, max(len(d) for d in dest)))
+        dst = np.full((D, in_cap), -1, np.int32)
+        lanes = [np.zeros((D, in_cap), np.int64) for _ in range(3)]
+        for s in range(D):
+            n = len(dest[s])
+            dst[s, :n] = dest[s]
+            for lane, col in zip(lanes, (key[s], val[s], meta[s])):
+                lane[s, :n] = col
+        fn = self._build(in_cap, slot_cap)
+        bk, bv, bm = (np.asarray(x) for x in fn(dst, *lanes))
+        sent = jnp.iinfo(jnp.int64).max
+        out = []
+        for d in range(D):
+            ok = bm[d] != sent
+            out.append((bk[d][ok], bv[d][ok], bm[d][ok]))
+        return out
+
+    # -- host path ---------------------------------------------------------
+    def _exchange_host(self, dest, key, val, meta):
+        D = self.n_shards
+        out = []
+        for d in range(D):
+            ks, vs, ms = [], [], []
+            for s in range(D):
+                m = dest[s] == d
+                if m.any():
+                    ks.append(key[s][m])
+                    vs.append(val[s][m])
+                    ms.append(meta[s][m])
+            cat = lambda xs: (np.concatenate(xs) if xs
+                              else np.empty(0, np.int64))
+            out.append((cat(ks), cat(vs), cat(ms)))
+        return out
+
+    # -- public ------------------------------------------------------------
+    def exchange(self, dest: list, key: list, val: list, meta: list
+                 ) -> tuple[list, dict]:
+        """Move rows to their destination shards.
+
+        Returns ``([(key, val, meta)] * n_shards, stats)``.  Stats:
+        ``payload_bytes`` (real rows x 24B — the Δ-proportional
+        traffic), ``padded_bytes`` (what the bounded-buffer a2a
+        actually moved), ``rows``, ``slot_cap``, ``device``.
+        """
+        D = self.n_shards
+        rows = int(sum(len(d) for d in dest))
+        counts = np.zeros((D, D), np.int64)
+        for s in range(D):
+            if len(dest[s]):
+                np.add.at(counts[s], dest[s], 1)
+        slot_cap = _pow2(max(1, int(counts.max())))
+        if rows == 0:
+            empty = [(np.empty(0, np.int64),) * 3 for _ in range(D)]
+            return empty, {"rows": 0, "payload_bytes": 0, "padded_bytes": 0,
+                           "slot_cap": 0, "device": self.device}
+        if self.device:
+            out = self._exchange_device(dest, key, val, meta, slot_cap)
+            padded = D * D * slot_cap * 3 * 8
+        else:
+            out = self._exchange_host(dest, key, val, meta)
+            padded = rows * 3 * 8
+        return out, {"rows": rows, "payload_bytes": rows * 3 * 8,
+                     "padded_bytes": padded, "slot_cap": slot_cap,
+                     "device": self.device}

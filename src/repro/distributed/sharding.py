@@ -162,3 +162,35 @@ def batch_shardings(input_tree, mesh: Mesh, batch: int):
         nd = len(x.shape)
         return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
     return jax.tree.map(one, input_tree)
+
+
+# ---------------------------------------------------------------------------
+# Fact-table sharding (EngineConfig(shards=N))
+
+FACT_AXIS = "shards"
+
+
+def fact_mesh(n_shards: int, axis: str = FACT_AXIS) -> Mesh:
+    """1-D device mesh for hash-partitioned fact tables.
+
+    Each device owns the facts whose rank-1 key hashes to its index —
+    the device-mesh generalization of the paper's derivation-tree
+    parallel index writes (each writer owns a memory range).  Raises
+    when the process has too few devices instead of silently folding
+    into a degenerate mesh (CPU containers must set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
+    jax initializes).
+    """
+    have = jax.device_count()
+    if have < n_shards:
+        raise ValueError(
+            f"fact_mesh({n_shards}) needs {n_shards} devices but jax sees "
+            f"{have}; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} before the first jax call")
+    return jax.make_mesh((n_shards,), (axis,))
+
+
+def fact_frontier_spec(axis: str = FACT_AXIS) -> P:
+    """PartitionSpec of the packed per-shard frontier buffers: one send
+    buffer row (``[n_shards * slot_cap]`` lanes) per mesh device."""
+    return P(axis)

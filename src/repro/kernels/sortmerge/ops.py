@@ -211,43 +211,50 @@ def _pad_codes(cap: int, tag_bits: int):
 
 @functools.partial(jax.jit, static_argnames=(
     "dcap", "tag_bits", "block", "force_pallas", "interpret"))
-def device_merge_sorted_mirror(buf, base_tagged, n_base, n_total, kmin,
-                               kmin_old, *, dcap: int, tag_bits: int,
-                               block: int = 1024,
-                               force_pallas: bool = False,
-                               interpret: bool = False):
+def merge_sorted_mirror_impl(buf, base_tagged, n_run, delta_start, n_total,
+                             kmin, kmin_old, *, dcap: int, tag_bits: int,
+                             block: int = 1024,
+                             force_pallas: bool = False,
+                             interpret: bool = False):
     """Incremental (sorted, perm) maintenance for an append-only column.
 
     ``buf``: the resident padded column buffer at the *new* version
-    (rows ``[n_base, n_total)`` are the appended tail).  ``base_tagged``:
-    the resident sorted run in tagged form — ``(key - kmin_old) <<
-    tag_bits | lane`` for lanes ``< n_base``, pad codes above.  The
-    composite (one jit program, nothing touches the host):
+    (rows ``[delta_start, n_total)`` are the appended tail).
+    ``base_tagged``: the resident sorted run in tagged form — ``(key -
+    kmin_old) << tag_bits | row`` for lanes ``< n_run``, pad codes
+    above.  ``n_run`` and ``delta_start`` coincide for a full mirror;
+    a tombstone-compacted mirror has ``n_run < delta_start`` (the run
+    holds only the alive rows of the first ``delta_start`` source rows,
+    with *original* row ids in the low bits).  The composite (one jit
+    program, nothing touches the host):
 
     1. slice the ``dcap``-lane appended tail out of ``buf`` and
-       tagged-sort it with *absolute* lane tags (``lane + n_base``) —
-       the O(Δ log Δ) part;
+       tagged-sort it with *absolute* lane tags (``lane +
+       delta_start``) — the O(Δ log Δ) part;
     2. re-base the resident run's codes if the key minimum moved
        (``kmin < kmin_old``: a constant shift of the high part, order
        preserved);
     3. merge the two runs (ranks + scatter, O(N) linear);
     4. de-tag: sorted keys (pads ``int64 max``) + permutation (pads own
-       index) — bit-identical to a full stable re-sort of ``buf``.
+       index) — bit-identical to a full stable re-sort of the run's
+       rows plus the tail.  The real merged prefix is ``n_run +
+       (n_total - delta_start)`` lanes.
 
     Returns ``(sorted_keys, perm, merged_tagged)`` — the caller stores
     ``merged_tagged`` back as the next resident run.
     """
     cap = buf.shape[0]
-    d = n_total - n_base
+    d = n_total - delta_start
+    n_real = n_run + d
     # 1. tagged delta run (absolute lane tags so low bits stay the perm).
-    # The dcap-lane window may not fit past n_base near the top of the
-    # buffer, so it slides back and the real rows are masked by their
+    # The dcap-lane window may not fit past delta_start near the top of
+    # the buffer, so it slides back and the real rows are masked by their
     # *global* lane — pad content on either side is re-tagged away.
-    start = jnp.minimum(n_base, cap - dcap)
+    start = jnp.minimum(delta_start, cap - dcap)
     seg = jax.lax.dynamic_slice(buf, (start,), (dcap,))
     lane_d = jnp.arange(dcap, dtype=jnp.int64)
     gl = lane_d + start  # global lane of each window element
-    drun = jnp.where((gl >= n_base) & (gl < n_total),
+    drun = jnp.where((gl >= delta_start) & (gl < n_total),
                      ((seg - kmin) << tag_bits) | gl,
                      _pad_codes(dcap, tag_bits))
     drun = device_sort(drun, block=block, force_pallas=force_pallas,
@@ -255,13 +262,13 @@ def device_merge_sorted_mirror(buf, base_tagged, n_base, n_total, kmin,
     # 2. re-base the resident run to the new key minimum
     lane = jnp.arange(cap, dtype=jnp.int64)
     shift = (kmin_old - kmin) << tag_bits
-    base = jnp.where(lane < n_base, base_tagged + shift,
+    base = jnp.where(lane < n_run, base_tagged + shift,
                      _pad_codes(cap, tag_bits))
     # 3. merge (tagged codes are all distinct, so ties cannot occur; the
     # left-first discipline is inherited from device_merge_runs anyway)
-    ra, rb = _run_ranks(base, drun, n_base, d, block=block,
+    ra, rb = _run_ranks(base, drun, n_run, d, block=block,
                         force_pallas=force_pallas, interpret=interpret)
-    pos_a = jnp.where(lane < n_base, lane + ra, cap)
+    pos_a = jnp.where(lane < n_run, lane + ra, cap)
     pos_b = jnp.where(lane_d < d, lane_d + rb, cap)
     merged = _pad_codes(cap, tag_bits)
     merged = merged.at[pos_a].set(base, mode="drop")
@@ -269,9 +276,23 @@ def device_merge_sorted_mirror(buf, base_tagged, n_base, n_total, kmin,
     # 4. de-tag
     mask = (jnp.int64(1) << tag_bits) - 1
     perm = merged & mask
-    skeys = jnp.where(lane < n_total, (merged >> tag_bits) + kmin,
+    skeys = jnp.where(lane < n_real, (merged >> tag_bits) + kmin,
                       jnp.iinfo(jnp.int64).max)
     return skeys, perm, merged
+
+
+def device_merge_sorted_mirror(buf, base_tagged, n_base, n_total, kmin,
+                               kmin_old, *, dcap: int, tag_bits: int,
+                               block: int = 1024,
+                               force_pallas: bool = False,
+                               interpret: bool = False):
+    """Back-compatible form of ``merge_sorted_mirror_impl`` for full
+    (uncompacted) mirrors, where the resident run length and the delta
+    window start are the same ``n_base``."""
+    return merge_sorted_mirror_impl(
+        buf, base_tagged, n_base, n_base, n_total, kmin, kmin_old,
+        dcap=dcap, tag_bits=tag_bits, block=block,
+        force_pallas=force_pallas, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tag_bits",))

@@ -309,3 +309,110 @@ def test_engine_delete_then_append_stays_exact():
     assert ids == {e.store.strings.intern("n5"),
                    e.store.strings.intern("x")}
     assert e.ops.sort_work.rebuilds >= 1
+
+
+# ---------------------------------------------------------------------------
+# Tombstone compaction: full sorts and rebuilds drop dead rows
+
+
+def alive_oracle(col, alive):
+    """Expected compacted mirror: stable sort of the alive rows with
+    original row ids as the permutation."""
+    rows = np.flatnonzero(alive)
+    order = np.argsort(col[rows], kind="stable")
+    return col[rows][order], rows[order]
+
+
+@pytest.mark.parametrize("ops", [HOST, None])
+def test_compacted_mirror_drops_dead_rows(ops):
+    ops = ops or fresh_ops()
+    col = RNG.randint(0, 400, 700).astype(np.int64)
+    alive = np.ones(700, bool)
+    alive[RNG.choice(700, 60, replace=False)] = False
+    s, p = ops.sort_perm(col, cache_key=("t", 1), version=1,
+                         n_dead=60, alive=alive)
+    es, ep = alive_oracle(col, alive)
+    np.testing.assert_array_equal(s, es)
+    np.testing.assert_array_equal(p, ep)
+    assert len(s) == 640
+
+
+def test_compacted_mirror_then_append_merges_alive_only():
+    """After a compacting rebuild, appends merge the tail into the
+    compacted run: dead rows never reappear and never re-sort."""
+    ops = fresh_ops()
+    col = RNG.randint(0, 300, 900).astype(np.int64)
+    ops.sort_perm(col, cache_key=("ta", 1), version=1)
+    alive = np.ones(900, bool)
+    alive[[5, 17, 400]] = False
+    # tombstone churn -> compacting rebuild
+    col = np.concatenate([col, RNG.randint(0, 300, 12).astype(np.int64)])
+    alive = np.concatenate([alive, np.ones(12, bool)])
+    s, p = ops.sort_perm(col, cache_key=("ta", 1), version=2,
+                         n_dead=3, alive=alive)
+    es, ep = alive_oracle(col, alive)
+    np.testing.assert_array_equal(p, ep)
+    np.testing.assert_array_equal(s, es)
+    assert ops.sort_work.rebuilds == 1
+    # stable n_dead afterwards: the appended tail MERGES into the
+    # compacted run (no full sort), and the result is still alive-only
+    col = np.concatenate([col, RNG.randint(0, 300, 15).astype(np.int64)])
+    alive = np.concatenate([alive, np.ones(15, bool)])
+    merges0 = ops.sort_work.delta_merges
+    fulls0 = ops.sort_work.full_sorts
+    s, p = ops.sort_perm(col, cache_key=("ta", 1), version=3,
+                         n_dead=3, alive=alive)
+    assert ops.sort_work.delta_merges == merges0 + 1
+    assert ops.sort_work.full_sorts == fulls0
+    es, ep = alive_oracle(col, alive)
+    np.testing.assert_array_equal(p, ep)
+    np.testing.assert_array_equal(s, es)
+
+
+def test_compaction_shrinks_sorted_bytes():
+    """The observable win: a compacting rebuild sorts the alive-row
+    bucket, not the full column buffer."""
+    ops = fresh_ops()
+    col = RNG.randint(0, 5000, 4000).astype(np.int64)  # cap 4096
+    ops.sort_perm(col, cache_key=("sb", 1), version=1)
+    alive = np.ones(4000, bool)
+    alive[RNG.choice(4000, 3800, replace=False)] = False  # 200 alive
+    col = np.concatenate([col, RNG.randint(0, 5000, 8).astype(np.int64)])
+    alive = np.concatenate([alive, np.ones(8, bool)])
+    snap = ops.sort_work.snapshot()
+    s, p = ops.sort_perm(col, cache_key=("sb", 1), version=2,
+                         n_dead=3800, alive=alive)
+    d = ops.sort_work.delta(snap)
+    assert len(s) == 208
+    # 208 alive rows pad to a 256-lane bucket vs the 8192-lane buffer
+    assert d.sorted_bytes <= 512 * 8, d
+    np.testing.assert_array_equal(p, alive_oracle(col, alive)[1])
+
+
+def test_fully_tombstoned_column_yields_empty_mirror():
+    ops = fresh_ops()
+    col = RNG.randint(0, 100, 64).astype(np.int64)
+    ops.sort_perm(col, cache_key=("e", 1), version=1)
+    s, p = ops.sort_perm(col, cache_key=("e", 1), version=2,
+                         n_dead=64, alive=np.zeros(64, bool))
+    assert len(s) == 0 and len(p) == 0
+
+
+def test_engine_compaction_after_heavy_delete():
+    """Engine-level: deleting most of a table then appending keeps
+    lookups exact while the rebuilt mirrors carry only alive rows."""
+    from repro.core import EngineConfig, Fact, HiperfactEngine
+    from repro.core.conditions import cond
+
+    e = HiperfactEngine(EngineConfig(index_backend="AI", join="MJ",
+                                     unique="SU", backend="jax-interpret"))
+    e.insert_facts([Fact("T", f"n{i}", "next", f"n{i+1}")
+                    for i in range(200)])
+    t = e.store.tables["T"]
+    t.delete_rows(np.arange(0, 190))
+    e.insert_facts([Fact("T", "x", "next", "y")])
+    got = {(r["x"], r["y"]) for r in e.query(
+        [cond("T", "?x", "next", "?y")])}
+    assert got == ({(f"n{i}", f"n{i+1}") for i in range(190, 200)}
+                   | {("x", "y")})
+    assert e.ops.sort_work.rebuilds >= 1

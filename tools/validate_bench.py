@@ -17,6 +17,10 @@ third-party dependency:
   ``infer_s``/``delta_passes``/``full_evals`` (+ transfer and
   sort-byte counters on device backends) and the fact-set ``checksum``
   the delta≡full parity compares;
+* ``sections.sharded`` (since PR 6): shards=1 baseline + shards=N run
+  with ``bit_identical`` required true, per-shard ``shard_bytes``, and
+  append-round ``a2a`` payloads strictly below the resident payload
+  (frontier traffic must be O(Δ));
 * ``sections.kernels`` rows: ``{"op", "value"}``.
 
 Unknown extra keys are allowed everywhere (snapshots may grow); missing
@@ -90,6 +94,50 @@ def check_streaming(rows: list, where: str) -> None:
                 need(rd, "sorted_bytes", NUM, wr)
 
 
+def check_sharded(s: dict, where: str) -> None:
+    """Sharded fixpoint section (PR 6): shards=1 vs shards=N runs with
+    bit-identical checksums and O(Δ) frontier-exchange accounting."""
+    need(s, "backend", str, where)
+    if need(s, "bit_identical", bool, where) is not True:
+        raise Invalid(f"{where}.bit_identical: sharded fact set diverged "
+                      f"from the unsharded engine")
+    need(s, "max_shard_fraction", NUM, where)
+    a2a = need(s, "append_a2a_bytes", list, where)
+    resident = need(s, "resident_payload_bytes", NUM, where)
+    for j, b in enumerate(a2a):
+        if not isinstance(b, NUM):
+            raise Invalid(f"{where}.append_a2a_bytes[{j}]: expected number")
+        if b >= resident:
+            raise Invalid(f"{where}.append_a2a_bytes[{j}]: append-round "
+                          f"exchange ({b}) not smaller than resident "
+                          f"payload ({resident}) — traffic must scale "
+                          f"with the delta, not the table")
+    runs = need(s, "runs", list, where)
+    if len(runs) < 2 or runs[0].get("shards") != 1:
+        raise Invalid(f"{where}.runs: need a shards=1 baseline followed "
+                      f"by a shards=N run")
+    for i, r in enumerate(runs):
+        w = f"{where}.runs[{i}]"
+        for k in ("shards", "load_s", "infer_s", "inferred", "n_facts",
+                  "checksum", "final_checksum"):
+            need(r, k, NUM, w)
+        if r["shards"] > 1:
+            need(r, "exchange_device", bool, w)
+            need(r, "critical_path_s", NUM, w)
+            sb = need(r, "shard_bytes", list, w)
+            if len(sb) != r["shards"]:
+                raise Invalid(f"{w}.shard_bytes: expected one entry per "
+                              f"shard ({r['shards']}), got {len(sb)}")
+            for j, rd in enumerate(need(r, "infer_rounds", list, w)):
+                wr = f"{w}.infer_rounds[{j}]"
+                for k in ("round", "critical_path_s", "a2a_rows",
+                          "a2a_payload_bytes", "a2a_padded_bytes",
+                          "applied_fresh"):
+                    need(rd, k, NUM, wr)
+        for j, rd in enumerate(need(r, "append_rounds", list, w)):
+            need(rd, "infer_s", NUM, f"{w}.append_rounds[{j}]")
+
+
 def check_kernels(rows: list, where: str) -> None:
     for i, r in enumerate(rows):
         w = f"{where}[{i}]"
@@ -112,6 +160,8 @@ def validate(path: str) -> None:
     if "streaming" in sections:
         check_streaming(sections["streaming"],
                         f"{path}.sections.streaming")
+    if "sharded" in sections:
+        check_sharded(sections["sharded"], f"{path}.sections.sharded")
     if "kernels" in sections:
         check_kernels(sections["kernels"], f"{path}.sections.kernels")
 
