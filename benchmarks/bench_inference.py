@@ -249,6 +249,137 @@ def _stream_once(mode, backend, base, batches):
     return res
 
 
+def _expire_rules():
+    from repro.core.conditions import AddAction, Rule, cond, term
+    return [
+        Rule("hot", (cond("Reading", "?s", "temp", "?t"),
+                     cond("Threshold", "?t", "class", "hot")),
+             (AddAction("Alert", term("?s"), "level", "hot"),)),
+        Rule("zone-alert", (cond("Alert", "?s", "level", "hot"),
+                            cond("Zone", "?s", "in", "?z")),
+             (AddAction("ZoneAlert", term("?z"), "has", term("?s")),)),
+        Rule("audit", (cond("ZoneAlert", "?z", "has", "?s"),),
+             (AddAction("Audit", term("?z"), "saw", term("?s")),)),
+    ]
+
+
+def _expire_window(r: int, n_sensors: int):
+    from repro.core.facts import Fact
+    base = r * n_sensors
+    readings = [Fact("Reading", f"s{base + i}", "temp", f"t{i % 7}")
+                for i in range(n_sensors)]
+    zones = [Fact("Zone", f"s{base + i}", "in", f"z{i % 4}")
+             for i in range(n_sensors)]
+    return readings, zones
+
+
+def _expire_once(mode, backend, shards, n_rounds, n_sensors):
+    import dataclasses
+
+    from repro.core.facts import Fact
+    from repro.core.sharded import decoded_fact_checksum
+
+    cfg = dataclasses.replace(EngineConfig.infer1(backend),
+                              eval_mode=mode, shards=shards)
+    e = HiperfactEngine(cfg)
+    for r in _expire_rules():
+        e.add_rule(r)
+    e.insert_facts([Fact("Threshold", f"t{k}", "class", "hot")
+                    for k in (5, 6)])
+    t0 = time.perf_counter()
+    s0 = e.infer()
+    initial_s = time.perf_counter() - t0
+    rounds = []
+    prev = None
+    for r in range(n_rounds):
+        readings, zones = _expire_window(r, n_sensors)
+        e.insert_facts(readings + zones)
+        t0 = time.perf_counter()
+        sa = e.infer()
+        append_s = time.perf_counter() - t0
+        expire_s = 0.0
+        sd = None
+        if prev is not None:  # TTL: the previous window expires wholesale
+            e.delete_facts(prev)
+            t0 = time.perf_counter()
+            sd = e.infer()
+            expire_s = time.perf_counter() - t0
+        prev = readings
+        row = {"append_infer_s": append_s, "expire_infer_s": expire_s,
+               "inferred": sa.facts_inferred,
+               "retracted": (sd.facts_retracted + sd.facts_deleted
+                             if sd else 0),
+               "delta_passes": sa.delta_passes
+               + (sd.delta_passes if sd else 0),
+               "neg_passes": (sd.neg_passes if sd else 0),
+               "full_evals": sa.full_evals + (sd.full_evals if sd else 0),
+               "rows_considered": sa.rows_considered
+               + (sd.rows_considered if sd else 0),
+               "dred_scrubs": (sd.dred_scrubs if sd else 0)}
+        rounds.append(row)
+    n_facts = (e.num_facts() if shards > 1 else e.store.num_facts())
+    return {"mode": mode, "shards": shards, "backend": backend,
+            "facts_base": 2, "initial_infer_s": initial_s,
+            "initial_inferred": s0.facts_inferred, "rounds": rounds,
+            "reinfer_total_s": sum(r["append_infer_s"] + r["expire_infer_s"]
+                                   for r in rounds),
+            "n_facts": n_facts, "checksum": decoded_fact_checksum(e)}
+
+
+def bench_streaming_expire(backend: str = "numpy", shards_list=(1,),
+                           eval_modes=("full", "delta"), n_rounds: int = 4,
+                           n_sensors: int = 120, runs: int = 2):
+    """Append + bulk-expire rounds (IoT threshold rules): each round
+    streams a window of sensor readings + zone memberships, infers the
+    two-hop alert chain, then the previous window's readings expire
+    wholesale (TTL) and the engine re-infers.
+
+    The signed-frontier contract under test: ``eval_mode="delta"`` must
+    (a) decode to the same fact set as ``"full"`` after every mixed
+    append+expire round (``checksum`` parity, per shard count), and
+    (b) run **zero** full re-evaluations in steady state — retractions
+    ride O(Δ) negative inclusion–exclusion passes (``neg_passes``) over
+    the delete log, with counting-based support retraction downstream,
+    never a table rescan (``rows_considered`` stays ∝ window size)."""
+    out = []
+    for shards in shards_list:
+        for mode in eval_modes:
+            best = None
+            for _ in range(max(1, runs)):
+                res = _expire_once(mode, backend, shards, n_rounds,
+                                   n_sensors)
+                if (best is None
+                        or res["reinfer_total_s"] < best["reinfer_total_s"]):
+                    best = res
+            out.append(best)
+    return out
+
+
+def summarize_streaming_expire(rows: list) -> dict:
+    """Cross-run acceptance summary: one checksum for every
+    (mode, shards) combination, delta-vs-full speedup per shard count,
+    and the steady-state full-eval count for the delta runs (must be 0
+    — the exit criterion for signed delta frontiers)."""
+    checks = {r["checksum"] for r in rows}
+    by = {(r["mode"], r["shards"]): r for r in rows}
+    shard_counts = sorted({r["shards"] for r in rows})
+    speedups = {}
+    for s in shard_counts:
+        f, d = by.get(("full", s)), by.get(("delta", s))
+        if f and d:
+            speedups[str(s)] = (f["reinfer_total_s"]
+                                / max(d["reinfer_total_s"], 1e-9))
+    steady = sum(x["full_evals"]
+                 for r in rows if r["mode"] == "delta"
+                 for x in r["rounds"][1:])
+    return {"bit_identical": len(checks) == 1,
+            "delta_vs_full_speedup": speedups,
+            "steady_full_evals": steady,
+            "neg_passes": sum(x["neg_passes"]
+                              for r in rows if r["mode"] == "delta"
+                              for x in r["rounds"])}
+
+
 def bench_sharded(shards: int = 8, scale: int = 1, backend: str = "jax",
                   smoke: bool = False, n_rounds: int = 2, batch: int = 40):
     """Sharded semi-naive fixpoint (``EngineConfig(shards=N)``) vs the

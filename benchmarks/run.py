@@ -121,6 +121,33 @@ def main() -> None:
         print(f"delta-vs-full: bit_identical={ok},reinfer_speedup={sp:.1f}x,"
               f"steady={sps:.1f}x")
 
+    section(f"Streaming expiry: signed delta frontiers vs full "
+            f"(backend={args.backend})")
+    # append + bulk-expire rounds (IoT threshold rules): deletes must
+    # ride O(Δ) negative passes — see ISSUE 7 / docs/ARCHITECTURE.md
+    exp_shards = (1,) if args.smoke else (1, 4)
+    exp_rows = bench_inference.bench_streaming_expire(
+        backend=args.backend, shards_list=exp_shards,
+        n_rounds=3 if args.smoke else 4,
+        n_sensors=60 if args.smoke else 120,
+        runs=1 if args.smoke else 2)
+    exp_sum = bench_inference.summarize_streaming_expire(exp_rows)
+    report["sections"]["streaming_expire"] = {
+        "runs": exp_rows, **exp_sum}
+    for r in exp_rows:
+        per = ",".join(f"{x['append_infer_s'] + x['expire_infer_s']:.4f}s"
+                       for x in r["rounds"])
+        fe = ",".join(str(x["full_evals"]) for x in r["rounds"])
+        neg = ",".join(str(x["neg_passes"]) for x in r["rounds"])
+        print(f"eval_mode={r['mode']},shards={r['shards']},"
+              f"rounds=[{per}],full_evals=[{fe}],neg_passes=[{neg}],"
+              f"facts={r['n_facts']},checksum={r['checksum']}")
+    exp_sp = {k: round(v, 1)
+              for k, v in exp_sum["delta_vs_full_speedup"].items()}
+    print(f"expire delta-vs-full: bit_identical={exp_sum['bit_identical']},"
+          f"speedup={exp_sp},"
+          f"steady_full_evals={exp_sum['steady_full_evals']}")
+
     if args.shards > 1:
         section(f"Sharded fixpoint: {args.shards}-way hash partition + "
                 f"frontier all-to-all")

@@ -148,11 +148,12 @@ class MirrorRuns:
     * **compaction** (full re-sort, ``merges`` reset) once the run count
       crosses the threshold — bounds re-base drift and keeps the merge
       chain shallow;
-    * **full rebuild fallback** on tombstone churn (``n_dead`` moved —
-      the mirror itself stays sound under tombstones, but dead weight
-      accumulating past the baseline is re-sorted rather than merged
-      around), on width overflow, and on any non-append change
-      (capacity growth, shrink, rewrite).
+    * **full rebuild fallback** on tombstone *churn* — the mirror stays
+      sound under tombstones (lookups alive-filter), so deletes ride
+      the merge path as carried dead weight until it passes a quarter
+      of the alive rows, at which point a full sort compacts it away —
+      on width overflow, and on any non-append change (capacity
+      growth, shrink, rewrite).
 
     ``n`` is the run's *lane* count; ``src_n`` is how many source rows
     the run has consumed.  They coincide for a full mirror, but every
@@ -169,6 +170,9 @@ class MirrorRuns:
     cap: int
     tag_bits: int
     merges: int = 0
+    # dead rows compacted OUT of the run (excluded at the last full
+    # sort).  ``table.n_dead - n_dead`` is the dead weight the run still
+    # carries; the maintenance policy bounds it.
     n_dead: int = 0
     src_n: int = -1  # -1 = uncompacted (src_n == n)
 

@@ -388,10 +388,12 @@ class JaxOps(Ops):
         mirror, maintained incrementally: when the resident
         ``MirrorRuns`` entry is an append-only prefix of the column at
         an unchanged capacity, only the tail is tagged-sorted
-        (O(Δ log Δ)) and merged into the resident run; otherwise — cold
-        build, capacity growth, width overflow, tombstone churn,
-        shrink/rewrite, or the compaction threshold — the full sort
-        runs and (when taggable) seeds a fresh run entry.
+        (O(Δ log Δ)) and merged into the resident run — tombstone
+        deltas ride along as carried dead weight (lookups alive-filter
+        the perm, so the mirror stays sound); otherwise — cold build,
+        capacity growth, width overflow, dead weight past a quarter of
+        the alive rows, shrink/rewrite, or the compaction threshold —
+        the full sort runs and (when taggable) seeds a fresh run entry.
 
         Every full-sort event on a tombstoned column (``alive`` given,
         ``n_dead > 0``) **compacts**: only the alive rows are sorted
@@ -411,10 +413,17 @@ class JaxOps(Ops):
         runs = ent.value if ent is not None else None
         compacting = (runs is not None and
                       runs.merges >= self.MIRROR_COMPACT_RUNS)
-        if (runs is not None and fits and not compacting
+        # dead rows the resident run still carries: tombstoned since the
+        # run last compacted them out.  The mirror stays sound (lookups
+        # alive-filter), so bounded churn rides the merge path — only
+        # when dead weight passes a quarter of the alive rows does the
+        # full-sort fallback compact it away.
+        carried = n_dead - runs.n_dead if runs is not None else 0
+        churned = runs is not None and (
+            carried < 0 or carried * 4 > max(n - n_dead, 1))
+        if (runs is not None and fits and not compacting and not churned
                 and runs.cap == cap and runs.tag_bits == tb
-                and runs.src_n < n and runs.n_dead == n_dead
-                and runs.kmin >= kmin):
+                and runs.src_n < n and runs.kmin >= kmin):
             d = n - runs.src_n
             dcap = self._delta_bucket(d)
             if dcap <= cap:  # the slice window slides back if needed
@@ -424,12 +433,12 @@ class JaxOps(Ops):
                     **self._sort_args())
                 self.cache.put(key, version, MirrorRuns(
                     tagged=merged, n=runs.n + d, kmin=kmin, cap=cap,
-                    tag_bits=tb, merges=runs.merges + 1, n_dead=n_dead,
-                    src_n=n), merged.nbytes)
+                    tag_bits=tb, merges=runs.merges + 1,
+                    n_dead=runs.n_dead, src_n=n), merged.nbytes)
                 self.sort_work.count_merge(dcap * 8)
                 return sk, perm, runs.n + d
         rebuild = (runs is not None and not compacting and
-                   (not fits or runs.n_dead != n_dead))
+                   (not fits or churned))
         if alive is not None and n_dead > 0 and keys64 is not None:
             # tombstone compaction: sort only the alive rows.  The
             # compacted column is a transient upload (the resident
@@ -475,9 +484,10 @@ class JaxOps(Ops):
                                   rebuild=rebuild)
         if fits:
             tagged = tagged_from_sorted(sk, perm, n, kmin, tag_bits=tb)
+            # run holds ALL n rows (nothing compacted out): n_dead=0
             self.cache.put(key, version, MirrorRuns(
                 tagged=tagged, n=n, kmin=kmin, cap=cap, tag_bits=tb,
-                merges=0, n_dead=n_dead, src_n=n), tagged.nbytes)
+                merges=0, n_dead=0, src_n=n), tagged.nbytes)
         else:
             # width overflow: the XLA-lexsort output has no tagged form
             # to merge into — appends keep re-sorting until the span

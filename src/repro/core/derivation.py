@@ -18,7 +18,26 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.conditions import Rule
+from repro.core.conditions import AddAction, Rule, is_var
+from repro.core.store import base_fact_type
+
+
+def _may_feed(action: AddAction, c) -> bool:
+    """Sound static check whether ``action`` can ever produce a fact that
+    ``c`` matches: False only on a definite constant mismatch (same-typed
+    constants on the same slot that differ).  Variables, computed values,
+    and cross-valtype comparisons conservatively count as feeding."""
+    for s_a, s_c, is_val in ((action.id, c.id, False),
+                             (action.attr, c.attr, False),
+                             (action.val, c.val, True)):
+        if s_a is None or s_c is None or is_var(s_a) or is_var(s_c):
+            continue
+        if is_val and (getattr(action, "compute", None) is not None
+                       or action.valtype != c.valtype):
+            continue
+        if type(s_a) is type(s_c) and s_a != s_c:
+            return False
+    return True
 
 
 @dataclasses.dataclass
@@ -28,6 +47,13 @@ class DerivationTrees:
     parents: list[set[int]]
     levels: list[list[int]]      # top-down schedule (rule indices)
     sccs: list[list[int]]
+    # rules whose evaluation is recursive: member of a multi-rule SCC, or
+    # consuming a fact type they produce.  Counting-based deletion is
+    # ambiguous through these (a fact may support its own rederivation),
+    # so deletions reaching their inputs take the DRed scrub path.
+    recursive: set[int] = dataclasses.field(default_factory=set)
+    # normalized fact type -> rules producing it
+    producers: dict[str, set[int]] = dataclasses.field(default_factory=dict)
 
     # -- Defs. 10/11 --------------------------------------------------------
     def rule_type(self, r: int) -> str:
@@ -87,6 +113,48 @@ class DerivationTrees:
             groups.setdefault(find(r), []).append(r)
         return list(groups.values())
 
+    # -- signed-frontier helpers -------------------------------------------
+    def recursive_input_types(self) -> set[str]:
+        """Normalized fact types consumed by a recursive rule — deaths in
+        these cannot be propagated by counting (DRed scrub instead)."""
+        out: set[str] = set()
+        for r in self.recursive:
+            out.update(base_fact_type(t) for t in self.rules[r].input_types())
+        return out
+
+    def downstream(self, seed_types: set[str]) -> tuple[set[int], set[str]]:
+        """Scrub closure of ``seed_types`` (normalized): the rules to
+        reset and the fact types to over-delete so a DRed scrub rebuilds
+        a consistent state.  The closure is mutual — a type is scrubbed
+        when it is a *derived* seed or is written by a reset rule; a rule
+        is reset when it reads a seed/scrubbed type **or writes a
+        scrubbed type** (every producer of a scrubbed type must re-derive
+        it, and every output of a reset rule must be scrubbed, else the
+        rule's re-init would double-count support on the survivor)."""
+        seed = {base_fact_type(t) for t in seed_types}
+        scrubbed = {t for t in seed if self.producers.get(t)}
+        rules: set[int] = set()
+        changed = True
+        while changed:
+            changed = False
+            touch = seed | scrubbed
+            for i, r in enumerate(self.rules):
+                if i in rules:
+                    continue
+                if (any(base_fact_type(t) in touch
+                        for t in r.input_types())
+                        or any(base_fact_type(t) in scrubbed
+                               for t in r.output_types())):
+                    rules.add(i)
+                    changed = True
+            for i in rules:
+                for t in self.rules[i].output_types():
+                    bt = base_fact_type(t)
+                    if bt not in scrubbed:
+                        scrubbed.add(bt)
+                        changed = True
+        return rules, scrubbed
+
 
 def _tarjan_sccs(n: int, children: list[set[int]]) -> list[list[int]]:
     """Iterative Tarjan SCC (derivation trees may be cyclic, paper §2.4)."""
@@ -137,18 +205,52 @@ def _tarjan_sccs(n: int, children: list[set[int]]) -> list[list[int]]:
 
 def build_derivation_trees(rules: list[Rule]) -> DerivationTrees:
     n = len(rules)
-    producers: dict[str, set[int]] = {}
+    # Producer/consumer linking is over *normalized* fact types: the
+    # sharded engine's rewrite makes conditions consume "__shard_view:T:…"
+    # tables while actions still produce "T", and without normalization
+    # every view-consuming rule looks parentless/childless — which broke
+    # lazy active-set pruning (every derivation rule was "QUERY"-typed)
+    # and hid recursion from the scheduler.
+    #
+    # Scheduling edges (children/levels) cover add AND delete targets —
+    # a delete rule should run after the producers of what it retracts.
+    # Derivation edges (``producers``, recursion marking) are add-only:
+    # a DeleteAction cannot re-derive its target, so a delete self-loop
+    # is idempotent, not recursive, and must not widen the scrub set.
+    sched_producers: dict[str, set[int]] = {}
+    add_producers: dict[str, set[int]] = {}
     for i, r in enumerate(rules):
         for t in r.output_types():
-            producers.setdefault(t, set()).add(i)
+            sched_producers.setdefault(base_fact_type(t), set()).add(i)
+        for a in r.actions:
+            if isinstance(a, AddAction):
+                add_producers.setdefault(
+                    base_fact_type(a.fact_type), set()).add(i)
     children: list[set[int]] = [set() for _ in range(n)]
     parents: list[set[int]] = [set() for _ in range(n)]
+    add_children: list[set[int]] = [set() for _ in range(n)]
+    recursive: set[int] = set()
     for i, r in enumerate(rules):
-        for t in r.input_types():
-            for p in producers.get(t, ()):
+        for c in r.conditions:
+            bt = base_fact_type(c.fact_type)
+            for p in sched_producers.get(bt, ()):
                 if p != i:
                     children[p].add(i)
                     parents[i].add(p)
+            for p in add_producers.get(bt, ()):
+                # derivation edge only if some add action of p can
+                # actually produce a row this condition matches — a rule
+                # writing T(x, seen, yes) does not recurse through its
+                # own T(x, flag, on) condition
+                if not any(isinstance(a, AddAction)
+                           and base_fact_type(a.fact_type) == bt
+                           and _may_feed(a, c)
+                           for a in rules[p].actions):
+                    continue
+                if p == i:
+                    recursive.add(i)
+                else:
+                    add_children[p].add(i)
     # Levels: longest-path depth over the SCC condensation (top-down).
     sccs = _tarjan_sccs(n, children)
     scc_of = {}
@@ -181,4 +283,9 @@ def build_derivation_trees(rules: list[Rule]) -> DerivationTrees:
     levels: list[list[int]] = [[] for _ in range(max_d + 1)]
     for si, scc in enumerate(sccs):
         levels[depth[si]].extend(sorted(scc))
-    return DerivationTrees(list(rules), children, parents, levels, sccs)
+    # multi-rule recursion over *derivation* edges only (see above)
+    for scc in _tarjan_sccs(n, add_children):
+        if len(scc) > 1:
+            recursive.update(scc)
+    return DerivationTrees(list(rules), children, parents, levels, sccs,
+                           recursive, add_producers)

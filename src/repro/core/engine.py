@@ -15,6 +15,7 @@ index backend (AI/HI/LPIM/LPID) × join (HJ/MJ) × RNL (AR/DR) × result layout
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -26,10 +27,10 @@ from repro.core.conditions import (AddAction, Condition, DeleteAction,
 from repro.core.derivation import DerivationTrees, build_derivation_trees
 from repro.core.facts import (Fact, ValueType, decode_value, encode_value,
                               facts_to_columns)
-from repro.core.islands import (_frontier_rows, build_islands,
-                                evaluate_rule)
+from repro.core.islands import (_dead_window_rows, _frontier_rows,
+                                build_islands, evaluate_rule)
 from repro.core.joins import Bindings
-from repro.core.store import FactStore, TypedFactTable
+from repro.core.store import FactStore, TypedFactTable, base_fact_type
 
 
 @dataclasses.dataclass
@@ -143,10 +144,24 @@ class InferStats:
     delta_passes: int = 0
     full_evals: int = 0
     rounds: list = dataclasses.field(default_factory=list)
+    # signed-frontier observability: −frontier passes run, derived facts
+    # that died when their support collapsed, explicit deletes absorbed
+    # by surviving support (compensated — fact set unchanged), and
+    # DRed-style over-delete/re-derive scrubs (recursive/tainted regions
+    # where counting is ambiguous)
+    neg_passes: int = 0
+    facts_retracted: int = 0
+    compensated_deletes: int = 0
+    dred_scrubs: int = 0
     # repeat-query fast path (EngineConfig.result_cache): queries served
     # straight from the decoded-result cache vs evaluated
     query_cache_hits: int = 0
     query_cache_misses: int = 0
+    # sharded non-decomposable queries: gathered-snapshot memo hits
+    # (repeat query at unchanged per-shard version tokens skips the
+    # re-gather) vs rebuilds
+    gather_hits: int = 0
+    gather_misses: int = 0
 
 
 def _pack_keys(ids: np.ndarray, attrs: np.ndarray) -> np.ndarray:
@@ -183,13 +198,17 @@ class _PackedKeyMemo:
         return keys
 
 
-def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
-                   vals: np.ndarray, ops: Ops | None = None,
-                   pk_memo: _PackedKeyMemo | None = None) -> np.ndarray:
-    """SU-path bulk dedup against the table: vectorized sorted anti-join on
-    the packed (id, attr) key with exact val verification."""
+def _match_rows(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
+                vals: np.ndarray, ops: Ops | None = None,
+                pk_memo: _PackedKeyMemo | None = None) -> np.ndarray:
+    """SU-path bulk lookup against the table: vectorized sorted join on
+    the packed (id, attr) key with exact val verification.  Returns, per
+    batch row, the matching *alive* table row id (or -1): the write side
+    uses it both as the dedup mask and as the target for support /
+    asserted maintenance."""
+    rowof = np.full(len(ids), -1, np.int64)
     if table.n == 0 or len(ids) == 0:
-        return np.zeros(len(ids), bool)
+        return rowof
     ops = ops or get_backend("numpy")
     key_new = _pack_keys(ids, attrs)
     if pk_memo is not None:
@@ -200,11 +219,17 @@ def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
                             rkeys_key=("pk", table.uid),
                             rkeys_version=table.version)
     if len(li) == 0:
-        return np.zeros(len(ids), bool)
+        return rowof
     ok = (vals[li] == table.vals[ri]) & table.alive[ri]
-    exists = np.zeros(len(ids), bool)
-    exists[li[ok]] = True
-    return exists
+    rowof[li[ok]] = ri[ok]
+    return rowof
+
+
+def _mask_existing(table: TypedFactTable, ids: np.ndarray, attrs: np.ndarray,
+                   vals: np.ndarray, ops: Ops | None = None,
+                   pk_memo: _PackedKeyMemo | None = None) -> np.ndarray:
+    """SU-path bulk dedup against the table (see ``_match_rows``)."""
+    return _match_rows(table, ids, attrs, vals, ops, pk_memo) >= 0
 
 
 def _resolve_shards(config: EngineConfig) -> int:
@@ -245,11 +270,22 @@ class HiperfactEngine:
         self._trees: DerivationTrees | None = None
         self._type_version: dict[str, int] = {}
         self._rule_seen_versions: dict[int, dict[str, int]] = {}
-        # semi-naive append watermarks: rule -> {ftype: (n, n_dead)} as
-        # of the rule's last evaluation.  The delta view of a condition
-        # is rows [n, table.n); a changed n_dead (tombstones) voids the
-        # frontier and forces the rule back to full evaluation.
+        # signed semi-naive watermarks: rule -> {ftype: (n, dellog_n)}
+        # as of the rule's last evaluation.  The +frontier of a
+        # condition is rows [n, table.n); the −frontier is the delete
+        # log slice [dellog_n, table.dellog_n) capped below n (deaths of
+        # rows the rule never saw alive cancel out of both frontiers).
         self._rule_watermarks: dict[int, dict[str, tuple[int, int]]] = {}
+        # counting-mode bookkeeping: whether this engine maintains
+        # per-fact support (delta/auto), which types carry *stale*
+        # support (outputs of rules that took a non-counting full
+        # fallback — deletes reaching them go through the DRed scrub),
+        # and how far the scrub detector has read each delete log.
+        self._counting = self.config.eval_mode in ("delta", "auto")
+        self._count_tainted: set[str] = set()
+        self._dellog_seen: dict[str, int] = {}
+        self._n_compensated = 0
+        self._comp_reported = 0
         self._pk_memo = _PackedKeyMemo()
         self.load_seconds = 0.0
         self.last_infer: InferStats = InferStats()
@@ -333,15 +369,17 @@ class HiperfactEngine:
         return self._trees
 
     # ---------------------------------------------------------------- write
-    def _insert_columns(self, ftype: str, ids, attrs, vals, valtypes) -> int:
+    def _insert_columns(self, ftype: str, ids, attrs, vals, valtypes,
+                        asserted: bool = True) -> int:
         table = self.store.table(ftype)
         if self.config.unique == "SU":
             if ((is_handle(ids) or is_handle(attrs) or is_handle(vals))
-                    and table.n_dead == 0):
+                    and table.n_dead == 0 and not asserted):
                 # device pipeline: dedup + anti-join on handles; only
                 # genuinely fresh rows are ever downloaded.  Tombstoned
                 # tables take the host path (the alive filter is host
-                # state the resident columns don't carry).
+                # state the resident columns don't carry); asserted
+                # inserts do too (existing matches must be re-marked).
                 n = self._insert_handles(table, ids, attrs, vals, valtypes)
             else:
                 ids, attrs, vals = (x.host() if is_handle(x) else x
@@ -352,24 +390,31 @@ class HiperfactEngine:
                     keep = self.ops.dedup_rows([ids, attrs, vals])
                     ids, attrs, vals, valtypes = (
                         ids[keep], attrs[keep], vals[keep], valtypes[keep])
-                exists = _mask_existing(table, ids, attrs, vals, self.ops,
-                                        self._pk_memo)
+                rowof = _match_rows(table, ids, attrs, vals, self.ops,
+                                    self._pk_memo)
+                exists = rowof >= 0
                 if exists.any():
+                    if asserted:
+                        # re-asserting a currently-derived fact: pin it
+                        # so support collapse alone cannot kill it
+                        table.mark_asserted(rowof[exists])
                     fresh = ~exists
                     ids, attrs, vals, valtypes = (
                         ids[fresh], attrs[fresh], vals[fresh],
                         valtypes[fresh])
-                n = table.insert(ids, attrs, vals, valtypes, dedup=False)
+                n = table.insert(ids, attrs, vals, valtypes, dedup=False,
+                                 asserted=asserted)
         else:  # HU: incremental hashtable dedup inside the table
             ids, attrs, vals = (x.host() if is_handle(x) else x
                                 for x in (ids, attrs, vals))
-            n = table.insert(ids, attrs, vals, valtypes, dedup=True)
+            n = table.insert(ids, attrs, vals, valtypes, dedup=True,
+                             asserted=asserted)
         if n:
             self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
         return n
 
     def _insert_handles(self, table: TypedFactTable, ids, attrs, vals,
-                        valtypes) -> int:
+                        valtypes, asserted: bool = False) -> int:
         """Write-side SU dedup/anti-join on ``DeviceCol`` handles.
 
         The batch dedup, the packed-key anti-join against the (resident)
@@ -404,9 +449,16 @@ class HiperfactEngine:
             return 0
         sel = h_sel.host()[:n]
         return table.insert(h_ids.host()[:n], h_attrs.host()[:n],
-                            h_vals.host()[:n], valtypes[sel], dedup=False)
+                            h_vals.host()[:n], valtypes[sel], dedup=False,
+                            asserted=asserted)
 
     def _delete_matching(self, ftype: str, ids, attrs, vals) -> int:
+        """Explicit retraction: drop the *assertion* on every matching
+        alive row.  Rows whose support is zero die (and enter the delete
+        log, so signed frontiers propagate the retraction); rows still
+        carried by derivations survive as compensated deletes — the fact
+        set, the data_version, and every downstream version token stay
+        untouched."""
         table = self.store.tables.get(ftype)
         if table is None or table.n == 0 or len(ids) == 0:
             return 0
@@ -419,10 +471,30 @@ class HiperfactEngine:
             return 0
         ok = (np.asarray(vals, np.int64)[li] == table.vals[ri]) & table.alive[ri]
         rows = np.unique(ri[ok])
-        if len(rows):
-            table.delete_rows(rows)
+        if len(rows) == 0:
+            return 0
+        dead, comp = table.retract_asserted(rows)
+        self._n_compensated += comp
+        if len(dead):
             self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
-        return len(rows)
+        return len(dead)
+
+    def delete_columns(self, ftype: str, ids, attrs, vals) -> int:
+        """Public retraction API (column form): delete every alive fact
+        of ``ftype`` matching an (id, attr, val) triple.  Returns the
+        number of rows that actually died; retractions absorbed by
+        surviving derivations are counted in
+        ``last_infer.compensated_deletes`` on the next ``infer()``."""
+        return self._delete_matching(
+            ftype, np.asarray(ids, np.int32), np.asarray(attrs, np.int32),
+            np.asarray(vals, np.int64))
+
+    def delete_facts(self, facts: list[Fact]) -> int:
+        n = 0
+        for ftype, cols in facts_to_columns(facts, self.store.strings).items():
+            n += self._delete_matching(ftype, cols["id"], cols["attr"],
+                                       cols["val"])
+        return n
 
     # -------------------------------------------------------------- actions
     def _slot_column(self, slot, bindings: Bindings, n: int,
@@ -458,13 +530,17 @@ class HiperfactEngine:
                     [x.host() if is_handle(x) else x for x in xs]))
         return tuple(out)
 
-    def _run_actions(self, rule: Rule, bindings: Bindings) -> tuple[dict, dict]:
+    def _run_actions(self, rule: Rule, bindings: Bindings,
+                     force_host: bool = False) -> tuple[dict, dict]:
         """Returns ({ftype: (ids, attrs, vals, valtypes)}, {ftype: (...)}) of
-        adds and deletes derived from the bindings."""
+        adds and deletes derived from the bindings.  ``force_host``
+        (counting passes) keeps every column on host: the device
+        write-side dedup would collapse the per-derivation multiplicity
+        the signed counts are made of."""
         adds: dict[str, list] = {}
         dels: dict[str, list] = {}
         n = bindings.n
-        use_handles = (self._pipeline and
+        use_handles = ((not force_host) and self._pipeline and
                        getattr(bindings, "device_backed", lambda: False)())
         for a in rule.actions:
             if isinstance(a, ExternalAction):
@@ -509,56 +585,177 @@ class HiperfactEngine:
         out = {}
         for t in rule.input_types():
             tab = self.store.tables.get(t)
-            out[t] = (tab.n, tab.n_dead) if tab is not None else (0, 0)
+            out[t] = (tab.n, tab.dellog_n) if tab is not None else (0, 0)
         return out
 
-    def _begin_rule_eval(self, ridx: int) -> dict[int, int] | None:
-        """Snapshot the rule's input watermarks and decide how this
-        evaluation runs: ``None`` -> one full pass; a dict (condition
-        index -> append frontier) -> semi-naive delta passes.
+    def _rule_delta_capability(self, ridx: int) -> str:
+        """How far the signed-frontier machinery carries this rule:
 
-        Delta is sound only for monotone derivations: rules with delete
-        or external actions, rules never evaluated before, and rules
-        whose input tables grew tombstones since the watermark all take
-        the full path.  Called from the scheduling thread *before* the
-        (possibly pooled) evaluation, while table state is quiescent.
+        * ``"add"`` — all actions are adds and every condition binds at
+          least one variable: derivation multiplicities are well defined,
+          so counting passes (±frontiers, distinct=False) are exact.
+        * ``"del"`` — all actions delete facts of the rule's own input
+          types: delete effects are idempotent (a dead row cannot die
+          again) and a scrub of the target type resets this rule too, so
+          +frontier passes alone are sound.
+        * ``"no"`` — external actions, variable-free (pure existence)
+          conditions, or mixed/foreign-target deletes: full fallback.
+        """
+        rule = self.rules[ridx]
+        if any(isinstance(a, ExternalAction) for a in rule.actions):
+            return "no"
+        if any(not c.variables() for c in rule.conditions):
+            # an existence gate contributes no multiplicity: the join
+            # emits one row whether 1 or k facts match, so per-derived-
+            # fact support counts would under/over-shoot on its deltas
+            return "no"
+        if all(isinstance(a, AddAction) for a in rule.actions):
+            return "add"
+        inputs = {base_fact_type(t) for t in rule.input_types()}
+        if (all(isinstance(a, DeleteAction) for a in rule.actions)
+                and all(base_fact_type(a.fact_type) in inputs
+                        for a in rule.actions)):
+            return "del"
+        return "no"
+
+    def _taint_rule_outputs(self, ridx: int) -> None:
+        """A non-counting full evaluation writes set-semantics facts with
+        no support: mark its output types so later deletes reaching them
+        take the DRed scrub (which rebuilds exact counts)."""
+        if not self._counting:
+            return
+        for a in self.rules[ridx].actions:
+            if isinstance(a, AddAction):
+                self._count_tainted.add(base_fact_type(a.fact_type))
+
+    def _begin_rule_eval(self, ridx: int) -> tuple | None:
+        """Snapshot the rule's input watermarks and decide how this
+        evaluation runs.  Returns one of:
+
+        * ``None`` — one plain full pass (set semantics);
+        * ``("init",)`` — counting full pass: ``distinct=False`` so every
+          derivation contributes +1 support (first evaluation, or after a
+          DRed scrub reset);
+        * ``("delta", passes)`` — signed semi-naive passes;
+          ``passes = [(sign, {cond_idx: frontier})]`` where a frontier is
+          an int (append window start) or an ndarray (−frontier: rows
+          from the delete log);
+        * ``("delpass", {cond_idx: start})`` — +frontier passes for an
+          idempotent delete rule.
+
+        The signed decomposition is inclusion–exclusion over the changed
+        conditions: with per-condition delta δᵢ = δ⁺ᵢ − δ⁻ᵢ,
+
+            Δ(⋈ᵢ newᵢ) = Σ_{∅≠S} (−1)^{|S|−1} ⋈_{i∈S} δᵢ ⋈_{j∉S} newⱼ
+
+        so every unpinned condition evaluates against the *current*
+        table state — no old-view reconstruction anywhere.  Called from
+        the scheduling thread *before* the (possibly pooled) evaluation,
+        while table state is quiescent.
         """
         rule = self.rules[ridx]
         old = self._rule_watermarks.get(ridx)
         self._note_rule_evaluated(ridx)
         new = self._table_marks(rule)
         self._rule_watermarks[ridx] = new
-        if self.config.eval_mode == "full" or old is None:
+        if self.config.eval_mode == "full":
+            return None
+        cap = self._rule_delta_capability(ridx)
+        if cap == "no":
+            self._taint_rule_outputs(ridx)
             return None
         if self.config.eval_mode == "auto" and self.config.rnl != "AR":
             # without the AR restriction a delta pass still joins the
             # full relations of the other conditions — k passes cost
             # more than one full evaluation, so auto stays full in DR
+            self._taint_rule_outputs(ridx)
             return None
-        if any(not isinstance(a, AddAction) for a in rule.actions):
-            return None  # deletes/externals observe non-delta bindings
+        if old is None:
+            # first evaluation (or scrub reset): counting init for add
+            # rules, plain full for delete rules (they keep no support)
+            return ("init",) if self._counting and cap == "add" else None
         for t, (n1, d1) in new.items():
             n0, d0 = old.get(t, (0, 0))
-            if d1 != d0 or n1 < n0:
-                return None  # tombstone churn: frontier is not a delta
-        deltas: dict[int, int] = {}
-        for i, c in enumerate(rule.conditions):
-            n0 = old.get(c.fact_type, (0, 0))[0]
-            n1 = new.get(c.fact_type, (0, 0))[0]
-            if n1 > n0:
-                deltas[i] = n0
-        if self.config.eval_mode == "auto" and deltas:
+            if n1 < n0 or d1 < d0:  # table replaced under us
+                self._taint_rule_outputs(ridx)
+                return None
+        if cap == "del":
+            wins = {}
+            for i, c in enumerate(rule.conditions):
+                n0 = old.get(c.fact_type, (0, 0))[0]
+                if new.get(c.fact_type, (0, 0))[0] > n0:
+                    wins[i] = n0
+            return ("delpass", wins)
+        passes = self._signed_passes(rule, old, new)
+        if passes is None:
+            self._taint_rule_outputs(ridx)
+            return None
+        if self.config.eval_mode == "auto" and passes:
             # semi-naive pays when the frontier is small relative to the
             # relations: a dense recursive closure (wordnet-style) grows
             # by ~half the table per round, and k delta-joins against
             # full relations then cost more than one full pass — auto
-            # falls back; eval_mode="delta" forces semi-naive regardless
-            grown = sum(new[t][0] - old.get(t, (0, 0))[0]
+            # falls back (tainting its outputs); eval_mode="delta"
+            # forces signed passes regardless
+            grown = sum(abs(new[t][0] - old.get(t, (0, 0))[0])
+                        + (new[t][1] - old.get(t, (0, 0))[1])
                         for t in rule.input_types())
             total = sum(new[t][0] for t in rule.input_types())
             if grown * 8 > total:
+                self._taint_rule_outputs(ridx)
                 return None
-        return deltas
+        return ("delta", passes)
+
+    _MAX_SIGNED_PASSES = 64
+
+    def _signed_passes(self, rule: Rule, old: dict, new: dict
+                       ) -> "list[tuple[int, dict]] | None":
+        """Expand the inclusion–exclusion sum into concrete passes.
+
+        Per condition the options are: unpinned (current state), +window
+        ``[n0, n)`` (appends since the watermark; the lookup's alive
+        filter is exact because any window row that died also died
+        in-window, so its +/− contributions cancel), and −window (delete
+        log slice, capped to rows ``< n0`` — deaths of rows this rule
+        never saw alive cancel out of both frontiers).  A −window pick
+        flips the pass sign once more: δᵢ = δ⁺ᵢ − δ⁻ᵢ.
+        Returns None when the pass count would exceed the cap.
+        """
+        opts: list[list] = []
+        any_window = False
+        for c in rule.conditions:
+            t = c.fact_type
+            n0, d0 = old.get(t, (0, 0))
+            n1, d1 = new.get(t, (0, 0))
+            o: list = [None]
+            if n1 > n0:
+                o.append((1, n0))
+            if d1 > d0:
+                tab = self.store.tables.get(t)
+                if tab is not None:
+                    w = tab.dellog[d0:d1]
+                    w = w[w < n0]
+                    if len(w):
+                        o.append((-1, w.astype(np.int32)))
+            if len(o) > 1:
+                any_window = True
+            opts.append(o)
+        if not any_window:
+            return []
+        total = 1
+        for o in opts:
+            total *= len(o)
+        if total - 1 > self._MAX_SIGNED_PASSES:
+            return None
+        passes: list[tuple[int, dict]] = []
+        for combo in itertools.product(*opts):
+            picked = [(i, x) for i, x in enumerate(combo) if x is not None]
+            if not picked:
+                continue
+            nneg = sum(1 for _, x in picked if x[0] < 0)
+            sign = (-1) ** (len(picked) - 1 + nneg)
+            passes.append((sign, {i: x[1] for i, x in picked}))
+        return passes
 
     def _rl_fn(self):
         if self.query_cache is None:
@@ -567,16 +764,33 @@ class HiperfactEngine:
         return lambda store, c: cache.lookup(
             store, c, self._type_version.get(c.fact_type, 0))
 
-    def _eval_one(self, ridx: int,
-                  plan: dict[int, int] | None = None
-                  ) -> tuple[int, dict, dict, dict]:
-        """Evaluate one rule: a single full pass (``plan is None``) or
-        the semi-naive decomposition — one pass per condition with a
-        non-empty append frontier, each seeing that condition's delta
-        and every other condition's full relation.  The union of the
-        passes covers every derivation that uses at least one new fact;
-        derivations from all-old rows were produced by earlier rounds
-        and would be dropped by the write-side dedup anyway."""
+    def _window_nonempty(self, c: Condition, w) -> bool:
+        """Cheap pre-check that a pinned frontier holds any rows matching
+        the condition's constant slots: both this scan and the one inside
+        ``_lookup_condition`` are O(Δ) tail filters, cheaper than setting
+        up a dead pass."""
+        if isinstance(w, np.ndarray):
+            return len(_dead_window_rows(self.store, c, w)) > 0
+        return len(_frontier_rows(self.store, c, w)) > 0
+
+    def _collect_signed(self, rule: Rule, bindings: Bindings, sign: int,
+                        parts: dict) -> None:
+        """Run the rule's add actions over counting bindings and stash the
+        emitted columns with the pass sign (multiplicity preserved)."""
+        if bindings.n == 0:
+            return
+        adds, _dels = self._run_actions(rule, bindings, force_host=True)
+        for t, cols in adds.items():
+            parts.setdefault(t, []).append((sign, cols))
+
+    def _eval_one(self, ridx: int, plan: tuple | None = None
+                  ) -> tuple[int, dict, dict, dict, dict]:
+        """Evaluate one rule under the plan from ``_begin_rule_eval``:
+        a single full pass (``None`` set-semantics / ``("init",)``
+        counting), the signed semi-naive decomposition (``("delta", …)``),
+        or +frontier delete passes (``("delpass", …)``).  The union of
+        the signed passes covers, with inclusion–exclusion multiplicity,
+        exactly the derivations gained and lost since the watermark."""
         rule = self.rules[ridx]
         cfg = self.config
         estats: dict = {"rows_considered": 0}
@@ -584,46 +798,216 @@ class HiperfactEngine:
                   sort_mode=cfg.sort_mode, distinct=True,
                   rl_fn=self._rl_fn(), ops=self.ops,
                   pipeline=self._pipeline, stats=estats)
+        signed: dict[str, list] = {}
         if plan is None:
             bindings = evaluate_rule(self.store, rule, **kw)
             adds, dels = self._run_actions(rule, bindings)
             estats["full_evals"] = 1
             estats["delta_passes"] = 0
-            return ridx, adds, dels, estats
-        # delta-eligible rules are add-only (_begin_rule_eval falls back
-        # to full for any rule with delete/external actions), so only
-        # adds can come out of the passes
-        adds_parts: dict[str, list] = {}
-        islands = None
+            return ridx, adds, dels, signed, estats
+        if plan[0] == "init":
+            # counting initialization: one full pass with multiplicity
+            # preserved — every derivation contributes +1 to its fact's
+            # support counter
+            kw["distinct"] = False
+            bindings = evaluate_rule(self.store, rule, **kw)
+            self._collect_signed(rule, bindings, 1, signed)
+            estats["full_evals"] = 1
+            estats["delta_passes"] = 0
+            return ridx, {}, {}, signed, estats
         # delta passes start from a tiny frontier, so planner quality is
         # irrelevant — the cheap tuple sort beats re-packing sort keys
         # once per pass
         kw["sort_mode"] = "fixed"
+        islands = None
         ran = 0
-        for i in sorted(plan):
-            # skip passes whose frontier holds no rows matching the
-            # delta condition: appends to a type only wake the
-            # conditions they can actually feed.  The pass re-scans the
-            # frontier inside _lookup_condition — both scans are O(Δ)
-            # tail filters, cheaper than setting up a dead pass.
-            if len(_frontier_rows(self.store, rule.conditions[i],
-                                  plan[i])) == 0:
+        if plan[0] == "delpass":
+            # idempotent delete rule: +frontier passes only — one per
+            # grown condition, each seeing that condition's appends and
+            # every other condition's current relation.  Deaths never
+            # un-fire a delete, so −frontiers are unnecessary.
+            wins = plan[1]
+            dels_parts: dict[str, list] = {}
+            for i in sorted(wins):
+                if not self._window_nonempty(rule.conditions[i], wins[i]):
+                    continue
+                if islands is None:
+                    islands = build_islands(self.store, rule)
+                ran += 1
+                bindings = evaluate_rule(self.store, rule, islands=islands,
+                                         delta_for={i: wins[i]}, **kw)
+                if bindings.n == 0:
+                    continue
+                _adds, dels = self._run_actions(rule, bindings)
+                for t, cols in dels.items():
+                    dels_parts.setdefault(t, []).append(cols)
+            estats["full_evals"] = 0
+            estats["delta_passes"] = ran
+            return (ridx, {},
+                    {t: self._cat_parts(p) for t, p in dels_parts.items()},
+                    signed, estats)
+        # plan[0] == "delta": signed counting passes
+        kw["distinct"] = False
+        negs = 0
+        for sign, windows in plan[1]:
+            if not all(self._window_nonempty(rule.conditions[i], w)
+                       for i, w in windows.items()):
                 continue
             if islands is None:
                 islands = build_islands(self.store, rule)
             ran += 1
+            if any(isinstance(w, np.ndarray) for w in windows.values()):
+                negs += 1
             bindings = evaluate_rule(self.store, rule, islands=islands,
-                                     delta_for={i: plan[i]}, **kw)
-            if bindings.n == 0:
-                continue
-            adds, _dels = self._run_actions(rule, bindings)
-            for t, cols in adds.items():
-                adds_parts.setdefault(t, []).append(cols)
+                                     delta_for=dict(windows), **kw)
+            self._collect_signed(rule, bindings, sign, signed)
         estats["full_evals"] = 0
         estats["delta_passes"] = ran
-        return (ridx,
-                {t: self._cat_parts(p) for t, p in adds_parts.items()},
-                {}, estats)
+        estats["neg_passes"] = negs
+        return ridx, {}, {}, signed, estats
+
+    # ------------------------------------------------- counting application
+    def _signed_counts(self, batches: list) -> tuple | None:
+        """Aggregate signed per-derivation emissions into one net count
+        per distinct fact (sorted segmented reduction); zero-net facts —
+        a derivation lost and another gained in the same round — drop out
+        here and never touch the table."""
+        ids = np.concatenate([np.asarray(c[0], np.int64) for _, c in batches])
+        if len(ids) == 0:
+            return None
+        attrs = np.concatenate([np.asarray(c[1], np.int64)
+                                for _, c in batches])
+        vals = np.concatenate([np.asarray(c[2], np.int64) for _, c in batches])
+        valtypes = np.concatenate([np.asarray(c[3], np.int8)
+                                   for _, c in batches])
+        signs = np.concatenate([np.full(len(c[0]), s, np.int64)
+                                for s, c in batches])
+        key = _pack_keys(ids, attrs)
+        order = np.lexsort((vals, key))
+        k, v = key[order], vals[order]
+        starts = np.flatnonzero(np.concatenate(
+            ([True], (k[1:] != k[:-1]) | (v[1:] != v[:-1]))))
+        net = np.add.reduceat(signs[order], starts)
+        sel = order[starts]
+        keep = net != 0
+        sel = sel[keep]
+        if len(sel) == 0:
+            return None
+        return (ids[sel].astype(np.int32), attrs[sel].astype(np.int32),
+                vals[sel], valtypes[sel], net[keep].astype(np.int32))
+
+    def _apply_counts(self, ftype: str, ids, attrs, vals, valtypes, net
+                      ) -> tuple[int, int]:
+        """Apply net derivation counts to a table: positive nets bump
+        support (inserting unseen facts as derived rows), negative nets
+        retract support — a fact whose support collapses to zero with no
+        assertion left dies and enters the delete log."""
+        table = self.store.table(ftype)
+        rowof = _match_rows(table, ids, attrs, vals, self.ops, self._pk_memo)
+        hit = rowof >= 0
+        n_new = n_dead = 0
+        pos = hit & (net > 0)
+        if pos.any():
+            table.add_support(rowof[pos], net[pos])
+        fresh = ~hit & (net > 0)
+        if fresh.any():
+            start = table.n
+            table.insert(ids[fresh], attrs[fresh], vals[fresh],
+                         valtypes[fresh], dedup=False, asserted=False)
+            table.add_support(np.arange(start, table.n, dtype=np.int64),
+                              net[fresh])
+            n_new = table.n - start
+        neg = hit & (net < 0)
+        if neg.any():
+            d0 = table.dellog_n
+            dead = table.retract_support(rowof[neg], -net[neg])
+            n_dead = len(dead)
+            if n_dead:
+                self._on_deaths(ftype, table, d0)
+        # negative net on a missing fact: stale support (tainted type) —
+        # the DRed scrub path rebuilds it, nothing to do here
+        if n_new or n_dead:
+            self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
+        return n_new, n_dead
+
+    def _on_deaths(self, ftype: str, table: TypedFactTable, d0: int) -> None:
+        """Hook: rows ``table.dellog[d0:]`` just died outside the explicit
+        delete router (support collapse or scrub).  The sharded engine
+        overrides this to retire the dead rows' view copies; the local
+        engine needs nothing."""
+
+    # ------------------------------------------------------ DRed scrub path
+    def _unsafe_delete_types(self, trees: DerivationTrees) -> set[str]:
+        """Types whose deaths counting cannot propagate exactly: inputs
+        of recursive rules (a fact may support its own rederivation),
+        tainted types (stale support), and inputs of rules whose outputs
+        are tainted (those rules run non-counting fallbacks)."""
+        unsafe = trees.recursive_input_types() | set(self._count_tainted)
+        if self._count_tainted:
+            for r in self.rules:
+                if any(isinstance(a, AddAction)
+                       and base_fact_type(a.fact_type) in self._count_tainted
+                       for a in r.actions):
+                    unsafe.update(base_fact_type(t) for t in r.input_types())
+        return unsafe
+
+    def _check_death_frontiers(self, stats: InferStats) -> bool:
+        """Detect deaths the signed frontiers cannot absorb and run the
+        DRed-style over-delete/re-derive scrub.  In full mode every death
+        reaching a consumer triggers it (that is how full mode gains
+        retraction semantics at all); in counting mode only deaths in
+        ambiguous regions (recursive inputs, tainted types) do — exact
+        counting handles the rest as −frontier passes with zero scrubs."""
+        trees = self.trees()
+        fresh: set[str] = set()
+        for name, tab in self.store.tables.items():
+            if tab.dellog_n > self._dellog_seen.get(name, 0):
+                fresh.add(base_fact_type(name))
+        if not fresh:
+            return False
+        triggers = (fresh & self._unsafe_delete_types(trees)
+                    if self._counting else fresh)
+        rules_reset: set[int] = set()
+        out_types: set[str] = set()
+        if triggers:
+            # downstream() seeds derived trigger types into the scrub
+            # set, so a deleted fact that is still derivable comes back
+            # when its (reset) producers re-run
+            rules_reset, out_types = trees.downstream(triggers)
+        if not rules_reset:
+            # deaths nobody consumes (or absorbed by counting): just
+            # advance the scrub detector — per-rule signed watermarks
+            # still see them as −frontiers
+            for name, tab in self.store.tables.items():
+                self._dellog_seen[name] = tab.dellog_n
+            return False
+        self._scrub(rules_reset, out_types, stats)
+        return True
+
+    def _scrub(self, rules_reset: set[int], out_types: set[str],
+               stats: InferStats) -> None:
+        """Over-delete: tombstone every non-asserted row of the affected
+        output types and zero their support; re-derive: reset the
+        affected rules' watermarks so their next evaluation is a full
+        counting init.  Scrub deaths are pre-acknowledged everywhere —
+        the reset rules rebuild from scratch and every other rule, by
+        construction of the downstream closure, never consumed the
+        scrubbed types."""
+        for name, tab in self.store.tables.items():
+            if base_fact_type(name) in out_types:
+                d0 = tab.dellog_n
+                dead = tab.scrub_derived()
+                if len(dead):
+                    self._type_version[name] = (
+                        self._type_version.get(name, 0) + 1)
+                    self._on_deaths(name, tab, d0)
+        for r in rules_reset:
+            self._rule_watermarks.pop(r, None)
+            self._rule_seen_versions.pop(r, None)
+        self._count_tainted -= out_types
+        for name, tab in self.store.tables.items():
+            self._dellog_seen[name] = tab.dellog_n
+        stats.dred_scrubs += 1
 
     def infer(self) -> InferStats:
         """Run the inference loop (Fig. 1) to fixpoint."""
@@ -639,6 +1023,11 @@ class HiperfactEngine:
             while changed and stats.iterations < cfg.max_iterations:
                 changed = False
                 stats.iterations += 1
+                # deaths since the last round (or from deletes between
+                # infer calls) that signed frontiers cannot absorb
+                # trigger the DRed scrub before the round's evaluations
+                if self._check_death_frontiers(stats):
+                    changed = True
                 round_rows = 0
                 round_emitted = 0
                 for level in trees.levels:
@@ -659,7 +1048,7 @@ class HiperfactEngine:
                     # Algorithm 2: islands + sort keys rebuilt per level
                     # (cardinalities moved); groups own disjoint output types.
                     groups = trees.out_groups(level_rules, set(level_rules))
-                    results: list[tuple[int, dict, dict, dict]] = []
+                    results: list[tuple[int, dict, dict, dict, dict]] = []
                     if pool is not None and cfg.tree_exec == "PF" and len(groups) > 1:
                         futs = []
                         for g in groups:
@@ -675,22 +1064,29 @@ class HiperfactEngine:
                                     self._eval_one(r,
                                                    self._begin_rule_eval(r)))
                     stats.rules_evaluated += len(results)
-                    for _, _, _, es in results:
+                    for _, _, _, _, es in results:
                         round_rows += es.get("rows_considered", 0)
                         stats.delta_passes += es.get("delta_passes", 0)
                         stats.full_evals += es.get("full_evals", 0)
+                        stats.neg_passes += es.get("neg_passes", 0)
                     # Writes: PW = concurrent per disjoint fact type;
-                    # SW = sequential in schedule order.
+                    # SW = sequential in schedule order.  Set-semantics
+                    # adds (full fallbacks), explicit deletes, then the
+                    # signed counting application.
                     by_type_adds: dict[str, list] = {}
                     by_type_dels: dict[str, list] = {}
-                    for _, adds, dels, _es in results:
+                    by_type_signed: dict[str, list] = {}
+                    for _, adds, dels, signed, _es in results:
                         for t, cols in adds.items():
                             by_type_adds.setdefault(t, []).append(cols)
                         for t, cols in dels.items():
                             by_type_dels.setdefault(t, []).append(cols)
+                        for t, batches in signed.items():
+                            by_type_signed.setdefault(t, []).extend(batches)
 
                     def _write_type(t: str, parts: list) -> int:
-                        return self._insert_columns(t, *self._cat_parts(parts))
+                        return self._insert_columns(
+                            t, *self._cat_parts(parts), asserted=False)
 
                     if pool is not None and cfg.index_write == "PW" and len(by_type_adds) > 1:
                         futs = {t: pool.submit(_write_type, t, p)
@@ -704,6 +1100,15 @@ class HiperfactEngine:
                         ndel = self._delete_matching(t, cols[0], cols[1], cols[2])
                         stats.facts_deleted += ndel
                         changed |= ndel > 0
+                    for t, batches in by_type_signed.items():
+                        cnt = self._signed_counts(batches)
+                        if cnt is None:
+                            continue
+                        nn, nd = self._apply_counts(t, *cnt)
+                        stats.facts_inferred += nn
+                        stats.facts_retracted += nd
+                        round_emitted += nn
+                        changed |= (nn + nd) > 0
                     n_new = sum(wrote.values())
                     stats.facts_inferred += n_new
                     round_emitted += n_new
@@ -716,6 +1121,10 @@ class HiperfactEngine:
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
+        # compensations since the last infer() — covers both in-round
+        # DeleteAction absorptions and out-of-band delete_facts() calls
+        stats.compensated_deletes = self._n_compensated - self._comp_reported
+        self._comp_reported = self._n_compensated
         stats.seconds = time.perf_counter() - t0
         self.last_infer = stats
         return stats

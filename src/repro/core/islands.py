@@ -226,6 +226,27 @@ def _frontier_rows(store: FactStore, c: Condition, start: int) -> np.ndarray:
     return table.filter_alive(rows)
 
 
+def _dead_window_rows(store: FactStore, c: Condition,
+                      rows: np.ndarray) -> np.ndarray:
+    """O(Δ) fetch of a condition's −frontier: const-filter an explicit
+    row list taken from the table's delete log.  The rows are tombstoned
+    *now* but their columns are intact (tombstones never touch columns),
+    so the filters see the values the facts died with; there is no alive
+    filter — being dead is the point."""
+    table = store.tables.get(c.fact_type)
+    if table is None or len(rows) == 0:
+        return np.empty(0, np.int32)
+    consts = c.const_slots(store.strings)
+    if any(v == -1 for _, v in consts):
+        return np.empty(0, np.int32)
+    rows = np.asarray(rows, np.int32)
+    for comp, v in consts:
+        if len(rows) == 0:
+            break
+        rows = rows[table.column(comp)[rows] == v]
+    return rows
+
+
 def _probe_rows(store: FactStore, c: Condition, acc: Bindings,
                 ) -> tuple[np.ndarray, str] | None:
     """AR restriction via the rank-1 index: when the accumulated buffer
@@ -255,7 +276,7 @@ def _probe_rows(store: FactStore, c: Condition, acc: Bindings,
 def _lookup_condition(
     store: FactStore, c: Condition, acc: Bindings | None, rnl_mode: str,
     layout: str, rl_fn=None, ops: Ops | None = None,
-    pipeline: bool = False, delta_start: int = 0,
+    pipeline: bool = False, delta_start: "int | np.ndarray" = 0,
     stats: dict | None = None,
 ) -> Bindings:
     """RL lookup for one condition -> its binding table.
@@ -265,11 +286,16 @@ def _lookup_condition(
     to the bound value set before the join — the paper's rank-raising lookup.
     DR performs the plain RL lookup.
 
-    ``delta_start`` selects the condition's *append frontier* (semi-naive
-    evaluation): only rows ``>= delta_start`` — facts appended since the
-    owning rule's watermark — are fetched.  Tables are append-only (row
-    ids are positions; deletes are tombstones and force the caller back
-    to full evaluation), so the frontier is exactly ``[watermark, n)``.
+    ``delta_start`` selects the condition's *signed frontier* (semi-naive
+    evaluation).  An ``int`` start pins the +frontier: only rows
+    ``>= delta_start`` — facts appended since the owning rule's
+    watermark — are fetched (columns are append-only, so the window is
+    exactly ``[watermark, n)``).  An ``ndarray`` pins the −frontier: the
+    explicit row ids (from the table's delete log) of facts that *died*
+    in the window; they are const-filtered but never alive-filtered.
+    Every unpinned condition sees the current relation — the caller
+    combines passes with inclusion–exclusion signs so the net change is
+    exact under counting semantics.
 
     The RL fetch itself is a rank-1 index probe: with the device backend
     it binary-searches the index's cached host mirrors, so repeated
@@ -289,6 +315,9 @@ def _lookup_condition(
     """
     table = store.tables.get(c.fact_type)
     pipeline = pipeline and layout == "CR" and ops is not None
+    neg_rows = delta_start if isinstance(delta_start, np.ndarray) else None
+    if neg_rows is not None:
+        delta_start = -1  # cache-key tag; windows skip the handle cache
     # delta windows never recur (the watermark advances every round), so
     # they skip the handle cache entirely and upload as transient state
     cache = (getattr(ops, "cache", None)
@@ -300,7 +329,9 @@ def _lookup_condition(
     if handles is None:
         # a cache hit implies the same rows (rl is deterministic at a
         # fixed data_version), so the RL fetch runs only on a miss
-        if delta_start and rl_fn is None:
+        if neg_rows is not None:
+            rows = _dead_window_rows(store, c, neg_rows)
+        elif delta_start and rl_fn is None:
             rows = _frontier_rows(store, c, delta_start)
         elif (not pipeline and rl_fn is None and rnl_mode == "AR"
               and acc is not None and table is not None
@@ -341,7 +372,7 @@ def _lookup_condition(
                 k: ops.upload_resident(
                     ("bindcol", table.uid, c, k, delta_start),
                     table.data_version, v, assume_prefix,
-                    transient=delta_start > 0)
+                    transient=delta_start != 0)
                 for k, v in cols.items()}
             if cache is not None:
                 cache.put(("bind", table.uid, c, delta_start),
@@ -405,7 +436,7 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                   islands: list[Island] | None = None,
                   rl_fn=None, ops: Ops | None = None,
                   pipeline: bool | None = None,
-                  delta_for: dict[int, int] | None = None,
+                  delta_for: "dict[int, int | np.ndarray] | None" = None,
                   stats: dict | None = None) -> Bindings:
     """Full island-based evaluation of one rule -> final binding table.
 
@@ -418,20 +449,25 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
     device backends, off for the host backend.  CR layout only (RR is
     the paper's internal-evaluation loser and stays host-side).
 
-    ``delta_for`` maps rule-condition indices to append frontiers (row
-    watermarks): one semi-naive pass where the named conditions see only
-    rows ``>= frontier`` and every other condition sees the full
-    relation.  The delta condition's island is evaluated first so the AR
-    restriction propagates the (small) frontier through the chain —
-    this is what makes a fixpoint round cost O(Δ) instead of O(N).
+    ``delta_for`` maps rule-condition indices to signed frontiers: an
+    ``int`` append watermark (the condition sees only rows ``>=
+    frontier``) or an ``ndarray`` of delete-log rows (the condition sees
+    only facts that died in the window).  One pass evaluates with every
+    named condition pinned to its window and every other condition on
+    the full current relation; the engine combines such passes with
+    inclusion–exclusion signs.  A pinned island is evaluated first so
+    the AR restriction propagates the (small) frontier through the
+    chain — this is what makes a fixpoint round cost O(Δ) instead of
+    O(N).
     """
     if islands is None:
         islands = build_islands(store, rule)
     if pipeline is None:
         pipeline = bool(getattr(ops, "prefer_handles", False))
     pipeline = pipeline and layout == "CR" and ops is not None
-    delta_for = {i: s for i, s in (delta_for or {}).items() if s > 0} \
-        if delta_for is not None else None
+    if delta_for is not None:
+        delta_for = {i: s for i, s in delta_for.items()
+                     if (len(s) if isinstance(s, np.ndarray) else s) > 0}
     prefer = set(delta_for) if delta_for else None
     ordered = order_islands(islands, prefer)
     # A join test (Def. 9) fires as soon as its operands are bound (the
@@ -444,8 +480,12 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
             ds = delta_for.get(st.index, 0) if delta_for else 0
             if not st.cond.variables():
                 # variable-free (rank-3) condition == existence filter
+                # (counting engines never pin these: existence is not a
+                # multiplicity, so such rules take the full/scrub path)
                 rows = (rl_fn or rl)(store, st.cond)
-                if ds:
+                if isinstance(ds, np.ndarray):
+                    rows = _dead_window_rows(store, st.cond, ds)
+                elif ds:
                     rows = rows[rows >= ds]
                 if len(rows) == 0:
                     return make_bindings(

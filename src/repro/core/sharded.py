@@ -58,10 +58,13 @@ from repro.core.engine import (EngineConfig, HiperfactEngine, InferStats,
                                _resolve_shards, decode_bindings)
 from repro.core.facts import ValueType, decode_value
 from repro.core.islands import evaluate_rule
-from repro.core.store import Component, FactStore
+from repro.core.store import Component, FactStore, base_fact_type
 
 VIEW_PREFIX = "__shard_view:"
-_ADD, _DEL = 0, 1
+# exchange row kinds (meta lane bits 8..15): asserted insert, explicit
+# delete, derived (non-asserted) insert, signed support delta (net count
+# in meta bits 32..63)
+_ADD, _DEL, _ADD_DERIVED, _SUP = 0, 1, 2, 3
 
 
 def view_name(ftype: str, comp: "Component | None") -> str:
@@ -193,7 +196,8 @@ class _ShardWorker(HiperfactEngine):
         self.store.strings = parent.store.strings  # ONE dictionary
         self._result_cache = None  # the parent caches query results
 
-    def _insert_columns(self, ftype, ids, attrs, vals, valtypes) -> int:
+    def _insert_columns(self, ftype, ids, attrs, vals, valtypes,
+                        asserted: bool = True) -> int:
         ids, attrs, vals = (x.host() if is_handle(x) else x
                             for x in (ids, attrs, vals))
         ids = np.asarray(ids, np.int32)
@@ -203,7 +207,7 @@ class _ShardWorker(HiperfactEngine):
         if len(ids) == 0:
             return 0
         return self.parent._route_add(ftype, ids, attrs, vals, valtypes,
-                                      src=self.shard)
+                                      src=self.shard, asserted=asserted)
 
     def _delete_matching(self, ftype, ids, attrs, vals) -> int:
         ids = np.asarray(ids, np.int32)
@@ -213,6 +217,25 @@ class _ShardWorker(HiperfactEngine):
             return 0
         return self.parent._route_del(ftype, ids, attrs, vals,
                                       src=self.shard)
+
+    def _apply_counts(self, ftype, ids, attrs, vals, valtypes, net):
+        # signed support counts are owner state: rows hashing home apply
+        # immediately, foreign rows ride the exchange as _SUP entries
+        # (net count packed into the meta lane)
+        return self.parent._route_counts(ftype, ids, attrs, vals, valtypes,
+                                         net, src=self.shard)
+
+    def _on_deaths(self, ftype, table, d0) -> None:
+        # support collapse / scrub killed owner rows outside the delete
+        # router: their view copies on every shard must die too
+        if not ftype.startswith(VIEW_PREFIX):
+            self.parent._route_view_dels(self.shard, ftype, table, d0)
+
+    def _scrub(self, rules_reset, out_types, stats) -> None:
+        # derived rows of the scrubbed types live on EVERY shard — a
+        # local over-delete/re-derive would leave the other partitions
+        # (and their view copies) stale, so scrubs are global
+        self.parent._global_scrub(self.shard, rules_reset, out_types, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +269,12 @@ class ShardedEngine(HiperfactEngine):
         self.exchange = FrontierExchange(
             self.n_shards, prefer_device=config.backend != "numpy")
         self.exchange_log: list[dict] = []
-        self._gather_memo: tuple | None = None
+        # per-types-tuple memo of gathered snapshots, invalidated by the
+        # shard version-token vector (satellite: repeat non-decomposable
+        # queries skip the re-gather)
+        self._gather_memo: dict[tuple, tuple] = {}
+        self._scrub_sync = False   # inside _global_scrub: view dels apply
+        self._scrub_round = False  # a scrub reset rules this round
 
     # ------------------------------------------------------------------ API
     def add_rule(self, rule: Rule) -> None:
@@ -283,10 +311,15 @@ class ShardedEngine(HiperfactEngine):
                 agg.rows_considered += st.rows_considered
                 agg.rows_emitted += st.rows_emitted
                 agg.delta_passes += st.delta_passes
+                agg.neg_passes += st.neg_passes
                 agg.full_evals += st.full_evals
+                agg.facts_retracted += st.facts_retracted
+                agg.compensated_deletes += st.compensated_deletes
+                agg.dred_scrubs += st.dred_scrubs
             fresh, changed, log = self._flush_outbox("infer")
             agg.facts_inferred += log["owner_fresh"]
             agg.facts_deleted += log["owner_deleted"]
+            agg.facts_retracted += log["retracted"]
             agg.rounds.append({
                 "round": rounds,
                 "worker_seconds": worker_secs,
@@ -296,8 +329,12 @@ class ShardedEngine(HiperfactEngine):
                 "a2a_padded_bytes": log["padded_bytes"],
                 "applied_fresh": changed,
             })
-            if changed == 0:
+            if changed == 0 and not self._scrub_round:
+                # a scrub resets rules on ALL workers, including ones
+                # that already ran this round — force one more round so
+                # their counting re-init happens before convergence
                 break
+            self._scrub_round = False
         agg.iterations = rounds
         agg.seconds = time.perf_counter() - t0
         self.last_infer = agg
@@ -364,7 +401,8 @@ class ShardedEngine(HiperfactEngine):
         return tuple(out)
 
     # ---------------------------------------------------------------- write
-    def _insert_columns(self, ftype, ids, attrs, vals, valtypes) -> int:
+    def _insert_columns(self, ftype, ids, attrs, vals, valtypes,
+                        asserted: bool = True) -> int:
         ids, attrs, vals = (x.host() if is_handle(x) else x
                             for x in (ids, attrs, vals))
         ids = np.asarray(ids, np.int32)
@@ -373,8 +411,9 @@ class ShardedEngine(HiperfactEngine):
         valtypes = np.asarray(valtypes, np.int8)
         if len(ids) == 0:
             return 0
-        self._route_add(ftype, ids, attrs, vals, valtypes, src=None)
-        fresh, _changed, _log = self._flush_outbox("load")
+        self._route_add(ftype, ids, attrs, vals, valtypes, src=None,
+                        asserted=asserted)
+        fresh, _deleted = self._flush_until_drained("load")
         if fresh:
             self._type_version[ftype] = self._type_version.get(ftype, 0) + 1
         return fresh
@@ -386,8 +425,21 @@ class ShardedEngine(HiperfactEngine):
         if len(ids) == 0:
             return 0
         self._route_del(ftype, ids, attrs, vals, src=None)
-        _fresh, _changed, log = self._flush_outbox("delete")
-        return log["owner_deleted"]
+        # owner deaths fan out view retirements one exchange hop later,
+        # so drain the outbox completely before returning
+        _fresh, deleted = self._flush_until_drained("delete")
+        return deleted
+
+    def _flush_until_drained(self, phase: str) -> tuple[int, int]:
+        fresh = deleted = 0
+        while True:
+            f, _changed, log = self._flush_outbox(phase)
+            fresh += f
+            deleted += log["owner_deleted"]
+            with self._lock:
+                pending = any(self._outbox)
+            if not pending:
+                return fresh, deleted
 
     # --------------------------------------------------------------- router
     def _targets(self, ftype, ids, attrs, vals):
@@ -403,13 +455,21 @@ class ShardedEngine(HiperfactEngine):
                 targets.append((view_name(ftype, comp), shard_of(col, D)))
         return targets
 
-    def _route_add(self, ftype, ids, attrs, vals, valtypes, src) -> int:
+    def _route_add(self, ftype, ids, attrs, vals, valtypes, src,
+                   asserted: bool = True) -> int:
         """Partition an insert batch into owner + view copies.  Rows for
         shard ``src`` (the caller) apply immediately so its local
         fixpoint continues; the rest go to the outbox.  Returns the
-        locally inserted fresh owner-row count."""
+        locally inserted fresh owner-row count.
+
+        Counting state (support/asserted) lives on the OWNER row only:
+        view copies always insert as plain asserted rows and are retired
+        exclusively by ``_route_view_dels`` when their owner row dies."""
         wrote = 0
+        okind = _ADD if asserted else _ADD_DERIVED
         for tname, owner in self._targets(ftype, ids, attrs, vals):
+            is_view = tname != ftype
+            kind = _ADD if is_view else okind
             for d in range(self.n_shards):
                 if owner is None:
                     part = (ids, attrs, vals, valtypes)
@@ -420,18 +480,150 @@ class ShardedEngine(HiperfactEngine):
                     part = (ids[m], attrs[m], vals[m], valtypes[m])
                 if src is not None and d == src:
                     n = HiperfactEngine._insert_columns(
-                        self.workers[d], tname, *part)
-                    if tname == ftype:
+                        self.workers[d], tname, *part,
+                        asserted=is_view or asserted)
+                    if not is_view:
                         wrote += n
                 else:
-                    self._enqueue(src or 0, d, tname, _ADD, part)
+                    self._enqueue(src or 0, d, tname, kind, part)
         return wrote
 
     def _route_del(self, ftype, ids, attrs, vals, src) -> int:
+        """Route explicit deletes to the OWNER partition only.  The
+        owner decides the outcome: a retraction absorbed by surviving
+        derivation support (compensated delete) leaves the row — and
+        therefore every view copy — alive; actual deaths fan out to the
+        views via ``_route_view_dels``."""
         deleted = 0
         zeros = np.zeros(len(ids), np.int8)
-        for tname, owner in self._targets(ftype, ids, attrs, vals):
-            for d in range(self.n_shards):
+        owner = shard_of(ids, self.n_shards)
+        for d in range(self.n_shards):
+            m = owner == d
+            if not m.any():
+                continue
+            part = (ids[m], attrs[m], vals[m], zeros[:int(m.sum())])
+            if src is not None and d == src:
+                deleted += self._apply_del_local(
+                    d, ftype, part[0], part[1], part[2])
+            else:
+                self._enqueue(src or 0, d, ftype, _DEL, part)
+        return deleted
+
+    def _apply_del_local(self, d, tname, ids, attrs, vals) -> int:
+        """Apply an owner-table delete on shard ``d`` and fan the actual
+        deaths (dellog growth) out to the registered views."""
+        w = self.workers[d]
+        tab = w.store.tables.get(tname)
+        d0 = tab.dellog_n if tab is not None else 0
+        n = HiperfactEngine._delete_matching(w, tname, ids, attrs, vals)
+        if n and tab is not None and not tname.startswith(VIEW_PREFIX):
+            self._route_view_dels(d, tname, tab, d0)
+        return n
+
+    def _route_counts(self, ftype, ids, attrs, vals, valtypes, net, src):
+        """Partition a signed support batch by owner shard.  The local
+        part applies immediately; foreign rows ride the exchange as
+        ``_SUP`` entries with the net count packed into meta bits
+        32..63.  Returns (fresh rows, dead rows) applied locally."""
+        nn = nd = 0
+        owner = shard_of(ids, self.n_shards)
+        for d in range(self.n_shards):
+            m = owner == d
+            if not m.any():
+                continue
+            if src is not None and d == src:
+                a, b = self._apply_counts_local(
+                    d, ftype, ids[m], attrs[m], vals[m], valtypes[m], net[m])
+                nn += a
+                nd += b
+            else:
+                self._enqueue(src or 0, d, ftype, _SUP,
+                              (ids[m], attrs[m], vals[m], valtypes[m],
+                               net[m]))
+        return nn, nd
+
+    def _apply_counts_local(self, d, ftype, ids, attrs, vals, valtypes,
+                            net) -> tuple[int, int]:
+        """Apply signed support deltas to shard ``d``'s owner table and
+        propagate the consequences: fresh derived rows get view copies
+        enqueued; deaths reach the views via the worker's ``_on_deaths``
+        override (fired inside the base ``_apply_counts``)."""
+        if len(ids) > 1:
+            # several workers may derive the same fact: their _SUP
+            # batches concatenate in one exchange group, but the base
+            # _apply_counts requires one row per fact — re-aggregate
+            order = np.lexsort((vals, attrs, ids))
+            ids, attrs, vals, valtypes, net = (
+                x[order] for x in (ids, attrs, vals, valtypes, net))
+            starts = np.empty(len(ids), bool)
+            starts[0] = True
+            starts[1:] = ((ids[1:] != ids[:-1]) | (attrs[1:] != attrs[:-1])
+                          | (vals[1:] != vals[:-1]))
+            first = np.flatnonzero(starts)
+            net = np.add.reduceat(net, first).astype(np.int32)
+            keep = net != 0
+            first = first[keep]
+            net = net[keep]
+            ids, attrs, vals, valtypes = (x[first] for x in
+                                          (ids, attrs, vals, valtypes))
+        if len(ids) == 0:
+            return 0, 0
+        w = self.workers[d]
+        tab = w.store.table(ftype)
+        n0 = tab.n
+        nn, nd = HiperfactEngine._apply_counts(
+            w, ftype, ids, attrs, vals, valtypes, net)
+        if tab.n > n0 and self._views.get(ftype):
+            rows = np.arange(n0, tab.n)
+            self._route_view_adds(d, ftype, tab.ids[rows], tab.attrs[rows],
+                                  tab.vals[rows], tab.valtypes[rows])
+        return nn, nd
+
+    def _route_view_adds(self, src, ftype, ids, attrs, vals, valtypes
+                         ) -> None:
+        """Enqueue view copies (always plain asserted rows) of freshly
+        materialized owner rows for every registered view of ``ftype``."""
+        D = self.n_shards
+        for comp in self._views.get(ftype, ()):
+            vname = view_name(ftype, comp)
+            if comp is None:
+                owner = None
+            else:
+                owner = shard_of((ids, attrs, vals)[int(comp)], D)
+            for d in range(D):
+                if owner is None:
+                    part = (ids, attrs, vals, valtypes)
+                else:
+                    m = owner == d
+                    if not m.any():
+                        continue
+                    part = (ids[m], attrs[m], vals[m], valtypes[m])
+                self._enqueue(src, d, vname, _ADD, part)
+
+    def _route_view_dels(self, src, ftype, table, d0) -> None:
+        """Owner rows ``table.dellog[d0:]`` just died on shard ``src``:
+        enqueue matching deletes for every registered view copy.  View
+        deaths then grow the destination worker's view-table dellog, so
+        its own signed death frontier fires on the next local round.
+        During a global scrub the deletes apply synchronously instead
+        (a late-arriving copy of a scrub death would re-trigger the
+        frontier detector and the scrub would never converge)."""
+        comps = self._views.get(ftype)
+        if not comps or table.dellog_n <= d0:
+            return
+        rows = table.dellog[d0:table.dellog_n].astype(np.int64)
+        ids = table.ids[rows]
+        attrs = table.attrs[rows]
+        vals = table.vals[rows]
+        zeros = np.zeros(len(rows), np.int8)
+        D = self.n_shards
+        for comp in comps:
+            vname = view_name(ftype, comp)
+            if comp is None:
+                owner = None
+            else:
+                owner = shard_of((ids, attrs, vals)[int(comp)], D)
+            for d in range(D):
                 if owner is None:
                     part = (ids, attrs, vals, zeros)
                 else:
@@ -439,14 +631,43 @@ class ShardedEngine(HiperfactEngine):
                     if not m.any():
                         continue
                     part = (ids[m], attrs[m], vals[m], zeros[:int(m.sum())])
-                if src is not None and d == src:
-                    n = HiperfactEngine._delete_matching(
-                        self.workers[d], tname, part[0], part[1], part[2])
-                    if tname == ftype:
-                        deleted += n
+                if self._scrub_sync:
+                    HiperfactEngine._delete_matching(
+                        self.workers[d], vname, part[0], part[1], part[2])
                 else:
-                    self._enqueue(src or 0, d, tname, _DEL, part)
-        return deleted
+                    self._enqueue(src, d, vname, _DEL, part)
+
+    def _global_scrub(self, src, rules_reset, out_types, stats) -> None:
+        """DRed scrub across all shards.  The initiating worker hit an
+        ambiguous death frontier; derived rows of the closure types are
+        hash-scattered, so every worker over-deletes and resets.  Runs
+        synchronously (in-process control — only data rows ride the
+        exchange): view copies of scrub-killed rows are retired
+        directly and their dellog cursors pre-acknowledged, mirroring
+        the single-engine invariant that scrub deaths never re-trigger
+        the frontier detector."""
+        if self._scrub_sync:
+            return  # re-entrant call from a worker being broadcast to
+        self._scrub_sync = True
+        try:
+            closure = set(out_types)
+            for w in self.workers:
+                if w.shard == src:
+                    rr, ot, st = rules_reset, out_types, stats
+                else:
+                    rr, ot = w.trees().downstream(out_types)
+                    st = InferStats()  # counted once, on the initiator
+                closure |= ot
+                if rr or ot:
+                    HiperfactEngine._scrub(w, rr, ot, st)
+            for w in self.workers:
+                for name, tab in w.store.tables.items():
+                    if (name.startswith(VIEW_PREFIX)
+                            and base_fact_type(name) in closure):
+                        w._dellog_seen[name] = tab.dellog_n
+        finally:
+            self._scrub_sync = False
+        self._scrub_round = True
 
     def _tid(self, name: str) -> int:
         tid = self._table_ids.get(name)
@@ -522,48 +743,69 @@ class ShardedEngine(HiperfactEngine):
                 meta.append(e64)
                 continue
             ds, ks, vs, ms = [], [], [], []
-            for (d, tid, kind, ids, attrs, vals, valtypes) in entries:
+            for entry in entries:
+                d, tid, kind, ids, attrs, vals, valtypes = entry[:7]
                 n = len(ids)
                 ds.append(np.full(n, d, np.int32))
                 ks.append((ids.astype(np.int64) << 32)
                           | (attrs.astype(np.int64) & 0xFFFFFFFF))
                 vs.append(vals)
-                ms.append(np.full(n, (tid << 16) | (kind << 8), np.int64)
-                          | (valtypes.astype(np.int64) & 0xFF))
+                mm = (np.full(n, (tid << 16) | (kind << 8), np.int64)
+                      | (valtypes.astype(np.int64) & 0xFF))
+                if len(entry) == 8:  # _SUP: signed net count, bits 32..63
+                    mm |= entry[7].astype(np.int64) << 32
+                ms.append(mm)
             dest.append(np.concatenate(ds))
             key.append(np.concatenate(ks))
             val.append(np.concatenate(vs))
             meta.append(np.concatenate(ms))
         recv, stats = self.exchange.exchange(dest, key, val, meta)
-        owner_fresh = owner_deleted = changed = 0
+        owner_fresh = owner_deleted = retracted = changed = 0
         for d in range(D):
             k, v, m = recv[d]
             if len(k) == 0:
                 continue
-            tids = (m >> 16).astype(np.int64)
+            tids = ((m >> 16) & 0xFFFF).astype(np.int64)
             kinds = ((m >> 8) & 0xFF).astype(np.int64)
             vts = (m & 0xFF).astype(np.int8)
+            counts = (m >> 32).astype(np.int32)  # arithmetic: sign kept
             ids = (k >> 32).astype(np.int32)
             attrs = (k & 0xFFFFFFFF).astype(np.int32)
-            for g in np.unique(tids * 2 + kinds):
-                sel = (tids * 2 + kinds) == g
-                tname = self._table_names[int(g) >> 1]
+            gkey = tids * 4 + kinds
+            for g in np.unique(gkey):
+                sel = gkey == g
+                tname = self._table_names[int(g) >> 2]
+                kind = int(g) & 3
                 is_view = tname.startswith(VIEW_PREFIX)
-                if int(g) & 1:
-                    n = HiperfactEngine._delete_matching(
-                        self.workers[d], tname, ids[sel], attrs[sel], v[sel])
-                    changed += n
-                    if not is_view:
+                if kind == _DEL:
+                    if is_view:
+                        n = HiperfactEngine._delete_matching(
+                            self.workers[d], tname,
+                            ids[sel], attrs[sel], v[sel])
+                    else:
+                        n = self._apply_del_local(
+                            d, tname, ids[sel], attrs[sel], v[sel])
                         owner_deleted += n
-                else:
+                    changed += n
+                elif kind == _SUP:
+                    nn, nd = self._apply_counts_local(
+                        d, tname, ids[sel], attrs[sel], v[sel],
+                        vts[sel], counts[sel])
+                    changed += nn + nd
+                    owner_fresh += nn
+                    owner_deleted += nd
+                    retracted += nd
+                else:  # _ADD / _ADD_DERIVED (view copies were enqueued
+                    # by _route_add alongside this owner copy)
                     n = HiperfactEngine._insert_columns(
                         self.workers[d], tname, ids[sel], attrs[sel],
-                        v[sel], vts[sel])
+                        v[sel], vts[sel], asserted=(kind == _ADD))
                     changed += n
                     if not is_view:
                         owner_fresh += n
         log = {"phase": phase, **stats, "owner_fresh": owner_fresh,
-               "owner_deleted": owner_deleted, "applied": changed}
+               "owner_deleted": owner_deleted, "retracted": retracted,
+               "applied": changed}
         self.exchange_log.append(log)
         return owner_fresh, changed, log
 
@@ -572,9 +814,13 @@ class ShardedEngine(HiperfactEngine):
         """Union of the owner partitions of ``types`` (multi-island
         ad-hoc queries evaluate against this; owner partitions are
         disjoint, so no dedup is needed).  Memoized per version token."""
-        token = (tuple(types), self._query_version_token(types))
-        if self._gather_memo is not None and self._gather_memo[0] == token:
-            return self._gather_memo[1]
+        types = tuple(types)
+        token = self._query_version_token(types)
+        memo = self._gather_memo.get(types)
+        if memo is not None and memo[0] == token:
+            self.last_infer.gather_hits += 1
+            return memo[1]
+        self.last_infer.gather_misses += 1
         gst = FactStore(self.config.index_backend, ops=self.ops)
         gst.strings = self.store.strings
         for t in types:
@@ -588,7 +834,7 @@ class ShardedEngine(HiperfactEngine):
                 gst.table(t).insert(tab.ids[rows], tab.attrs[rows],
                                     tab.vals[rows], tab.valtypes[rows],
                                     dedup=False)
-        self._gather_memo = (token, gst)
+        self._gather_memo[types] = (token, gst)
         return gst
 
 

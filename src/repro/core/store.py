@@ -31,6 +31,20 @@ from repro.core.facts import StringDictionary
 
 PAGE_ROWS = 4096  # paper: pages pre-allocated by a memory pool
 
+# The sharded engine redirects non-home conditions to hash-partitioned
+# view tables named "__shard_view:<base type>:<tag>".  The prefix lives
+# here (not in core.sharded) so layers below the sharded engine — e.g.
+# derivation-tree construction — can recover the base fact type without
+# importing the sharding machinery.
+VIEW_PREFIX = "__shard_view:"
+
+
+def base_fact_type(ftype: str) -> str:
+    """Base fact type of a (possibly view-tagged) table name."""
+    if ftype.startswith(VIEW_PREFIX):
+        return ftype[len(VIEW_PREFIX):].split(":", 1)[0]
+    return ftype
+
 
 class Component(enum.IntEnum):
     ID = 0
@@ -352,11 +366,27 @@ class TypedFactTable:
     are tombstones — columns are untouched, so the version (and any
     resident device copy of the columns) stays valid.  ``uid`` is a
     process-unique id namespacing cache keys across tables and engines.
+
+    Signed-frontier state (counting-based incremental deletion):
+
+    * ``support`` — per-row derivation count: how many rule derivations
+      currently conclude this fact.  Maintained exactly by the counting
+      engine (``eval_mode="delta"``/``"auto"``); full mode leaves it 0.
+    * ``asserted`` — the row was explicitly inserted (a base fact), as
+      opposed to concluded by a rule.  A fact dies only when it is not
+      asserted *and* its support is 0.
+    * ``dellog`` — exact, duplicate-free, append-only log of row ids
+      that died, in death order.  ``(n, dellog_n)`` is a signed
+      watermark: rows ``[n0, n)`` are the +frontier, ``dellog[d0:d1]``
+      the −frontier.  A row appended then deleted inside one window
+      appears in both and cancels (the +frontier is alive-filtered, and
+      every dead row ``>= n0`` must have died inside the window).
     """
 
     __slots__ = ("ftype", "n", "_cap", "_id", "_attr", "_val", "_valtype",
-                 "_alive", "index", "_key_set", "version", "uid",
-                 "data_version", "n_dead")
+                 "_alive", "_support", "_asserted", "index", "_key_set",
+                 "version", "uid", "data_version", "n_dead",
+                 "_dellog", "dellog_n")
 
     def __init__(self, ftype: str, index_backend: str = "AI",
                  ops: Ops | None = None) -> None:
@@ -377,10 +407,16 @@ class TypedFactTable:
         self._val = np.empty(self._cap, np.int64)
         self._valtype = np.empty(self._cap, np.int8)
         self._alive = np.empty(self._cap, bool)
+        self._support = np.empty(self._cap, np.int32)
+        self._asserted = np.empty(self._cap, bool)
+        self._dellog = np.empty(PAGE_ROWS, np.int32)
+        self.dellog_n = 0
         self.index: Rank1Index = INDEX_BACKENDS[index_backend](ops=ops)
-        # Host-side exact-membership set for incremental dedup (HU path) and
-        # idempotent inserts; the SU path dedups in bulk before reaching here.
-        self._key_set: set[tuple[int, int, int]] = set()
+        # Host-side exact-membership map key -> alive row id, for
+        # incremental dedup (HU path), idempotent inserts, and in-place
+        # assertion/support maintenance on duplicate hits; the SU path
+        # dedups in bulk before reaching here.
+        self._key_set: dict[tuple[int, int, int], int] = {}
 
     # -- columns ----------------------------------------------------------
     def column(self, comp: Component) -> np.ndarray:
@@ -410,6 +446,19 @@ class TypedFactTable:
     def alive(self) -> np.ndarray:
         return self._alive[: self.n]
 
+    @property
+    def support(self) -> np.ndarray:
+        return self._support[: self.n]
+
+    @property
+    def asserted(self) -> np.ndarray:
+        return self._asserted[: self.n]
+
+    @property
+    def dellog(self) -> np.ndarray:
+        """Row ids that died, in death order (exact, duplicate-free)."""
+        return self._dellog[: self.dellog_n]
+
     def _grow_to(self, need: int) -> None:
         if need <= self._cap:
             return
@@ -418,7 +467,8 @@ class TypedFactTable:
             new_cap = new_cap * 2 if new_cap >= PAGE_ROWS else PAGE_ROWS
         # round up to whole pages (pool discipline)
         new_cap = ((new_cap + PAGE_ROWS - 1) // PAGE_ROWS) * PAGE_ROWS
-        for name in ("_id", "_attr", "_val", "_valtype", "_alive"):
+        for name in ("_id", "_attr", "_val", "_valtype", "_alive",
+                     "_support", "_asserted"):
             old = getattr(self, name)
             new = np.empty(new_cap, old.dtype)
             new[: self.n] = old[: self.n]
@@ -433,28 +483,49 @@ class TypedFactTable:
         vals: np.ndarray,
         valtypes: np.ndarray,
         dedup: bool = True,
+        asserted: bool = True,
     ) -> int:
-        """Append a batch; returns number of *new* facts inserted."""
+        """Append a batch; returns number of *new* facts inserted.
+
+        ``asserted=False`` marks rule-concluded rows: they are born with
+        support 0 (the counting write path adds the derivation counts
+        right after) and die when their support returns to 0."""
         ids = np.asarray(ids, np.int32)
         attrs = np.asarray(attrs, np.int32)
         vals = np.asarray(vals, np.int64)
         valtypes = np.asarray(valtypes, np.int8)
+        ks = self._key_set
         if dedup:
-            ks = self._key_set
             keep_l = []
-            add = ks.add
+            dup_rows: list[int] = []
+            j = self.n
             for k in zip(ids.tolist(), attrs.tolist(), vals.tolist()):
-                if k in ks:
+                r = ks.get(k)
+                if r is not None:
                     keep_l.append(False)
+                    dup_rows.append(r)
                 else:
-                    add(k)
+                    ks[k] = j
+                    j += 1
                     keep_l.append(True)
             keep = np.asarray(keep_l, bool)
+            if asserted and dup_rows:
+                # re-asserting facts that already exist (possibly as
+                # derived rows): pin them so support collapse alone
+                # cannot kill them.  Batch-internal duplicates point at
+                # pending rows (>= n) that insert with the right flag.
+                dr = np.asarray(dup_rows, np.int64)
+                dr = dr[dr < self.n]
+                if len(dr):
+                    self.mark_asserted(dr)
             if not keep.all():
                 ids, attrs, vals, valtypes = (
                     ids[keep], attrs[keep], vals[keep], valtypes[keep])
         else:
-            self._key_set.update(zip(ids.tolist(), attrs.tolist(), vals.tolist()))
+            base = self.n
+            for j, k in enumerate(zip(ids.tolist(), attrs.tolist(),
+                                      vals.tolist())):
+                ks[k] = base + j
         m = len(ids)
         if m == 0:
             return 0
@@ -465,6 +536,8 @@ class TypedFactTable:
         self._val[start : start + m] = vals
         self._valtype[start : start + m] = valtypes
         self._alive[start : start + m] = True
+        self._support[start : start + m] = 0
+        self._asserted[start : start + m] = asserted
         self.n = start + m
         self.version += 1  # before the index build: it caches under the
         self.data_version += 1
@@ -474,14 +547,86 @@ class TypedFactTable:
     def contains(self, iid: int, attr: int, val: int) -> bool:
         return (int(iid), int(attr), int(val)) in self._key_set
 
-    def delete_rows(self, rows: np.ndarray) -> None:
+    def delete_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Tombstone ``rows``; returns the rows that actually died.
+
+        Already-dead rows are filtered first, so ``n_dead`` is exact and
+        the delete log is duplicate-free — both are load-bearing for the
+        signed −frontier (``dellog``) consumed by the counting engine."""
         rows = np.asarray(rows, np.int64)
+        if len(rows):
+            rows = np.unique(rows)
+            a = self._alive[rows]
+            if not a.all():
+                rows = rows[a]
+        if len(rows) == 0:
+            return rows.astype(np.int32)
         self._alive[rows] = False
+        self._asserted[rows] = False
         self.data_version += 1
-        self.n_dead += len(rows)  # upper bound (re-deletes overcount):
-        for r in rows:            # only == 0 is load-bearing
-            self._key_set.discard(
-                (int(self._id[r]), int(self._attr[r]), int(self._val[r])))
+        self.n_dead += len(rows)
+        self._log_deaths(rows)
+        for r in rows:
+            self._key_set.pop(
+                (int(self._id[r]), int(self._attr[r]), int(self._val[r])),
+                None)
+        return rows.astype(np.int32)
+
+    def _log_deaths(self, rows: np.ndarray) -> None:
+        need = self.dellog_n + len(rows)
+        if need > len(self._dellog):
+            new_cap = len(self._dellog)
+            while new_cap < need:
+                new_cap *= 2
+            new = np.empty(new_cap, np.int32)
+            new[: self.dellog_n] = self._dellog[: self.dellog_n]
+            self._dellog = new
+        self._dellog[self.dellog_n : need] = rows
+        self.dellog_n = need
+
+    # -- counting-based support maintenance -------------------------------
+    def add_support(self, rows: np.ndarray, counts: np.ndarray) -> None:
+        """Add derivation counts to existing rows (duplicates in ``rows``
+        accumulate)."""
+        np.add.at(self._support, np.asarray(rows, np.int64),
+                  np.asarray(counts, np.int32))
+
+    def mark_asserted(self, rows: np.ndarray) -> None:
+        self._asserted[np.asarray(rows, np.int64)] = True
+
+    def retract_support(self, rows: np.ndarray,
+                        counts: np.ndarray) -> np.ndarray:
+        """Remove derivation counts; rows whose support reaches 0 and are
+        not asserted die.  Returns the rows that died (already logged)."""
+        rows = np.asarray(rows, np.int64)
+        s = self._support[rows] - np.asarray(counts, np.int32)
+        np.maximum(s, 0, out=s)  # clamp: stale counts only ever occur in
+        self._support[rows] = s  # tainted regions, which scrub anyway
+        dying = rows[(s <= 0) & ~self._asserted[rows] & self._alive[rows]]
+        return self.delete_rows(dying)
+
+    def retract_asserted(self, rows: np.ndarray) -> tuple[np.ndarray, int]:
+        """Explicitly delete (un-assert) rows.  A row with surviving
+        derivation support stays alive — a *compensated* delete: the
+        visible fact set is unchanged, so ``data_version`` does not move
+        and cached query version tokens stay valid.  Returns ``(rows
+        that died, number of compensated rows)``."""
+        rows = np.asarray(rows, np.int64)
+        if len(rows):
+            rows = rows[self._alive[rows]]
+        self._asserted[rows] = False
+        dying = rows[self._support[rows] <= 0]
+        comp = len(rows) - len(dying)
+        return self.delete_rows(dying), comp
+
+    def scrub_derived(self) -> np.ndarray:
+        """DRed over-delete: tombstone every non-asserted row and zero all
+        support, so producer rules can rebuild exact counts from scratch.
+        Returns the rows that died."""
+        rows = np.flatnonzero(self.alive & ~self.asserted)
+        dead = self.delete_rows(rows)
+        self._support[: self.n] = 0
+        return dead
 
     def filter_alive(self, rows: np.ndarray) -> np.ndarray:
         if self.n == 0 or len(rows) == 0:
@@ -494,7 +639,7 @@ class TypedFactTable:
         return self.filter_alive(rows)
 
     def memory_bytes(self) -> int:
-        per_row = 4 + 4 + 8 + 1 + 1
+        per_row = 4 + 4 + 8 + 1 + 1 + 4 + 1
         return self._cap * per_row + self.index.memory_bytes()
 
 

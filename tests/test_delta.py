@@ -170,9 +170,10 @@ def test_delta_uses_deltas_not_full(monkeypatch):
     assert 0 < s.rows_considered < s_initial.rows_considered
 
 
-def test_delete_falls_back_to_full():
-    """Tombstones void the append frontier: rules whose input tables
-    saw deletes re-evaluate in full, and results match full mode."""
+def test_delete_propagates_as_signed_frontier():
+    """Tombstones no longer void the frontier: a deleted base fact rides
+    the −frontier, the derived fact's support collapses, and the result
+    matches full mode with zero full re-evaluations."""
     def build(mode):
         e = HiperfactEngine(EngineConfig(eval_mode=mode))
         e.insert_facts([Fact("T", f"n{i}", "flag", "on")
@@ -181,22 +182,26 @@ def test_delete_falls_back_to_full():
         e.add_rule(Rule("fan", (cond("T", "?x", "flag", "on"),),
                         (AddAction("T", term("?x"), "seen", "yes"),)))
         e.infer()
-        # delete a base fact, then append more: the delta frontier over
-        # T is invalid (n_dead changed) and must not be trusted
-        e._delete_matching("T", *[np.asarray(a) for a in (
-            [e.store.strings.lookup_str("n0")],
-            [e.store.strings.lookup_str("flag")],
-            [e.store.strings.lookup_str("on")])])
+        # delete a base fact, then append more: the delete log slice is
+        # the −frontier of the next evaluation
+        e.delete_facts([Fact("T", "n0", "flag", "on")])
         e.insert_facts([Fact("T", "n9", "flag", "on")])
-        e.infer()
-        return e
-    e_full, e_delta = build("full"), build("delta")
+        s = e.infer()
+        return e, s
+    (e_full, _), (e_delta, s_delta) = build("full"), build("delta")
     assert fact_set(e_full) == fact_set(e_delta)
+    assert s_delta.full_evals == 0       # steady state stays delta
+    assert s_delta.neg_passes > 0        # the retraction ran as a pass
+    assert s_delta.facts_retracted == 1  # n0's "seen" fact died
+    assert s_delta.dred_scrubs == 0      # counting, not over-deletion
+    assert e_delta.query([cond("T", "?x", "seen", "yes")]) == e_full.query(
+        [cond("T", "?x", "seen", "yes")])
 
 
-def test_delete_action_rules_always_full():
-    """Rules with delete actions are non-monotone: they must evaluate
-    full even in delta mode (and still converge identically)."""
+def test_delete_action_rules_run_as_delta():
+    """Delete-action rules are idempotent: +frontier passes are sound,
+    so steady-state rounds keep ``full_evals == 0`` (and still converge
+    identically to full mode)."""
     def build(mode):
         e = HiperfactEngine(EngineConfig(eval_mode=mode))
         e.insert_facts([Fact("T", "a", "flag", "off"),
@@ -209,7 +214,8 @@ def test_delete_action_rules_always_full():
         return e, s
     (e_full, _), (e_delta, s_delta) = build("full"), build("delta")
     assert fact_set(e_full) == fact_set(e_delta)
-    assert s_delta.delta_passes == 0  # delete rules never run as delta
+    assert s_delta.full_evals == 0   # delete rules ride +frontier passes
+    assert s_delta.delta_passes > 0
     q = [cond("T", "?x", "flag", "off")]
     assert e_delta.query(q) == []
 

@@ -263,3 +263,155 @@ def test_query_result_cache_lru_and_keys():
     assert s["hits"] >= 2 and s["misses"] >= 1
     # unhashable conditions degrade to uncacheable, not an error
     assert QueryResultCache.key(([],), ("tok", 1)) is None
+
+
+# ---------------------------------------------------------------------------
+# Signed delta frontiers across the exchange: deletes as first-class deltas
+
+
+def _mixed_stream_engine(shards, eval_mode, lazy=False):
+    e = HiperfactEngine(_cfg(shards, eval_mode=eval_mode, lazy=lazy))
+    e.add_rule(Rule("hot", (cond("Reading", "?s", "temp", "?t"),
+                            cond("Zone", "?s", "in", "?z")),
+                    (AddAction("Alert", term("?s"), "zone", term("?z")),)))
+    e.add_rule(Rule("audit", (cond("Alert", "?s", "zone", "?z"),),
+                    (AddAction("Audit", term("?z"), "saw", term("?s")),)))
+    e.add_rule(Rule("q", (cond("Audit", "?z", "saw", "?s"),)))  # QUERY
+    return e
+
+
+def _mixed_stream(e, rounds=3, n=40):
+    stats = []
+    for r in range(rounds):
+        base = r * n
+        e.insert_facts(
+            [Fact("Reading", f"s{base + i}", "temp", f"t{i % 7}")
+             for i in range(n)]
+            + [Fact("Zone", f"s{base + i}", "in", f"z{i % 4}")
+               for i in range(n)])
+        e.infer()
+        # expire a third of this round's sensors
+        e.delete_facts([Fact("Reading", f"s{base + i}", "temp",
+                             f"t{i % 7}") for i in range(0, n, 3)])
+        stats.append(e.infer())
+    return stats
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_mixed_append_delete_stream_parity(shards):
+    """delta ≡ full under interleaved appends and bulk expiries, and
+    the delete rounds run zero full re-evaluations in steady state."""
+    ef = _mixed_stream_engine(1, "full")
+    ed = _mixed_stream_engine(shards, "delta")
+    _mixed_stream(ef)
+    dstats = _mixed_stream(ed)
+    assert decoded_fact_checksum(ef) == decoded_fact_checksum(ed)
+    assert all(s.full_evals == 0 for s in dstats), \
+        [s.full_evals for s in dstats]
+    assert sum(s.facts_retracted for s in dstats) > 0
+    assert all(s.dred_scrubs == 0 for s in dstats)
+
+
+def test_lazy_active_set_parity_sharded():
+    """Defs. 10/11 under the shard view rewrite: lazy pruning must skip
+    the same rules (view-table names normalize to their base types when
+    the derivation tree links producers to consumers) and derive the
+    same query-reachable facts as the unsharded engine."""
+    engines = {}
+    for shards in (1, 4):
+        e = HiperfactEngine(_cfg(shards, lazy=True))
+        e.add_rule(Rule("used", (cond("A", "?x", "p", "?y"),
+                                 cond("M", "?y", "m", "?z")),
+                        (AddAction("B", term("?x"), "q", term("?z")),)))
+        e.add_rule(Rule("unused", (cond("A", "?x", "p", "?y"),
+                                   cond("M", "?y", "m", "?z")),
+                        (AddAction("C", term("?x"), "r", term("?z")),)))
+        e.add_rule(Rule("q", (cond("B", "?x", "q", "?z"),)))  # QUERY
+        e.insert_facts([Fact("A", f"a{i}", "p", f"k{i % 5}")
+                        for i in range(20)]
+                       + [Fact("M", f"k{j}", "m", f"v{j}")
+                          for j in range(5)])
+        s = e.infer()
+        assert s.rules_skipped_inactive > 0, shards
+        engines[shards] = e
+    assert (decoded_fact_checksum(engines[1])
+            == decoded_fact_checksum(engines[4]))
+    # the inactive rule's output type was never derived on any shard
+    assert not engines[4].query([cond("C", "?x", "r", "?z")])
+
+
+def test_compensated_delete_keeps_view_copies():
+    """Deleting an asserted fact that is still derived elsewhere must
+    not kill it — on any shard, including its view copies (the owner
+    absorbs the retraction; nothing crosses the exchange)."""
+
+    def build(shards):
+        e = HiperfactEngine(_cfg(shards, eval_mode="delta"))
+        e.add_rule(Rule("mk", (cond("Src", "?x", "is", "?v"),
+                               cond("Key", "?v", "ok", "?k")),
+                        (AddAction("Out", term("?x"), "is", term("?v")),)))
+        e.insert_facts([Fact("Src", f"x{i}", "is", f"v{i % 3}")
+                        for i in range(12)]
+                       + [Fact("Key", f"v{j}", "ok", f"k{j}")
+                          for j in range(3)]
+                       + [Fact("Out", f"x{i}", "is", f"v{i % 3}")
+                          for i in range(6)])  # also asserted
+        e.infer()
+        e.delete_facts([Fact("Out", f"x{i}", "is", f"v{i % 3}")
+                        for i in range(6)])
+        return e, e.infer()
+
+    (e1, s1), (e4, s4) = build(1), build(4)
+    assert decoded_fact_checksum(e1) == decoded_fact_checksum(e4)
+    assert s1.compensated_deletes == 6
+    assert s4.compensated_deletes == 6
+    assert s4.full_evals == 0
+    q = [cond("Out", "?x", "is", "?v")]
+    k = lambda rows: sorted(str(sorted(r.items())) for r in rows)
+    assert k(e1.query(q)) == k(e4.query(q))
+    assert len(e4.query(q)) == 12  # every Out row survives via support
+
+
+def test_gather_memo_counts_hits():
+    """Non-decomposable (multi-island) queries memoize the gathered
+    snapshot under the per-shard version token vector: repeating the
+    query re-uses it, mutation invalidates it."""
+    e = _seed_engine(4)
+    e.infer()
+    q = [cond("Data", "?x", "anc", "?y"), cond("Data", "?y", "anc", "?z")]
+    e.query(q, decode=False)
+    misses0 = e.last_infer.gather_misses
+    hits0 = e.last_infer.gather_hits
+    assert misses0 >= 1
+    e.query(q, decode=False)
+    assert e.last_infer.gather_hits == hits0 + 1
+    assert e.last_infer.gather_misses == misses0
+    # a write moves the version token: next gather misses again
+    e.insert_facts([Fact("Data", "gm", "anc", "gm2")])
+    e.infer()
+    e.query(q, decode=False)
+    assert e.last_infer.gather_misses >= 1
+
+
+def test_query_cache_token_survives_compensated_delete():
+    """A compensated delete (asserted fact still derived) clears only
+    the assertion bit: no tombstone, no version bump — so the
+    version-keyed query result cache keeps serving without re-running
+    the query."""
+    e = HiperfactEngine(_cfg(4, eval_mode="delta"))
+    e.add_rule(Rule("mk", (cond("Src", "?x", "is", "?v"),),
+                    (AddAction("Out", term("?x"), "is", term("?v")),)))
+    e.insert_facts([Fact("Src", f"x{i}", "is", f"v{i}") for i in range(8)]
+                   + [Fact("Out", f"x{i}", "is", f"v{i}")
+                      for i in range(4)])  # asserted duplicates
+    e.infer()
+    q = [cond("Out", "?x", "is", "?v")]
+    r0 = e.query(q)
+    hits0 = e.last_infer.query_cache_hits
+    e.delete_facts([Fact("Out", f"x{i}", "is", f"v{i}") for i in range(4)])
+    s = e.infer()
+    assert s.compensated_deletes == 4
+    assert s.facts_deleted == 0
+    r1 = e.query(q)
+    assert e.last_infer.query_cache_hits == hits0 + 1  # token unmoved
+    assert len(r1) == len(r0) == 8

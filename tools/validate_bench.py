@@ -17,6 +17,10 @@ third-party dependency:
   ``infer_s``/``delta_passes``/``full_evals`` (+ transfer and
   sort-byte counters on device backends) and the fact-set ``checksum``
   the delta≡full parity compares;
+* ``sections.streaming_expire`` (since PR 7): append + bulk-expire
+  rounds per (eval_mode, shards) — one fact-set checksum across every
+  run is required, and steady-state delta delete rounds must report
+  ``full_evals == 0`` (retractions ride signed frontiers);
 * ``sections.sharded`` (since PR 6): shards=1 baseline + shards=N run
   with ``bit_identical`` required true, per-shard ``shard_bytes``, and
   append-round ``a2a`` payloads strictly below the resident payload
@@ -94,6 +98,51 @@ def check_streaming(rows: list, where: str) -> None:
                 need(rd, "sorted_bytes", NUM, wr)
 
 
+def check_streaming_expire(s: dict, where: str) -> None:
+    """Signed-delta-frontier section (PR 7): append + bulk-expire rounds
+    per (eval_mode, shards).  Parity is required — every run must decode
+    to one fact-set checksum — and the delta runs' delete rounds must
+    report zero full re-evaluations (retractions ride O(Δ) negative
+    passes, never table rescans)."""
+    if need(s, "bit_identical", bool, where) is not True:
+        raise Invalid(f"{where}.bit_identical: delta fact set diverged "
+                      f"from full under mixed append+expire rounds")
+    need(s, "delta_vs_full_speedup", dict, where)
+    need(s, "neg_passes", NUM, where)
+    steady = need(s, "steady_full_evals", NUM, where)
+    if steady != 0:
+        raise Invalid(f"{where}.steady_full_evals: {steady} full "
+                      f"re-evaluations in steady-state delta rounds — "
+                      f"deletes must stay on the signed-frontier path")
+    runs = need(s, "runs", list, where)
+    if not any(r.get("mode") == "delta" for r in runs):
+        raise Invalid(f"{where}.runs: need at least one eval_mode=delta "
+                      f"run")
+    checks = set()
+    for i, r in enumerate(runs):
+        w = f"{where}.runs[{i}]"
+        need(r, "mode", str, w)
+        for k in ("shards", "initial_infer_s", "reinfer_total_s",
+                  "n_facts", "checksum"):
+            need(r, k, NUM, w)
+        checks.add(r["checksum"])
+        rounds = need(r, "rounds", list, w)
+        for j, rd in enumerate(rounds):
+            wr = f"{w}.rounds[{j}]"
+            for k in ("append_infer_s", "expire_infer_s", "inferred",
+                      "retracted", "neg_passes", "full_evals",
+                      "rows_considered", "dred_scrubs"):
+                need(rd, k, NUM, wr)
+            if (r["mode"] == "delta" and j > 0
+                    and rd["full_evals"] != 0):
+                raise Invalid(f"{wr}.full_evals: delete round ran "
+                              f"{rd['full_evals']} full evals in delta "
+                              f"mode")
+    if len(checks) != 1:
+        raise Invalid(f"{where}.runs: {len(checks)} distinct checksums "
+                      f"across (mode, shards) runs — expected 1")
+
+
 def check_sharded(s: dict, where: str) -> None:
     """Sharded fixpoint section (PR 6): shards=1 vs shards=N runs with
     bit-identical checksums and O(Δ) frontier-exchange accounting."""
@@ -160,6 +209,9 @@ def validate(path: str) -> None:
     if "streaming" in sections:
         check_streaming(sections["streaming"],
                         f"{path}.sections.streaming")
+    if "streaming_expire" in sections:
+        check_streaming_expire(sections["streaming_expire"],
+                               f"{path}.sections.streaming_expire")
     if "sharded" in sections:
         check_sharded(sections["sharded"], f"{path}.sections.sharded")
     if "kernels" in sections:
