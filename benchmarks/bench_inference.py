@@ -429,7 +429,13 @@ def bench_sharded(shards: int = 8, scale: int = 1, backend: str = "jax",
             row["infer_rounds"] = [
                 {k: r[k] for k in ("round", "critical_path_s", "a2a_rows",
                                    "a2a_payload_bytes", "a2a_padded_bytes",
-                                   "applied_fresh")} for r in st.rounds]
+                                   "a2a_bytes_raw", "a2a_bytes_wire",
+                                   "applied_fresh") if k in r}
+                for r in st.rounds]
+            row["a2a_bytes_raw"] = sum(
+                r.get("a2a_bytes_raw", 0) for r in st.rounds)
+            row["a2a_bytes_wire"] = sum(
+                r.get("a2a_bytes_wire", 0) for r in st.rounds)
         else:
             row["store_bytes"] = e.store.memory_bytes()
         append_rounds = []
@@ -443,6 +449,10 @@ def bench_sharded(shards: int = 8, scale: int = 1, backend: str = "jax",
                 r["a2a_rows"] = sum(x["a2a_rows"] for x in st.rounds)
                 r["a2a_payload_bytes"] = sum(
                     x["a2a_payload_bytes"] for x in st.rounds)
+                r["a2a_bytes_raw"] = sum(
+                    x.get("a2a_bytes_raw", 0) for x in st.rounds)
+                r["a2a_bytes_wire"] = sum(
+                    x.get("a2a_bytes_wire", 0) for x in st.rounds)
                 r["critical_path_s"] = sum(
                     x["critical_path_s"] for x in st.rounds)
             append_rounds.append(r)
@@ -466,6 +476,14 @@ def bench_sharded(shards: int = 8, scale: int = 1, backend: str = "jax",
         "append_a2a_bytes": [r["a2a_payload_bytes"]
                              for r in rN["append_rounds"]],
         "resident_payload_bytes": table_bytes,
+        # wire-format mirror of the a2a traffic (frame-of-reference lane
+        # narrowing in distributed/compression.py; equal to raw when off)
+        "a2a_bytes_raw": (rN.get("a2a_bytes_raw", 0)
+                          + sum(r.get("a2a_bytes_raw", 0)
+                                for r in rN["append_rounds"])),
+        "a2a_bytes_wire": (rN.get("a2a_bytes_wire", 0)
+                           + sum(r.get("a2a_bytes_wire", 0)
+                                 for r in rN["append_rounds"])),
     }
     return rows_out
 

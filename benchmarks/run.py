@@ -170,7 +170,9 @@ def main() -> None:
         print(f"bit_identical={sh['bit_identical']},"
               f"max_shard_fraction={sh['max_shard_fraction']:.3f},"
               f"append_a2a_bytes={sh['append_a2a_bytes']},"
-              f"resident_payload_bytes={sh['resident_payload_bytes']}")
+              f"resident_payload_bytes={sh['resident_payload_bytes']},"
+              f"a2a_bytes_raw={sh.get('a2a_bytes_raw', 0)},"
+              f"a2a_bytes_wire={sh.get('a2a_bytes_wire', 0)}")
 
     if not args.smoke:
         section(f"Table 4 analog: query config matrix "
@@ -228,6 +230,21 @@ def main() -> None:
     for name, s in ops_rows:
         print(f"{name},{s:.5f}s" if isinstance(s, float) else
               f"{name},{s}")
+
+    section("Compressed resident columns (dict/FoR/RLE, lubm-like)")
+    comp = bench_kernels.bench_compression(
+        n=(1 << 13) if args.smoke else (1 << 15))
+    report["sections"]["compression"] = comp
+    for r in comp["runs"]:
+        print(f"compression[{r['label']}],"
+              f"resident_bytes_coded={r['resident_bytes_coded']},"
+              f"checksum={r['checksum']},"
+              f"codecs=for:{r['codecs']['for']}/dict:{r['codecs']['dict']}"
+              f"/rle:{r['codecs']['rle']}")
+    print(f"bit_identical={comp['bit_identical']},"
+          f"bytes_per_fact={comp['bytes_per_fact_raw']:.2f}->"
+          f"{comp['bytes_per_fact_coded']:.2f},"
+          f"ratio={comp['ratio']:.2f}x")
 
     if not args.smoke:
         section("Extensions (paper §5): rank-N query cache + compression")

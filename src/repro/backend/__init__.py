@@ -26,13 +26,18 @@ BACKENDS = ("numpy", "jax", "jax-pallas", "jax-interpret")
 _CACHE: dict[str, Ops] = {}
 
 
-def fresh_backend(name: str = "numpy") -> Ops:
+def fresh_backend(name: str = "numpy",
+                  compress: bool | None = None) -> Ops:
     """A new, uncached ``Ops`` instance.
 
     Shard workers (``EngineConfig(shards=N)``) each get their own
     instance so transfer/sort-work counters and the device-array cache
     stay attributable per shard; the module-level jit caches are shared
     regardless, so extra instances do not recompile kernels.
+
+    ``compress`` controls the device backends' compressed resident
+    column tier (``None`` defers to ``REPRO_COMPRESS``, default on);
+    the numpy twin is always raw.
     """
     if name == "numpy":
         return NumpyOps()
@@ -43,15 +48,17 @@ def fresh_backend(name: str = "numpy") -> Ops:
         # interpret mode uses small blocks: it exists to exercise the
         # kernel code path on CPU, not to win benchmarks
         kw = {"block": 256} if mode == "interpret" else {}
-        return JaxOps(mode=mode, **kw)
+        return JaxOps(mode=mode, compress=compress, **kw)
     raise ValueError(
         f"unknown backend {name!r}; expected one of {BACKENDS}")
 
 
-def get_backend(name: str = "numpy") -> Ops:
-    ops = _CACHE.get(name)
+def get_backend(name: str = "numpy",
+                compress: bool | None = None) -> Ops:
+    key = name if compress is None else f"{name}+c{int(compress)}"
+    ops = _CACHE.get(key)
     if ops is None:
-        ops = _CACHE[name] = fresh_backend(name)
+        ops = _CACHE[key] = fresh_backend(name, compress=compress)
     return ops
 
 

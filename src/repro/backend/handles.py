@@ -52,14 +52,15 @@ class DeviceCol:
     memoization for any op touching them, since the memo entry could
     never hit again."""
 
-    __slots__ = ("data", "n", "uid", "lo", "hi", "owner", "stable",
-                 "_host")
+    __slots__ = ("_data", "n", "uid", "lo", "hi", "owner", "stable",
+                 "_host", "codec", "codes", "_thunk")
 
     def __init__(self, data: Any, n: int, owner, lo: int | None = None,
                  hi: int | None = None,
                  host: np.ndarray | None = None,
-                 stable: bool = True) -> None:
-        self.data = data
+                 stable: bool = True, *,
+                 codec=None, codes: Any = None, thunk=None) -> None:
+        self._data = data
         self.n = int(n)
         self.uid = next(_HANDLE_UID)
         self.lo = lo  # None when unknown/empty: guards treat as "assume worst"
@@ -67,6 +68,21 @@ class DeviceCol:
         self.owner = owner
         self.stable = stable
         self._host = host
+        # Compressed-resident handles carry the code buffer + codec and
+        # defer the value-domain materialization: ``thunk`` is a
+        # device-side decode the owner runs at most once, on first
+        # ``.data`` access.  Code-domain consumers (shared-dictionary
+        # joins, memo hits at a fixed version) never trigger it.
+        self.codec = codec
+        self.codes = codes
+        self._thunk = thunk
+
+    @property
+    def data(self):
+        if self._data is None and self._thunk is not None:
+            self._data = self._thunk()
+            self._thunk = None
+        return self._data
 
     def __len__(self) -> int:
         return self.n

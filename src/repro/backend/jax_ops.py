@@ -59,11 +59,14 @@ the engine's PF/PW thread pools may issue primitives concurrently.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import os
 import threading
 
 import numpy as np
 
+from repro.backend import codecs
 from repro.backend.base import Ops
 from repro.backend.device_cache import (DeviceArrayCache, MirrorRuns,
                                         SortWorkCounter, TransferCounter)
@@ -193,7 +196,10 @@ def _jitted():
         jax.jit, static_argnames=("block", "use_pallas", "interpret"))
     def batch_probe_j(sk, n_real, probes, block, use_pallas, interpret):
         """Batched rank-1 probe: [lo, hi) run bounds for every probe in
-        one launch (Pallas binary-search kernel on TPU)."""
+        one launch (Pallas binary-search kernel on TPU).  ``sk`` may be
+        a narrow code-domain mirror — widened on entry (probes arrive
+        pre-encoded by the caller)."""
+        sk = sk.astype(jnp.int64)
         if use_pallas:
             from repro.kernels.mergejoin.mergejoin import probe_sorted
             lo, hi = probe_sorted(probes, sk, block=block,
@@ -246,6 +252,79 @@ def _jitted():
         the new length stay sentinels)."""
         return jax.lax.dynamic_update_slice(buf, delta, (n_old,))
 
+    # -- compressed-column composites (decode on device, never to host) --
+
+    @functools.partial(jax.jit, static_argnames=())
+    def widen(x):
+        return x.astype(jnp.int64)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def decode_for(codes, ref):
+        """Frame-of-reference decode; pad lanes stay garbage (handle
+        contract: consumers mask by n)."""
+        return codes.astype(jnp.int64) + ref
+
+    @functools.partial(jax.jit, static_argnames=())
+    def decode_for_n(codes, ref, n_real, fill):
+        """Frame-of-reference decode with exact re-pad: lanes past
+        ``n_real`` become ``fill`` (for consumers whose pad lanes are
+        load-bearing sentinels, e.g. the semi-join bound side)."""
+        lane = jnp.arange(codes.shape[0], dtype=jnp.int64)
+        return jnp.where(lane < n_real, codes.astype(jnp.int64) + ref,
+                         fill)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def decode_dict(codes, dvals):
+        """Dictionary decode (rank gather); pad lanes garbage."""
+        return dvals[jnp.clip(codes.astype(jnp.int64), 0,
+                              dvals.shape[0] - 1)]
+
+    @functools.partial(jax.jit, static_argnames=("cap",))
+    def decode_rle(values, lengths, cap):
+        """Run-length decode; run pads have length 0, decoded pad lanes
+        past the real prefix are garbage (repeat's tail fill)."""
+        reps = jnp.clip(lengths.astype(jnp.int64), 0, cap)
+        return jnp.repeat(values, reps, total_repeat_length=cap)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def decode_sorted_for(sk, n_real, ref):
+        """Decode a code-domain sorted mirror, re-padding with the sort
+        sentinel so the output obeys the sorted-buffer contract."""
+        lane = jnp.arange(sk.shape[0], dtype=jnp.int64)
+        return jnp.where(lane < n_real, sk + ref,
+                         jnp.iinfo(jnp.int64).max)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def decode_sorted_dict(sk, n_real, dvals):
+        lane = jnp.arange(sk.shape[0], dtype=jnp.int64)
+        v = dvals[jnp.clip(sk, 0, dvals.shape[0] - 1)]
+        return jnp.where(lane < n_real, v, jnp.iinfo(jnp.int64).max)
+
+    @functools.partial(jax.jit, static_argnames=("dtype",))
+    def narrow_sorted(sk, n_real, dtype):
+        """Store a code-domain sorted mirror at the codec's width: real
+        codes fit by construction, pads re-fill with the dtype max so
+        sortedness survives the narrowing (probes run searchsorted over
+        the full buffer)."""
+        lane = jnp.arange(sk.shape[0], dtype=jnp.int64)
+        return jnp.where(lane < n_real, sk,
+                         jnp.iinfo(dtype).max).astype(dtype)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def dict_crossmap(lvals, rvals, no_match):
+        """Cross-dictionary recode table: left rank -> right rank for
+        shared values, ``no_match`` (right-domain sentinel) otherwise."""
+        rank = jnp.searchsorted(rvals, lvals)
+        idx = jnp.clip(rank, 0, rvals.shape[0] - 1)
+        return jnp.where(rvals[idx] == lvals, rank, no_match)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def map_codes(cmap, codes):
+        """Apply a crossmap to a code column (recode the smaller join
+        side on device); garbage pad codes clip harmlessly."""
+        return cmap[jnp.clip(codes.astype(jnp.int64), 0,
+                             cmap.shape[0] - 1)]
+
     return {"neighbor_mask": neighbor_mask, "semi_join": semi_join,
             "stable_sort_perm_xla": stable_sort_perm_xla,
             "dedup_rows_xla": dedup_rows_xla, "gather": gather,
@@ -253,7 +332,14 @@ def _jitted():
             "gather_clip": gather_clip, "pack_pairs": pack_pairs,
             "sort_pairs_xla": sort_pairs_xla, "fresh_pairs": fresh_pairs,
             "batch_probe_j": batch_probe_j, "test_mask": test_mask,
-            "cross_gather": cross_gather}
+            "cross_gather": cross_gather, "widen": widen,
+            "decode_for": decode_for, "decode_for_n": decode_for_n,
+            "decode_dict": decode_dict,
+            "decode_rle": decode_rle,
+            "decode_sorted_for": decode_sorted_for,
+            "decode_sorted_dict": decode_sorted_dict,
+            "narrow_sorted": narrow_sorted,
+            "dict_crossmap": dict_crossmap, "map_codes": map_codes}
 
 
 class JaxOps(Ops):
@@ -267,7 +353,8 @@ class JaxOps(Ops):
 
     def __init__(self, mode: str = "auto", block: int = 1024,
                  min_bucket: int | None = None,
-                 cache_bytes: int = 256 << 20) -> None:
+                 cache_bytes: int = 256 << 20,
+                 compress: bool | None = None) -> None:
         if mode not in ("auto", "pallas", "interpret"):
             raise ValueError(f"unknown JaxOps mode: {mode!r}")
         self.mode = mode
@@ -281,6 +368,19 @@ class JaxOps(Ops):
         self.transfers = TransferCounter()
         self.sort_work = SortWorkCounter()
         self.cache = DeviceArrayCache(cache_bytes)
+        # compressed device-resident columns: on by default (decoded
+        # results are bit-identical by construction); REPRO_COMPRESS=0
+        # or compress=False restores raw int64 buffers end to end
+        if compress is None:
+            env = os.environ.get("REPRO_COMPRESS")
+            compress = env is None or env not in ("0", "false", "off")
+        self.compress = bool(compress)
+        # codec accounting (monotone; residency_stats() reads them)
+        self._res_counts = {"for": 0, "dict": 0, "rle": 0,
+                            "recode_rebuilds": 0, "dict_extends": 0,
+                            "decode_calls": 0, "code_joins": 0,
+                            "cross_recodes": 0}
+        self._dict_bufs: dict[int, object] = {}  # did -> device dictionary
 
     # -- plumbing ---------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -307,6 +407,27 @@ class JaxOps(Ops):
         out[: len(a)] = a
         return out
 
+    @staticmethod
+    def _pad_t(a: np.ndarray, cap: int, fill: int, dtype) -> np.ndarray:
+        """Dtype-aware pad for code-domain buffers (codes ship narrow)."""
+        out = np.full(cap, fill, dtype)
+        out[: len(a)] = a
+        return out
+
+    def _dict_dev(self, codec):
+        """Device copy of a codec's dictionary, shared per ``did`` (the
+        content token) so self-joins and shard views upload it once.
+        Caller holds the lock and the x64 scope."""
+        if codec is None or codec.values is None:
+            return None
+        buf = self._dict_bufs.get(codec.did)
+        if buf is None:
+            if len(self._dict_bufs) > 512:  # dids are content-hashed;
+                self._dict_bufs.clear()     # bound stale-token buildup
+            buf = self._to_dev(codec.values)
+            self._dict_bufs[codec.did] = buf
+        return buf
+
     def _to_dev(self, a: np.ndarray):
         """Upload (counted).  Must run inside the x64 scope or int64
         truncates to int32."""
@@ -324,46 +445,121 @@ class JaxOps(Ops):
                 "interpret": self.interpret}
 
     # -- device-resident column buffers ------------------------------------
+    def _colbuf_nbytes(self, value: dict) -> int:
+        codec = value["codec"]
+        extra = (codec.values.nbytes
+                 if codec is not None and codec.values is not None else 0)
+        return value["buf"].nbytes + extra
+
+    def _extend_colbuf(self, key, version: int, old: dict,
+                       col: np.ndarray, fill: int) -> dict | None:
+        """In-place tail extension of a resident column buffer.  Coded
+        buffers extend in *code domain*: the tail is encoded with the
+        resident codec (dictionary codecs may append-extend their
+        dictionary — existing rank codes are untouched, so derived
+        mirrors stay valid).  Returns ``None`` when the tail escapes the
+        code domain or the capacity — the caller recodes/rebuilds."""
+        jt = _jitted()
+        n = len(col)
+        n_old = old["n"]
+        cap = old["buf"].shape[0]
+        delta = col[n_old:]
+        dcap = self._delta_bucket(len(delta))
+        if n > cap or n_old + dcap > cap:
+            return None
+        codec = old["codec"]
+        if codec is None:
+            buf = jt["extend_buffer"](
+                old["buf"], self._to_dev(self._pad(delta, dcap, fill)),
+                n_old)
+            value = {"buf": buf, "n": n,
+                     "kmin": min(old["kmin"], int(delta.min())),
+                     "kmax": max(old["kmax"], int(delta.max())),
+                     "codec": None, "dvals": None}
+        else:
+            enc = codecs.try_encode_delta(codec, delta)
+            if enc is None:
+                return None
+            new_codec, dcodes = enc
+            if new_codec.did != codec.did:
+                self._res_counts["dict_extends"] += 1
+            buf = jt["extend_buffer"](
+                old["buf"],
+                self._to_dev(self._pad_t(dcodes, dcap,
+                                         codec.pad_code(fill),
+                                         codec.dtype)),
+                n_old)
+            value = {"buf": buf, "n": n,
+                     "kmin": min(old["kmin"], int(dcodes.min())),
+                     "kmax": max(old["kmax"], int(dcodes.max())),
+                     "codec": new_codec,
+                     "dvals": self._dict_dev(new_codec)}
+        self.cache.put(key, version, value, self._colbuf_nbytes(value))
+        self.cache.note_extended(key)
+        return value
+
     def _resident_column(self, cache_key, version: int, col: np.ndarray,
-                         fill: int) -> dict:
+                         fill: int, *, encode: bool | None = None,
+                         hint: str | None = None) -> dict:
         """Device buffer for an append-only int64 column.
 
-        Returns ``{"buf", "n", "kmin", "kmax"}`` with ``buf`` padded to a
-        power-of-two capacity with ``fill``.  A cached entry at an older
-        version whose length is a prefix of ``col`` is *extended* —
-        only the appended tail is uploaded.  Caller holds the lock and
-        the x64 scope.
+        Returns ``{"buf", "n", "kmin", "kmax", "codec", "dvals"}``.
+        With ``codec=None`` the buffer is the raw int64 column padded
+        with ``fill`` and ``kmin``/``kmax`` are value bounds.  With a
+        codec the buffer holds *codes* in the codec's narrow dtype,
+        ``kmin``/``kmax`` are **code-domain** bounds (what the tagged
+        sort machinery needs), pads are the codec's code-domain twin of
+        ``fill``, and ``dvals`` is the device dictionary (dict codecs).
+        A cached entry at an older version whose length is a prefix of
+        ``col`` is *extended* — only the appended (encoded) tail is
+        uploaded.  ``encode=False`` forces raw (packed join keys span
+        >= 2^32 and cannot narrow; the write-side value lane pads with
+        0, which is a legal code).  Caller holds the lock and the x64
+        scope.
         """
         key = ("colbuf", cache_key, fill)
         n = len(col)
         hit = self.cache.get(key, version)  # counts hit/miss/stale
         if hit is not None and hit["n"] == n:
             return hit
-        jt = _jitted()
         e = self.cache.get_any(key)
         if (e is not None and e.version < version and e.value["n"] < n):
-            old = e.value
-            n_old = old["n"]
-            cap = old["buf"].shape[0]
-            delta = col[n_old:]
-            dcap = self._delta_bucket(len(delta))
-            if n <= cap and n_old + dcap <= cap:
-                buf = jt["extend_buffer"](
-                    old["buf"], self._to_dev(self._pad(delta, dcap, fill)),
-                    n_old)
-                value = {"buf": buf, "n": n,
-                         "kmin": min(old["kmin"], int(delta.min())),
-                         "kmax": max(old["kmax"], int(delta.max()))}
-                self.cache.put(key, version, value, buf.nbytes)
-                self.cache.note_extended(key)
+            value = self._extend_colbuf(key, version, e.value, col, fill)
+            if value is not None:
                 return value
+            if e.value["codec"] is not None:
+                self._res_counts["recode_rebuilds"] += 1
         # full (re-)upload: first sight of this column, non-append-only
-        # change, or capacity growth
+        # change, capacity growth, or a tail that escaped the code domain
+        do_encode = self.compress if encode is None else encode
+        codec = payload = None
+        if do_encode and n:
+            codec, payload = codecs.choose_codec(col, hint=hint)
+            # a rebuild whose fresh codec encodes *identically* to the
+            # displaced one (same FoR ref+width, or same dictionary
+            # content) keeps the old code-domain identity: existing
+            # coded state (mirror runs) stays mergeable.  Capacity
+            # growth hits this constantly; only true renumberings get a
+            # fresh cid.
+            if codec is not None and e is not None:
+                oldc = e.value["codec"]
+                if oldc is not None and codecs.same_code_domain(oldc,
+                                                                codec):
+                    codec = dataclasses.replace(codec, cid=oldc.cid)
         cap = self._bucket(n)
-        buf = self._to_dev(self._pad(col, cap, fill))
-        value = {"buf": buf, "n": n,
-                 "kmin": int(col.min()), "kmax": int(col.max())}
-        self.cache.put(key, version, value, buf.nbytes)
+        if codec is None:
+            buf = self._to_dev(self._pad(col, cap, fill))
+            value = {"buf": buf, "n": n, "kmin": int(col.min()),
+                     "kmax": int(col.max()), "codec": None, "dvals": None}
+        else:
+            self._res_counts[codec.kind] += 1
+            buf = self._to_dev(self._pad_t(payload, cap,
+                                           codec.pad_code(fill),
+                                           codec.dtype))
+            value = {"buf": buf, "n": n, "kmin": int(payload.min()),
+                     "kmax": int(payload.max()), "codec": codec,
+                     "dvals": self._dict_dev(codec)}
+        self.cache.put(key, version, value, self._colbuf_nbytes(value))
         return value
 
     # -- primitives -------------------------------------------------------
@@ -383,7 +579,7 @@ class JaxOps(Ops):
 
     def _mirror_sort_device(self, cache_key, version: int, buf, n: int,
                             kmin: int, kmax: int, n_dead: int,
-                            keys64=None, alive=None):
+                            keys64=None, alive=None, codec=None):
         """(sorted, perm, real length) device arrays for a cached
         mirror, maintained incrementally: when the resident
         ``MirrorRuns`` entry is an append-only prefix of the column at
@@ -399,8 +595,15 @@ class JaxOps(Ops):
         ``n_dead > 0``) **compacts**: only the alive rows are sorted
         (host-gathered, transient upload) and the seeded run maps its
         tag bits back to original row ids, so the mirror — and every
-        merge after it — stops carrying dead rows.  Caller holds the
-        lock and the x64 scope."""
+        merge after it — stops carrying dead rows.
+
+        With a ``codec`` the buffer (and therefore the whole mirror)
+        lives in code domain: ``kmin``/``kmax`` are code bounds — narrow
+        codes are what lets wide-spread columns pass
+        ``fits_tagged_width`` — and the resident run remembers the
+        codec's ``cid``, refusing to merge across a recode (a recode
+        renumbers existing rows, so the old run's tagged codes are in a
+        dead domain).  Caller holds the lock and the x64 scope."""
         from repro.kernels.sortmerge.ops import (fits_tagged_width,
                                                  merge_sorted_mirror_impl,
                                                  tag_bits_for,
@@ -408,6 +611,7 @@ class JaxOps(Ops):
         cap = buf.shape[0]
         tb = tag_bits_for(cap)
         fits = fits_tagged_width(kmin, kmax, cap)
+        cid = codec.cid if codec is not None else 0
         key = ("runs", cache_key)
         ent = self.cache.get_any(key)
         runs = ent.value if ent is not None else None
@@ -423,6 +627,7 @@ class JaxOps(Ops):
             carried < 0 or carried * 4 > max(n - n_dead, 1))
         if (runs is not None and fits and not compacting and not churned
                 and runs.cap == cap and runs.tag_bits == tb
+                and runs.cid == cid
                 and runs.src_n < n and runs.kmin >= kmin):
             d = n - runs.src_n
             dcap = self._delta_bucket(d)
@@ -434,7 +639,7 @@ class JaxOps(Ops):
                 self.cache.put(key, version, MirrorRuns(
                     tagged=merged, n=runs.n + d, kmin=kmin, cap=cap,
                     tag_bits=tb, merges=runs.merges + 1,
-                    n_dead=runs.n_dead, src_n=n), merged.nbytes)
+                    n_dead=runs.n_dead, src_n=n, cid=cid), merged.nbytes)
                 self.sort_work.count_merge(dcap * 8)
                 return sk, perm, runs.n + d
         rebuild = (runs is not None and not compacting and
@@ -453,6 +658,10 @@ class JaxOps(Ops):
                 return None, None, 0
             ckeys = keys64[rows]
             ccap = self._bucket(m)
+            if codec is not None:
+                # stay in code domain so the seeded run matches the
+                # resident buffer's domain (same cid as the colbuf)
+                ckeys = codecs.encode_with(codec, ckeys).astype(np.int64)
             cbuf = self._to_dev(self._pad(ckeys, ccap, INT64_MAX))
             sk, permc = self._stable_perm_device(
                 cbuf, m, int(ckeys.min()), int(ckeys.max()))
@@ -475,7 +684,8 @@ class JaxOps(Ops):
                                             tag_bits=tb)
                 self.cache.put(key, version, MirrorRuns(
                     tagged=tagged, n=m, kmin=kmin, cap=cap, tag_bits=tb,
-                    merges=0, n_dead=n_dead, src_n=n), tagged.nbytes)
+                    merges=0, n_dead=n_dead, src_n=n, cid=cid),
+                    tagged.nbytes)
             else:
                 self.cache.invalidate(key)
             return sk, perm, m
@@ -487,7 +697,7 @@ class JaxOps(Ops):
             # run holds ALL n rows (nothing compacted out): n_dead=0
             self.cache.put(key, version, MirrorRuns(
                 tagged=tagged, n=n, kmin=kmin, cap=cap, tag_bits=tb,
-                merges=0, n_dead=0, src_n=n), tagged.nbytes)
+                merges=0, n_dead=0, src_n=n, cid=cid), tagged.nbytes)
         else:
             # width overflow: the XLA-lexsort output has no tagged form
             # to merge into — appends keep re-sorting until the span
@@ -497,12 +707,14 @@ class JaxOps(Ops):
 
     def sort_perm(self, keys: np.ndarray, *, cache_key=None,
                   version: int | None = None, n_dead: int = 0,
-                  alive=None) -> tuple[np.ndarray, np.ndarray]:
+                  alive=None, hint: str | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
         keys = np.asarray(keys)
         n = len(keys)
         if n == 0:
             return keys.astype(np.int64), np.empty(0, np.int64)
         use_cache = cache_key is not None and version is not None
+        codec = None
         if use_cache:
             hit = self.cache.get(("perm", cache_key), version)
             if hit is not None:
@@ -511,11 +723,12 @@ class JaxOps(Ops):
         with self._lock, self._x64():
             if use_cache:
                 colv = self._resident_column(cache_key, version, keys64,
-                                             INT64_MAX)
+                                             INT64_MAX, hint=hint)
                 buf, kmin, kmax = colv["buf"], colv["kmin"], colv["kmax"]
+                codec = colv["codec"]
                 sk, perm, n_real = self._mirror_sort_device(
                     cache_key, version, buf, n, kmin, kmax, int(n_dead),
-                    keys64=keys64, alive=alive)
+                    keys64=keys64, alive=alive, codec=codec)
                 if sk is None:  # fully tombstoned: empty mirror
                     out = (np.empty(0, np.int64), np.empty(0, np.int64))
                     self.cache.invalidate(("permdev", cache_key))
@@ -548,10 +761,28 @@ class JaxOps(Ops):
                 # stash the device-side sorted mirror too: batched
                 # rank-1 probes (`batch_probe`) search it without ever
                 # re-uploading the sorted column (the permutation is
-                # consumed host-side only, so it is not pinned)
+                # consumed host-side only, so it is not pinned).  Coded
+                # columns stash the *narrow code-domain* mirror — probes
+                # are host-encoded into the same domain — and decode the
+                # sorted keys in-program for the host mirror (decoded
+                # results stay bit-identical to the raw path).
+                if codec is not None:
+                    jt = _jitted()
+                    sk_store = jt["narrow_sorted"](sk, n_real,
+                                                   codec.dtype)
+                    self._res_counts["decode_calls"] += 1
+                    if codec.kind == "dict":
+                        sk = jt["decode_sorted_dict"](sk, n_real,
+                                                      colv["dvals"])
+                    else:
+                        sk = jt["decode_sorted_for"](sk, n_real,
+                                                     codec.ref)
+                else:
+                    sk_store = sk
                 self.cache.put(("permdev", cache_key), version,
-                               {"sk": sk, "perm": None, "n": n_real},
-                               sk.nbytes)
+                               {"sk": sk_store, "perm": None,
+                                "n": n_real, "codec": codec},
+                               sk_store.nbytes)
             # copy the slices: a view would pin the whole cap-sized base
             # array while the cache accounts only the sliced bytes
             out = (np.ascontiguousarray(self._to_host(sk)[:n_real]),
@@ -624,13 +855,22 @@ class JaxOps(Ops):
         use_cache = rkeys_key is not None and rkeys_version is not None
         with self._lock, self._x64():
             # conversions live inside enable_x64 or int64 truncates to int32
-            lp = self._to_dev(self._pad(lkeys, self._bucket(n), INT64_MAX))
             if use_cache:
-                rp = self._resident_column(rkeys_key, rkeys_version, rkeys,
-                                           INT64_MIN)["buf"]
+                colv = self._resident_column(rkeys_key, rkeys_version,
+                                             rkeys, INT64_MIN)
+                rp = colv["buf"]
+                if colv["codec"] is not None:
+                    # right side is resident in code domain: translate
+                    # the probe keys into the same domain instead of
+                    # decoding the resident buffer.  Absent left keys
+                    # become ``no_match_code`` (> every real code, <
+                    # both pad sentinels), which matches nothing — the
+                    # raw path's answer.
+                    lkeys = codecs.encode_probes(colv["codec"], lkeys)
             else:
                 rp = self._to_dev(
                     self._pad(rkeys, self._bucket(m), INT64_MIN))
+            lp = self._to_dev(self._pad(lkeys, self._bucket(n), INT64_MAX))
             while True:
                 li, ri, valid, total = merge_join_bounded(
                     lp, rp, out_cap=cap, block=self.block,
@@ -648,6 +888,21 @@ class JaxOps(Ops):
             packed = self._to_host(pack_pairs_bounded(li, ri, valid)[:total])
         return packed >> 32, packed & 0xFFFFFFFF
 
+    def _narrow_h2d(self, a: np.ndarray, cap: int, fill: int,
+                    lo: int, hi: int):
+        """Upload an int64 array through a frame-of-reference narrowing
+        when ``[lo, hi]`` fits a smaller dtype, then widen back on
+        device (transient-transfer compression: the affine shift is
+        exact, and the widened buffer restores the original values with
+        lanes past the real prefix re-padded to ``fill``).  Falls back
+        to the raw upload.  Caller holds the lock and the x64 scope."""
+        dt = codecs.smallest_dtype(hi - lo) if self.compress else None
+        if dt is None:
+            return self._to_dev(self._pad(a, cap, fill))
+        nar = self._to_dev(self._pad_t((a - lo).astype(dt), cap,
+                                       np.iinfo(dt).max, dt))
+        return _jitted()["decode_for_n"](nar, lo, len(a), fill)
+
     def unique_mask(self, sorted_keys: np.ndarray) -> np.ndarray:
         x = np.asarray(sorted_keys, np.int64)
         n = len(x)
@@ -655,7 +910,8 @@ class JaxOps(Ops):
             return np.zeros(0, bool)
         # tail pads never influence mask lanes < n, so no sentinel guard
         with self._lock, self._x64():
-            xp = self._to_dev(self._pad(x, self._bucket(n), INT64_MAX))
+            xp = self._narrow_h2d(x, self._bucket(n), INT64_MAX,
+                                  int(x[0]), int(x[-1]))
             if self._use_pallas():
                 from repro.kernels.uniquefilter.uniquefilter import \
                     unique_mask_sorted
@@ -676,8 +932,10 @@ class JaxOps(Ops):
         if keys.max() == INT64_MAX:  # would match the bound-side pads
             return self._host.semi_join(keys, bound)
         with self._lock, self._x64():
-            kp = self._to_dev(self._pad(keys, self._bucket(n), INT64_MAX))
-            bp = self._to_dev(self._pad(bound, self._bucket(m), INT64_MAX))
+            kp = self._narrow_h2d(keys, self._bucket(n), INT64_MAX,
+                                  int(keys.min()), int(keys.max()))
+            bp = self._narrow_h2d(bound, self._bucket(m), INT64_MAX,
+                                  int(bound.min()), int(bound.max()))
             mask = self._to_host(_jitted()["semi_join"](
                 kp, bp, block=self.block, force_pallas=self.force_pallas,
                 interpret=self.interpret))
@@ -812,7 +1070,6 @@ class JaxOps(Ops):
             e = self.cache.get_any(key)
             if e is not None and e.value.n < n:
                 old = e.value
-                cap = old.data.shape[0]
                 n_old = old.n
                 delta = arr[n_old:]
                 dcap = self._delta_bucket(len(delta))
@@ -820,19 +1077,144 @@ class JaxOps(Ops):
                     assume_prefix or (
                         old._host is not None and
                         np.array_equal(arr[:n_old], old._host[:n_old])))
-                if prefix_ok and n <= cap and n_old + dcap <= cap:
-                    buf = jt["extend_buffer"](
-                        old.data, self._to_dev(self._pad(delta, dcap, 0)),
-                        n_old)
-                    lo = min(int(delta.min()), old.lo)
-                    hi = max(int(delta.max()), old.hi)
-                    h = DeviceCol(buf, n, self, lo, hi, host=arr)
-                    self.cache.put(key, version, h, buf.nbytes)
-                    self.cache.note_extended(key)
-                    return h
-            h = self._upload_locked(arr)
-        self.cache.put(key, version, h,
-                       getattr(h.data, "nbytes", 0))
+                if prefix_ok and old.codec is not None:
+                    h = self._extend_res_coded(key, version, old, arr,
+                                               delta, dcap)
+                    if h is not None:
+                        return h
+                    self._res_counts["recode_rebuilds"] += 1
+                elif prefix_ok:
+                    cap = old.data.shape[0]
+                    if n <= cap and n_old + dcap <= cap:
+                        buf = jt["extend_buffer"](
+                            old.data,
+                            self._to_dev(self._pad(delta, dcap, 0)),
+                            n_old)
+                        lo = min(int(delta.min()), old.lo)
+                        hi = max(int(delta.max()), old.hi)
+                        h = DeviceCol(buf, n, self, lo, hi, host=arr)
+                        self.cache.put(key, version, h, buf.nbytes)
+                        self.cache.note_extended(key)
+                        return h
+            h = self._upload_res_locked(arr)
+        self.cache.put(key, version, h, self._res_nbytes(h))
+        return h
+
+    def _res_nbytes(self, h: DeviceCol) -> int:
+        """Cache-accounted bytes of a resident handle: the *coded*
+        footprint (plus the dictionary).  A forced decode materializes a
+        transient int64 buffer on top — that working set is deliberately
+        not accounted (it dies with the handle)."""
+        if h.codec is None:
+            return getattr(h._data, "nbytes", 0)
+        if h.codec.kind == "rle":
+            return h.codes["v"].nbytes + h.codes["l"].nbytes
+        extra = (h.codec.values.nbytes
+                 if h.codec.values is not None else 0)
+        return h.codes.nbytes + extra
+
+    def _decode_thunk(self, codec, codes, dvals):
+        """Deferred device-side decode for a coded resident handle.
+        Runs at most once, on first ``.data`` access; takes NO backend
+        lock (it can fire inside a locked region) and opens its own x64
+        scope (it can equally fire outside one)."""
+        jt = _jitted()
+
+        def thunk():
+            from jax.experimental import enable_x64
+            with enable_x64():
+                self._res_counts["decode_calls"] += 1
+                if codec.kind == "for":
+                    return jt["decode_for"](codes, codec.ref)
+                if codec.kind == "dict":
+                    return jt["decode_dict"](codes, dvals)
+                return jt["decode_rle"](codes["v"], codes["l"],
+                                        cap=codes["cap"])
+        return thunk
+
+    def _coded_handle(self, arr, codec, codes, host) -> DeviceCol:
+        dvals = self._dict_dev(codec) if codec.kind == "dict" else None
+        return DeviceCol(None, len(arr), self, int(arr.min()),
+                         int(arr.max()), host=host, codec=codec,
+                         codes=codes,
+                         thunk=self._decode_thunk(codec, codes, dvals))
+
+    def _upload_res_locked(self, arr) -> DeviceCol:
+        """Resident-column upload: codes when an exact codec beats raw
+        int64 (RLE allowed — resident frontiers are often run-heavy
+        derived columns), raw otherwise.  The handle keeps the code
+        buffer + codec visible (``h.codes`` / ``h.codec``) so joins can
+        run in code domain; the int64 view decodes lazily on device.
+        Caller holds the lock and the x64 scope."""
+        n = len(arr)
+        codec = payload = None
+        if self.compress and n >= 16:
+            codec, payload = codecs.choose_codec(arr, allow_rle=True,
+                                                 min_n=16)
+        if codec is None:
+            return self._upload_locked(arr)
+        self._res_counts[codec.kind] += 1
+        cap = self._delta_bucket(n)
+        if codec.kind == "rle":
+            values, lengths = payload
+            rcap = self._delta_bucket(codec.nruns)
+            codes = {"v": self._to_dev(self._pad(values, rcap, 0)),
+                     "l": self._to_dev(self._pad_t(
+                         lengths, rcap, 0, np.dtype(np.int32))),
+                     "cap": cap}
+        else:
+            codes = self._to_dev(self._pad_t(payload, cap, 0,
+                                             codec.dtype))
+        return self._coded_handle(arr, codec, codes, arr)
+
+    def _extend_res_coded(self, key, version: int, old: DeviceCol,
+                          arr: np.ndarray, delta: np.ndarray,
+                          dcap: int) -> DeviceCol | None:
+        """Code-domain tail extension of a coded resident column: only
+        the encoded tail ships.  Dictionary growth rides the append-only
+        dictionary extension (existing rank codes untouched — same
+        ``cid``); RLE appends run pairs (non-maximal runs are sound).
+        Returns ``None`` when the tail escapes the code domain or the
+        capacity — the caller recode-rebuilds.  Caller holds the lock
+        and the x64 scope."""
+        jt = _jitted()
+        n, n_old = len(arr), old.n
+        codec = old.codec
+        enc = codecs.try_encode_delta(codec, delta)
+        if enc is None:
+            return None
+        new_codec, payload = enc
+        if codec.kind == "rle":
+            rcap = old.codes["v"].shape[0]
+            cap = old.codes["cap"]
+            values, lengths = payload
+            rdcap = self._delta_bucket(len(values))
+            if n > cap or codec.nruns + rdcap > rcap:
+                return None
+            codes = {"v": jt["extend_buffer"](
+                         old.codes["v"],
+                         self._to_dev(self._pad(values, rdcap, 0)),
+                         codec.nruns),
+                     "l": jt["extend_buffer"](
+                         old.codes["l"],
+                         self._to_dev(self._pad_t(
+                             lengths, rdcap, 0, np.dtype(np.int32))),
+                         codec.nruns),
+                     "cap": cap}
+        else:
+            cap = old.codes.shape[0]
+            if n > cap or n_old + dcap > cap:
+                return None
+            if new_codec.did != codec.did:
+                self._res_counts["dict_extends"] += 1
+            codes = jt["extend_buffer"](
+                old.codes,
+                self._to_dev(self._pad_t(payload, dcap, 0,
+                                         codec.dtype)),
+                n_old)
+        h = self._coded_handle(arr, new_codec, codes, arr)
+        self.cache.put(key, version, h, self._res_nbytes(h))
+        self.cache.note_extended(key)
         return h
 
     def cross_join_h(self, lpay, rpay, n_l: int, n_r: int):
@@ -1057,9 +1439,30 @@ class JaxOps(Ops):
             if hit is not None:
                 return hit
         hash_keys = algo == "HJ"
+        # code-domain join: when both key columns encode equal values to
+        # equal codes (same join token — same-table self-joins and shard
+        # views share dictionaries by content), join directly over the
+        # narrow code buffers and never decode either side.  Two dict
+        # columns with *different* dictionaries recode the smaller side
+        # on device through a rank-to-rank crossmap (absent values map
+        # to the target's never-matching code).  Both paths are sound
+        # for HJ too: splitmix of a code is a consistent hash domain and
+        # the in-program exact check compares codes, which is value
+        # equality under the shared encoding.
+        lt = codecs.join_token(lkeys.codec)
+        rt = codecs.join_token(rkeys.codec)
+        code_join = lt is not None and lt == rt
+        cross_dict = (not code_join
+                      and lkeys.codec is not None
+                      and rkeys.codec is not None
+                      and lkeys.codec.kind == "dict"
+                      and rkeys.codec.kind == "dict")
         # a real left key equal to the right pad sentinel would match pad
-        # lanes (MJ only; the hash domain is checked inside the program)
-        if not hash_keys and (lkeys.lo is None or lkeys.lo == INT64_MIN):
+        # lanes (MJ only; the hash domain is checked inside the program).
+        # Code-domain keys can't reach the sentinels (reserved headroom
+        # at both dtype ends), so the guard only applies to raw keys.
+        if (not hash_keys and not code_join and not cross_dict
+                and (lkeys.lo is None or lkeys.lo == INT64_MIN)):
             out = self._join_gather_host(lkeys, rkeys, lpay, rpay,
                                          verify, algo)
             for h in out[0] + out[1]:
@@ -1071,15 +1474,37 @@ class JaxOps(Ops):
         cap = self._bucket(max(lkeys.n, rkeys.n))
         bad = False
         with self._lock, self._x64():
-            cap_l = lkeys.data.shape[0]
-            cap_r = rkeys.data.shape[0]
+            jt = _jitted()
+            if code_join:
+                lkb, rkb = lkeys.codes, rkeys.codes
+                self._res_counts["code_joins"] += 1
+            elif cross_dict:
+                self._res_counts["cross_recodes"] += 1
+                if lkeys.n <= rkeys.n:
+                    cmap = jt["dict_crossmap"](
+                        self._dict_dev(lkeys.codec),
+                        self._dict_dev(rkeys.codec),
+                        rkeys.codec.no_match_code)
+                    lkb = jt["map_codes"](cmap, lkeys.codes)
+                    rkb = rkeys.codes
+                else:
+                    cmap = jt["dict_crossmap"](
+                        self._dict_dev(rkeys.codec),
+                        self._dict_dev(lkeys.codec),
+                        lkeys.codec.no_match_code)
+                    lkb = lkeys.codes
+                    rkb = jt["map_codes"](cmap, rkeys.codes)
+            else:
+                lkb, rkb = lkeys.data, rkeys.data
+            cap_l = lkb.shape[0]
+            cap_r = rkb.shape[0]
             lp = tuple(self._fit_cap(p.data, cap_l) for p in lpay)
             rp = tuple(self._fit_cap(p.data, cap_r) for p in rpay)
             vl = tuple(self._fit_cap(a.data, cap_l) for a, _ in verify)
             vr = tuple(self._fit_cap(b.data, cap_r) for _, b in verify)
             while True:
                 louts, routs, stats = merge_join_gather_bounded(
-                    lkeys.data, rkeys.data, lkeys.n, rkeys.n, lp, rp,
+                    lkb, rkb, lkeys.n, rkeys.n, lp, rp,
                     vl, vr, out_cap=cap, block=self.block,
                     force_pallas=self.force_pallas,
                     interpret=self.interpret, hash_keys=hash_keys)
@@ -1187,11 +1612,16 @@ class JaxOps(Ops):
                        if use_cache else None)
                 if pkv is None:
                     if use_cache:
+                        # forced raw: packed join keys span >= 2^32 (no
+                        # narrowing possible) and the value lane's pad
+                        # fill 0 is a legal *code*, which would alias a
+                        # real row under an encoding
                         kb = self._resident_column(
                             ("pk", cache_uid), version, old_keys,
-                            INT64_MIN)
+                            INT64_MIN, encode=False)
                         vb = self._resident_column(
-                            ("vals", cache_uid), version, old_vals, 0)
+                            ("vals", cache_uid), version, old_vals, 0,
+                            encode=False)
                         cap_o = max(kb["buf"].shape[0],
                                     vb["buf"].shape[0])
                         kbuf = self._fit_cap(kb["buf"], cap_o)
@@ -1216,6 +1646,45 @@ class JaxOps(Ops):
             self._memo_put(key, h, buf.nbytes)
         return h
 
+    def residency_stats(self) -> dict:
+        """Footprint report for the compressed-resident tier: actual
+        (coded) bytes vs what the same resident columns would occupy as
+        raw int64 buffers, plus the codec event counters.  Transient
+        buffers (probe uploads, join outputs) and derived mirrors are
+        out of scope — the ratio measures the *storage* tier the codecs
+        replace."""
+        from repro.backend.handles import DeviceCol
+        out = {"resident_bytes_raw": 0, "resident_bytes_coded": 0,
+               "columns_raw": 0, "columns_coded": 0,
+               "codecs": dict(self._res_counts),
+               "compress": self.compress}
+        with self.cache._lock:
+            entries = [(k, e.value) for k, e in self.cache._entries.items()]
+        for key, v in entries:
+            fam = key[0] if isinstance(key, tuple) else None
+            if fam == "colbuf" and isinstance(v, dict) and "buf" in v:
+                coded = self._colbuf_nbytes(v)
+                raw = v["buf"].shape[0] * 8
+                if v["codec"] is None:
+                    out["columns_raw"] += 1
+                else:
+                    out["columns_coded"] += 1
+            elif fam == "rescol" and isinstance(v, DeviceCol):
+                coded = self._res_nbytes(v)
+                if v.codec is None:
+                    raw = coded
+                    out["columns_raw"] += 1
+                else:
+                    cap = (v.codes["cap"] if v.codec.kind == "rle"
+                           else v.codes.shape[0])
+                    raw = cap * 8
+                    out["columns_coded"] += 1
+            else:
+                continue
+            out["resident_bytes_raw"] += raw
+            out["resident_bytes_coded"] += coded
+        return out
+
     def batch_probe(self, sorted_keys, probes, *, cache_key=None,
                     version: int | None = None):
         probes = np.asarray(probes, np.int64)
@@ -1235,10 +1704,19 @@ class JaxOps(Ops):
                 n_real = m
                 if use_cache:
                     self.cache.put(("permdev", cache_key), version,
-                                   {"sk": buf, "perm": None, "n": m},
+                                   {"sk": buf, "perm": None, "n": m,
+                                    "codec": None},
                                    buf.nbytes)
             else:
                 buf, n_real = ent["sk"], ent["n"]
+                codec = ent.get("codec")
+                if codec is not None:
+                    # the resident mirror holds narrow codes: translate
+                    # the probes into the same domain (absent values map
+                    # to ``no_match_code``, whose [lo, hi) is empty —
+                    # exactly the raw path's answer).  The searchsorted
+                    # clamps by ``n_real`` keep out-of-range codes sound.
+                    probes = codecs.encode_probes(codec, probes)
             pd = self._to_dev(self._pad(probes, self._bucket(n),
                                         INT64_MAX))
             res = self._to_host(_jitted()["batch_probe_j"](

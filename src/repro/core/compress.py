@@ -9,7 +9,10 @@ Codecs (picked per column by measured size):
 * RLE    — (values, run_lengths); join outputs are grouped by join key,
            so key columns are long runs;
 * DELTA  — first value + int32 deltas; row-id columns from index lookups
-           are sorted/near-sorted.
+           are sorted/near-sorted;
+* DICT   — sorted distinct values + narrow rank codes; attribute-like
+           columns repeat a handful of wide (interned-hash) values that
+           neither RLE (interleaved) nor DELTA (wide jumps) captures.
 
 Per Abadi et al. (paper ref [1]) some operations run directly on the
 compressed form: ``rle_equals`` filters an RLE column without
@@ -61,6 +64,13 @@ def encode_column(a: np.ndarray) -> CompressedColumn:
     if len(deltas) == 0 or (abs(deltas).max() <= np.iinfo(np.int32).max):
         candidates.append(CompressedColumn(
             "delta", n, (a[:1], deltas.astype(np.int32))))
+    distinct = np.unique(a)
+    for dt in (np.int8, np.int16):
+        if len(distinct) <= np.iinfo(dt).max:
+            codes = np.searchsorted(distinct, a).astype(dt)
+            candidates.append(CompressedColumn(
+                "dict", n, (distinct, codes)))
+            break
     return min(candidates, key=lambda c: c.nbytes())
 
 
@@ -70,6 +80,9 @@ def decode_column(c: CompressedColumn) -> np.ndarray:
     if c.codec == "rle":
         values, lengths = c.payload
         return np.repeat(values.astype(np.int64), lengths)
+    if c.codec == "dict":
+        distinct, codes = c.payload
+        return distinct[codes.astype(np.int64)]
     first, deltas = c.payload
     return np.concatenate([first, first + np.cumsum(
         deltas, dtype=np.int64)])
@@ -95,22 +108,57 @@ def rle_count(c: CompressedColumn, value: int) -> int:
 
 
 class CompressedBindings:
-    """Columnar bindings stored compressed (decoded lazily per column)."""
+    """Columnar bindings stored compressed (decoded lazily per column).
+
+    Decoded columns are memoized in a bytes-bounded LRU: repeated
+    ``col`` access (rule bodies touch the same join column once per
+    condition) costs one decode, not one per access, while the resident
+    overhead stays capped at ``cache_bytes`` of decoded data.  Evicted
+    columns simply re-decode on the next touch — the compressed form is
+    the source of truth, so the cache is pure working set.
+    """
 
     layout = "CC"
 
-    def __init__(self, cols: dict[str, np.ndarray]):
+    def __init__(self, cols: dict[str, np.ndarray],
+                 cache_bytes: int = 1 << 22):
         self._enc = {k: encode_column(v) for k, v in cols.items()}
         self.n = next(iter(self._enc.values())).n if self._enc else 0
+        self._cache_bytes = int(cache_bytes)
+        self._dec: dict[str, np.ndarray] = {}   # insertion order = LRU
+        self._dec_bytes = 0
+        self.decode_hits = 0
+        self.decode_misses = 0
 
     def names(self) -> list[str]:
         return list(self._enc)
 
     def col(self, name: str) -> np.ndarray:
-        return decode_column(self._enc[name])
+        a = self._dec.get(name)
+        if a is not None:
+            self.decode_hits += 1
+            self._dec.pop(name)       # refresh recency
+            self._dec[name] = a
+            return a
+        self.decode_misses += 1
+        a = decode_column(self._enc[name])
+        a.flags.writeable = False     # shared across accesses
+        if a.nbytes <= self._cache_bytes:
+            self._dec[name] = a
+            self._dec_bytes += a.nbytes
+            while self._dec_bytes > self._cache_bytes and len(self._dec) > 1:
+                old = self._dec.pop(next(iter(self._dec)))
+                self._dec_bytes -= old.nbytes
+        return a
 
     def nbytes(self) -> int:
         return sum(c.nbytes() for c in self._enc.values())
+
+    def cache_stats(self) -> dict[str, int]:
+        return {"decode_hits": self.decode_hits,
+                "decode_misses": self.decode_misses,
+                "cached_bytes": self._dec_bytes,
+                "cached_cols": len(self._dec)}
 
     def codecs(self) -> dict[str, str]:
         return {k: c.codec for k, c in self._enc.items()}

@@ -64,11 +64,16 @@ def _owner(keys: jnp.ndarray, n_dev: int) -> jnp.ndarray:
 
 
 def bucket_scatter(dest: jnp.ndarray, payload: jnp.ndarray, n_dev: int,
-                   slot_cap: int, valid: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+                   slot_cap: int, valid: jnp.ndarray,
+                   sentinel: int = SENTINEL) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Scatter ``payload`` rows into a ``[n_dev * slot_cap]`` send buffer by
     destination device.  Returns (buffer, overflow_count).  Out-of-capacity
     rows are dropped and counted (the host loop re-runs with a bigger slot
-    cap if the overflow flag trips — bounded-buffer discipline)."""
+    cap if the overflow flag trips — bounded-buffer discipline).
+
+    ``sentinel`` fills empty slots; compressed-wire lanes (sub-int64
+    payload dtypes) pass their own dtype's max, since the int64 default
+    does not fit."""
     n = dest.shape[0]
     d = jnp.where(valid, dest, n_dev)
     order = jnp.argsort(d)
@@ -78,7 +83,7 @@ def bucket_scatter(dest: jnp.ndarray, payload: jnp.ndarray, n_dev: int,
     idx_in_bucket = jnp.arange(n) - starts[jnp.clip(d_sorted, 0, n_dev - 1)]
     ok = (d_sorted < n_dev) & (idx_in_bucket < slot_cap)
     pos = jnp.where(ok, d_sorted * slot_cap + idx_in_bucket, n_dev * slot_cap)
-    buf = jnp.full((n_dev * slot_cap,), SENTINEL, dtype=payload.dtype)
+    buf = jnp.full((n_dev * slot_cap,), sentinel, dtype=payload.dtype)
     buf = buf.at[pos].set(payload_sorted, mode="drop")
     overflow = jnp.sum((d_sorted < n_dev) & (idx_in_bucket >= slot_cap))
     return buf, overflow

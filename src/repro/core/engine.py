@@ -95,6 +95,8 @@ class EngineConfig:
     max_workers: int = 8
     shards: int | str = 1         # 1 | N | "auto" — hash-partitioned engine
     result_cache: bool = True     # repeat-query (version-keyed) fast path
+    compress: bool | None = None  # device-resident column codecs (None:
+    #                               REPRO_COMPRESS env, default on)
 
     @staticmethod
     def infer1(backend: str = "numpy") -> "EngineConfig":
@@ -264,7 +266,8 @@ class HiperfactEngine:
         if self.config.eval_mode not in ("full", "delta", "auto"):
             raise ValueError(
                 f"unknown eval_mode: {self.config.eval_mode!r}")
-        self.ops = get_backend(self.config.backend)
+        self.ops = get_backend(self.config.backend,
+                               compress=self.config.compress)
         self.store = FactStore(self.config.index_backend, ops=self.ops)
         self.rules: list[Rule] = []
         self._trees: DerivationTrees | None = None

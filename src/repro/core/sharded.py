@@ -191,7 +191,8 @@ class _ShardWorker(HiperfactEngine):
         self.parent = parent
         # per-shard counters + device-array cache: a fresh Ops instance
         # (get_backend shares one per process; jit caches stay shared)
-        self.ops = fresh_backend(config.backend)
+        self.ops = fresh_backend(config.backend,
+                                 compress=config.compress)
         self.store = FactStore(config.index_backend, ops=self.ops)
         self.store.strings = parent.store.strings  # ONE dictionary
         self._result_cache = None  # the parent caches query results
@@ -267,7 +268,8 @@ class ShardedEngine(HiperfactEngine):
         self._lock = threading.Lock()
         from repro.distributed.pipeline import FrontierExchange
         self.exchange = FrontierExchange(
-            self.n_shards, prefer_device=config.backend != "numpy")
+            self.n_shards, prefer_device=config.backend != "numpy",
+            compress=config.compress)
         self.exchange_log: list[dict] = []
         # per-types-tuple memo of gathered snapshots, invalidated by the
         # shard version-token vector (satellite: repeat non-decomposable
@@ -327,6 +329,9 @@ class ShardedEngine(HiperfactEngine):
                 "a2a_rows": log["rows"],
                 "a2a_payload_bytes": log["payload_bytes"],
                 "a2a_padded_bytes": log["padded_bytes"],
+                "a2a_bytes_raw": log["payload_bytes"],
+                "a2a_bytes_wire": log.get("payload_bytes_wire",
+                                          log["payload_bytes"]),
                 "applied_fresh": changed,
             })
             if changed == 0 and not self._scrub_round:

@@ -128,10 +128,16 @@ class FrontierExchange:
     backend): the same permutation on host arrays.
     """
 
-    def __init__(self, n_shards: int, prefer_device: bool = True) -> None:
+    def __init__(self, n_shards: int, prefer_device: bool = True,
+                 compress: bool | None = None) -> None:
         self.n_shards = n_shards
         self.mesh = None
-        self._fns: dict[tuple[int, int], object] = {}
+        self._fns: dict[tuple, object] = {}
+        if compress is None:
+            import os
+            env = os.environ.get("REPRO_COMPRESS")
+            compress = env is None or env not in ("0", "false", "off")
+        self.compress = bool(compress)
         if prefer_device and n_shards > 1:
             try:
                 from repro.distributed.sharding import fact_mesh
@@ -144,8 +150,11 @@ class FrontierExchange:
         return self.mesh is not None
 
     # -- device path -------------------------------------------------------
-    def _build(self, in_cap: int, slot_cap: int):
-        fn = self._fns.get((in_cap, slot_cap))
+    def _build(self, in_cap: int, slot_cap: int, sentinels: tuple):
+        """Jitted per-(caps, wire dtypes) exchange step.  ``sentinels``
+        are the per-lane empty-slot fills in wire domain — part of the
+        cache key because the lane dtypes follow from them."""
+        fn = self._fns.get((in_cap, slot_cap, sentinels))
         if fn is not None:
             return fn
         from repro.core.distributed import _exchange, bucket_scatter
@@ -156,9 +165,9 @@ class FrontierExchange:
             d = dest.reshape(-1)
             valid = d >= 0
             out = []
-            for lane in (key, val, meta):
+            for lane, sent in zip((key, val, meta), sentinels):
                 buf, _ovf = bucket_scatter(d, lane.reshape(-1), D, slot_cap,
-                                           valid)
+                                           valid, sentinel=sent)
                 out.append(_exchange(buf, (axis,), D, slot_cap)[None, :])
             return tuple(out)
 
@@ -166,26 +175,43 @@ class FrontierExchange:
             step, mesh=self.mesh,
             in_specs=(P(axis),) * 4, out_specs=(P(axis),) * 3,
             check_rep=False))
-        self._fns[(in_cap, slot_cap)] = fn
+        self._fns[(in_cap, slot_cap, sentinels)] = fn
         return fn
 
-    def _exchange_device(self, dest, key, val, meta, slot_cap):
+    def _lane_plans(self, key, val, meta):
+        """Per-lane wire plans for one exchange round (``None`` entries
+        ship raw int64).  The key and meta lanes narrow well (dense
+        interned ids / small table-and-kind tags); the value lane may
+        hold arbitrary bit patterns and usually stays raw."""
+        from repro.distributed import compression as C
+        if not self.compress:
+            return (None, None, None)
+        return tuple(C.lane_plan(list(lane)) for lane in (key, val, meta))
+
+    def _exchange_device(self, dest, key, val, meta, slot_cap, plans):
+        from repro.distributed import compression as C
         D = self.n_shards
         in_cap = _pow2(max(1, max(len(d) for d in dest)))
         dst = np.full((D, in_cap), -1, np.int32)
-        lanes = [np.zeros((D, in_cap), np.int64) for _ in range(3)]
+        lanes = [np.zeros((D, in_cap),
+                          np.int64 if p is None else p[1])
+                 for p in plans]
         for s in range(D):
             n = len(dest[s])
             dst[s, :n] = dest[s]
-            for lane, col in zip(lanes, (key[s], val[s], meta[s])):
-                lane[s, :n] = col
-        fn = self._build(in_cap, slot_cap)
+            for lane, col, p in zip(lanes, (key[s], val[s], meta[s]),
+                                    plans):
+                lane[s, :n] = C.narrow_lane(col, p)
+        sentinels = tuple(C.lane_sentinel(p) for p in plans)
+        fn = self._build(in_cap, slot_cap, sentinels)
         bk, bv, bm = (np.asarray(x) for x in fn(dst, *lanes))
-        sent = jnp.iinfo(jnp.int64).max
         out = []
         for d in range(D):
-            ok = bm[d] != sent
-            out.append((bk[d][ok], bv[d][ok], bm[d][ok]))
+            # row validity rides the meta lane: its wire sentinel marks
+            # empty slots (real metas keep reserved headroom below it)
+            ok = bm[d] != sentinels[2]
+            out.append(tuple(C.widen_lane(b[d][ok], p)
+                             for b, p in zip((bk, bv, bm), plans)))
         return out
 
     # -- host path ---------------------------------------------------------
@@ -213,8 +239,12 @@ class FrontierExchange:
         Returns ``([(key, val, meta)] * n_shards, stats)``.  Stats:
         ``payload_bytes`` (real rows x 24B — the Δ-proportional
         traffic), ``padded_bytes`` (what the bounded-buffer a2a
-        actually moved), ``rows``, ``slot_cap``, ``device``.
+        actually moved), plus the compressed-wire mirror of each
+        (``payload_bytes_wire`` / ``padded_bytes_wire``) when the
+        per-round frame-of-reference lane narrowing is on — the wire
+        keys equal the raw ones when every lane ships raw.
         """
+        from repro.distributed import compression as C
         D = self.n_shards
         rows = int(sum(len(d) for d in dest))
         counts = np.zeros((D, D), np.int64)
@@ -225,13 +255,26 @@ class FrontierExchange:
         if rows == 0:
             empty = [(np.empty(0, np.int64),) * 3 for _ in range(D)]
             return empty, {"rows": 0, "payload_bytes": 0, "padded_bytes": 0,
-                           "slot_cap": 0, "device": self.device}
+                           "payload_bytes_wire": 0, "padded_bytes_wire": 0,
+                           "slot_cap": 0, "device": self.device,
+                           "compress": self.compress}
+        plans = self._lane_plans(key, val, meta)
+        row_wire = sum(C.wire_itemsize(p) for p in plans)
         if self.device:
-            out = self._exchange_device(dest, key, val, meta, slot_cap)
+            out = self._exchange_device(dest, key, val, meta, slot_cap,
+                                        plans)
             padded = D * D * slot_cap * 3 * 8
+            padded_wire = D * D * slot_cap * row_wire
         else:
+            # host permute moves no wire bytes, but account what the
+            # device transport *would* ship so numpy-backend runs report
+            # comparable compression ratios
             out = self._exchange_host(dest, key, val, meta)
             padded = rows * 3 * 8
+            padded_wire = rows * row_wire
         return out, {"rows": rows, "payload_bytes": rows * 3 * 8,
-                     "padded_bytes": padded, "slot_cap": slot_cap,
-                     "device": self.device}
+                     "padded_bytes": padded,
+                     "payload_bytes_wire": rows * row_wire,
+                     "padded_bytes_wire": padded_wire,
+                     "slot_cap": slot_cap, "device": self.device,
+                     "compress": self.compress}

@@ -43,7 +43,10 @@ def merge_join_bounded(l_keys: jnp.ndarray, r_keys: jnp.ndarray, out_cap: int,
                        block: int = 1024, force_pallas: bool = False,
                        interpret: bool = False):
     """Equi-join -> (li, ri, valid, total).  li/ri index the *original*
-    (unsorted) inputs; up to ``out_cap`` pairs are emitted."""
+    (unsorted) inputs; up to ``out_cap`` pairs are emitted.  Narrow
+    code-domain key buffers (compressed columns) widen on entry."""
+    l_keys = l_keys.astype(jnp.int64)
+    r_keys = r_keys.astype(jnp.int64)
     m = r_keys.shape[0]
     r_sorted, r_perm = device_sort_kv(
         r_keys, jnp.arange(m, dtype=jnp.int32), block=block,
@@ -118,7 +121,12 @@ def merge_join_gather_bounded(l_keys, r_keys, n_l, n_r,
     must re-run with a larger capacity: candidates past the cap were
     dropped unverified), ``hash_bad`` — a real hashed key collided with a
     pad sentinel (astronomically rare; caller redoes on host).
+
+    Keys may arrive as narrow code-domain buffers (shared-dictionary
+    joins run directly over compressed columns) — widened on entry.
     """
+    l_keys = l_keys.astype(jnp.int64)
+    r_keys = r_keys.astype(jnp.int64)
     cap_l, cap_r = l_keys.shape[0], r_keys.shape[0]
     lane_l = jnp.arange(cap_l, dtype=jnp.int64)
     lane_r = jnp.arange(cap_r, dtype=jnp.int64)

@@ -88,10 +88,13 @@ def device_stable_sort_perm(keys: jnp.ndarray, n_real, kmin, *,
                             interpret: bool = False):
     """Stable (sorted keys, permutation) of ``keys[:n_real]``.
 
-    ``keys``: int64, padded to a power-of-two ``cap`` (pad content is
-    ignored — pad lanes are re-tagged past every real key).  Returns
-    full-``cap`` arrays; lanes >= n_real hold int64-max / their own index.
+    ``keys``: signed integer, padded to a power-of-two ``cap`` (pad
+    content is ignored — pad lanes are re-tagged past every real key).
+    Narrow code-domain buffers (compressed columns) are widened on
+    entry; tagging always runs in int64.  Returns full-``cap`` arrays;
+    lanes >= n_real hold int64-max / their own index.
     """
+    keys = keys.astype(jnp.int64)
     cap = keys.shape[0]
     lane = jnp.arange(cap, dtype=jnp.int64)
     real = lane < n_real
@@ -132,7 +135,7 @@ def device_dedup_rows(cols: tuple, n_real, kmins: jnp.ndarray, *,
     max_code = (jnp.int64(1) << (63 - tag_bits)) - 1
     order = lane
     for ci in range(len(cols) - 1, -1, -1):
-        k = cols[ci][order]
+        k = cols[ci][order].astype(jnp.int64)
         real = order < n_real
         tagged = jnp.where(real,
                            ((k - kmins[ci]) << tag_bits) | lane,
@@ -243,6 +246,7 @@ def merge_sorted_mirror_impl(buf, base_tagged, n_run, delta_start, n_total,
     Returns ``(sorted_keys, perm, merged_tagged)`` — the caller stores
     ``merged_tagged`` back as the next resident run.
     """
+    buf = buf.astype(jnp.int64)  # narrow code buffers widen on entry
     cap = buf.shape[0]
     d = n_total - delta_start
     n_real = n_run + d

@@ -12,7 +12,13 @@ from repro.kernels.uniquefilter.uniquefilter import unique_mask_sorted
 @functools.partial(jax.jit, static_argnames=("force_pallas", "interpret"))
 def unique_sorted_bounded(x: jnp.ndarray, force_pallas: bool = False,
                           interpret: bool = False):
-    """Sort + dedup; returns (values (padded with max), n_unique)."""
+    """Sort + dedup; returns (values (padded with max), n_unique).
+
+    Narrow integer inputs (code-domain buffers from compressed columns)
+    widen to int64 on entry so the mask kernel and the pad sentinel see
+    one dtype."""
+    if jnp.issubdtype(x.dtype, jnp.integer) and x.dtype != jnp.int64:
+        x = x.astype(jnp.int64)
     s = device_sort(x, force_pallas=force_pallas, interpret=interpret)
     if force_pallas or jax.default_backend() == "tpu":
         mask = unique_mask_sorted(s, interpret=interpret)

@@ -24,8 +24,12 @@ third-party dependency:
 * ``sections.sharded`` (since PR 6): shards=1 baseline + shards=N run
   with ``bit_identical`` required true, per-shard ``shard_bytes``, and
   append-round ``a2a`` payloads strictly below the resident payload
-  (frontier traffic must be O(Δ));
-* ``sections.kernels`` rows: ``{"op", "value"}``.
+  (frontier traffic must be O(Δ)); when the PR 8 wire keys are present,
+  ``a2a_bytes_wire`` must not exceed ``a2a_bytes_raw``;
+* ``sections.kernels`` rows: ``{"op", "value"}``;
+* ``sections.compression`` (since PR 8): raw vs coded resident-column
+  runs — one decoded checksum across both required (exact
+  compression), coded resident bytes <= raw, per-codec counters.
 
 Unknown extra keys are allowed everywhere (snapshots may grow); missing
 required keys fail with a path-qualified message and exit code 1.
@@ -161,6 +165,14 @@ def check_sharded(s: dict, where: str) -> None:
                           f"exchange ({b}) not smaller than resident "
                           f"payload ({resident}) — traffic must scale "
                           f"with the delta, not the table")
+    # wire-format mirror (PR 8, presence-gated for older snapshots):
+    # lane narrowing is exact, so the only legal direction is smaller
+    if "a2a_bytes_wire" in s:
+        raw = need(s, "a2a_bytes_raw", NUM, where)
+        wire = s["a2a_bytes_wire"]
+        if not isinstance(wire, NUM) or wire > raw:
+            raise Invalid(f"{where}.a2a_bytes_wire: wire bytes ({wire}) "
+                          f"exceed raw ({raw})")
     runs = need(s, "runs", list, where)
     if len(runs) < 2 or runs[0].get("shards") != 1:
         raise Invalid(f"{where}.runs: need a shards=1 baseline followed "
@@ -194,6 +206,37 @@ def check_kernels(rows: list, where: str) -> None:
         need(r, "value", NUM, w)
 
 
+def check_compression(s: dict, where: str) -> None:
+    """Compressed resident columns (PR 8): the coded and raw uploads
+    must decode to one checksum (compression is exact or it is a bug),
+    and the coded footprint can never exceed the raw one."""
+    if need(s, "bit_identical", bool, where) is not True:
+        raise Invalid(f"{where}.bit_identical: coded columns decoded "
+                      f"to a different fact checksum than raw")
+    need(s, "n_facts", NUM, where)
+    for k in ("bytes_per_fact_raw", "bytes_per_fact_coded", "ratio"):
+        need(s, k, NUM, where)
+    runs = need(s, "runs", list, where)
+    checks = set()
+    for i, r in enumerate(runs):
+        w = f"{where}.runs[{i}]"
+        need(r, "label", str, w)
+        need(r, "checksum", NUM, w)
+        checks.add(r["checksum"])
+        raw = need(r, "resident_bytes_raw", NUM, w)
+        coded = need(r, "resident_bytes_coded", NUM, w)
+        if coded > raw:
+            raise Invalid(f"{w}: coded resident bytes ({coded}) exceed "
+                          f"raw ({raw})")
+        cd = need(r, "codecs", dict, w)
+        for k in ("for", "dict", "rle", "recode_rebuilds",
+                  "dict_extends", "decode_calls"):
+            need(cd, k, NUM, f"{w}.codecs")
+    if len(checks) != 1:
+        raise Invalid(f"{where}.runs: {len(checks)} distinct decoded "
+                      f"checksums across raw/coded runs — expected 1")
+
+
 def validate(path: str) -> None:
     with open(path) as f:
         doc = json.load(f)
@@ -216,6 +259,9 @@ def validate(path: str) -> None:
         check_sharded(sections["sharded"], f"{path}.sections.sharded")
     if "kernels" in sections:
         check_kernels(sections["kernels"], f"{path}.sections.kernels")
+    if "compression" in sections:
+        check_compression(sections["compression"],
+                          f"{path}.sections.compression")
 
 
 def main() -> int:
