@@ -488,6 +488,124 @@ def bench_sharded(shards: int = 8, scale: int = 1, backend: str = "jax",
     return rows_out
 
 
+def _chain_facts(k_chains: int, length: int):
+    """K disjoint edge chains of L hops — the cold-store point-query
+    workload.  The full closure is O(K * L^2) path facts while the
+    demanded cone of one chain head is O(L^2), so the demand-vs-full
+    gap widens linearly with the number of untouched chains."""
+    from repro.core.facts import Fact
+    return [Fact("edge", f"c{k}_n{i}", "to", f"c{k}_n{i + 1}")
+            for k in range(k_chains) for i in range(length)]
+
+
+def _closure_rules():
+    from repro.core.conditions import AddAction, Rule, cond, term
+    return [
+        Rule("base", (cond("edge", "?x", "to", "?y"),),
+             (AddAction("path", term("?x"), "to", term("?y")),)),
+        Rule("rec", (cond("edge", "?x", "to", "?y"),
+                     cond("path", "?y", "to", "?z")),
+             (AddAction("path", term("?x"), "to", term("?z")),)),
+    ]
+
+
+def _result_checksum(rows: list) -> int:
+    """Order-insensitive digest of decoded query rows — demand-vs-full
+    parity must hold on the result *set*."""
+    import zlib
+    return zlib.crc32(repr(sorted(tuple(sorted(r.items()))
+                                  for r in rows)).encode())
+
+
+def bench_demand(backend: str = "numpy", smoke: bool = False,
+                 shards: int = 1, requery_reps: int = 50) -> dict:
+    """Cold-store point query: demand transformation vs full closure.
+
+    Two engines over the same K-chain edge store, both *cold* (no
+    ``infer()`` before the query).  The ``full`` engine materializes the
+    whole closure then queries; the ``demand`` engine (with the sketch
+    planner on) routes ``query()`` through the magic-set cone and only
+    materializes the queried chain.  Acceptance: identical decoded
+    results (checksums), demand ``rows_considered`` a small fraction of
+    full (<10% at the non-smoke size), and a re-query at fixed versions
+    that stays zero-transfer with sketches cached.  The re-query loop
+    also times the query-cache hit path — entries are frozen row tuples
+    now, so each hit pays exactly one ``dict()`` copy per row."""
+    import dataclasses
+
+    from repro.core.conditions import cond
+
+    k_chains, length = (6, 8) if smoke else (20, 20)
+    facts = _chain_facts(k_chains, length)
+    q = [cond("path", "c0_n0", "to", "?z")]
+    out = {"backend": backend, "shards": shards, "facts": len(facts),
+           "chains": k_chains, "chain_len": length}
+
+    # full-closure comparator: infer() then query
+    cfg = dataclasses.replace(EngineConfig.infer1(backend),
+                              eval_mode="full", shards=shards)
+    e = HiperfactEngine(cfg)
+    e.add_rules(_closure_rules())
+    e.insert_facts(facts)
+    t0 = time.perf_counter()
+    e.infer()
+    rows_full = e.query(q)
+    full_s = time.perf_counter() - t0
+    out["full"] = {"query_s": full_s,
+                   "rows_considered": e.last_infer.rows_considered,
+                   "inferred": e.last_infer.facts_inferred,
+                   "rows": len(rows_full),
+                   "checksum": _result_checksum(rows_full)}
+
+    # demand engine: query() materializes the cone on first touch
+    cfg = dataclasses.replace(EngineConfig.infer1(backend),
+                              eval_mode="demand", sort_mode="sketch",
+                              shards=shards)
+    e = HiperfactEngine(cfg)
+    ops = getattr(e, "ops", None)
+    tc = getattr(ops, "transfers", None) if ops is not None else None
+    e.add_rules(_closure_rules())
+    e.insert_facts(facts)
+    t0 = time.perf_counter()
+    rows_dem = e.query(q)
+    demand_s = time.perf_counter() - t0
+    st = e.last_infer
+    out["demand"] = {"query_s": demand_s,
+                     "rows_considered": st.rows_considered,
+                     "cone_rows": st.demand_cone_rows,
+                     "rounds": st.demand_rounds,
+                     "fallbacks": st.demand_fallbacks,
+                     "replans": st.replans,
+                     "sketch_hits": st.sketch_hits,
+                     "sketch_misses": st.sketch_misses,
+                     "rows": len(rows_dem),
+                     "checksum": _result_checksum(rows_dem)}
+    out["bit_identical"] = (out["full"]["checksum"]
+                            == out["demand"]["checksum"])
+    out["rows_considered_ratio"] = (
+        out["demand"]["rows_considered"]
+        / max(out["full"]["rows_considered"], 1))
+
+    # re-query at fixed versions: served by the query cache (single-copy
+    # hit path) without re-entering demand or evaluation; on device
+    # backends also assert zero transfer with sketches cached
+    snap = tc.snapshot() if tc is not None else None
+    t0 = time.perf_counter()
+    for _ in range(max(1, requery_reps)):
+        rows_re = e.query(q)
+    requery = {"reps": max(1, requery_reps),
+               "per_query_s": ((time.perf_counter() - t0)
+                               / max(1, requery_reps)),
+               "checksum": _result_checksum(rows_re),
+               "note": "cache stores frozen row tuples; each hit pays "
+                       "one dict() copy per row (was two copies)"}
+    if tc is not None:
+        d = tc.delta(snap)
+        requery["transfer_bytes"] = d.h2d_bytes + d.d2h_bytes
+    out["requery"] = requery
+    return out
+
+
 def main(scale: int = 1, backend: str = "numpy"):
     print("dataset,engine,load_s,infer_s,query_s,facts_inferred")
     for dname, ename, r in bench(scale, backend=backend):

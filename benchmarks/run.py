@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable snapshot "
                          "(BENCH_<pr>.json convention)")
+    ap.add_argument("--eval-mode", default=None,
+                    choices=["full", "delta", "auto", "demand"],
+                    help="force the demand section on under --smoke "
+                         "(demand) — non-smoke runs always include it")
     ap.add_argument("--shards", type=int, default=0, metavar="N",
                     help="also bench the sharded fixpoint "
                          "(EngineConfig(shards=N) vs shards=1); forces "
@@ -173,6 +177,32 @@ def main() -> None:
               f"resident_payload_bytes={sh['resident_payload_bytes']},"
               f"a2a_bytes_raw={sh.get('a2a_bytes_raw', 0)},"
               f"a2a_bytes_wire={sh.get('a2a_bytes_wire', 0)}")
+
+    if not args.smoke or args.eval_mode == "demand":
+        section(f"Demand-driven evaluation: cold-store point query "
+                f"(backend={args.backend})")
+        # magic-set cone vs full closure — see ISSUE 9 /
+        # docs/ARCHITECTURE.md §Demand-driven evaluation
+        dem = bench_inference.bench_demand(
+            backend=args.backend, smoke=args.smoke,
+            shards=max(1, args.shards))
+        report["sections"]["demand"] = dem
+        f, d = dem["full"], dem["demand"]
+        print(f"full,query={f['query_s']:.4f}s,"
+              f"rows_considered={f['rows_considered']},"
+              f"inferred={f['inferred']},rows={f['rows']}")
+        print(f"demand,query={d['query_s']:.4f}s,"
+              f"rows_considered={d['rows_considered']},"
+              f"cone_rows={d['cone_rows']},rounds={d['rounds']},"
+              f"sketch={d['sketch_hits']}h/{d['sketch_misses']}m,"
+              f"replans={d['replans']},rows={d['rows']}")
+        rq = dem["requery"]
+        xfer = (f",transfer_bytes={rq['transfer_bytes']}"
+                if "transfer_bytes" in rq else "")
+        print(f"requery,per_query={rq['per_query_s'] * 1e6:.1f}us"
+              f"{xfer}")
+        print(f"bit_identical={dem['bit_identical']},"
+              f"rows_considered_ratio={dem['rows_considered_ratio']:.3f}")
 
     if not args.smoke:
         section(f"Table 4 analog: query config matrix "

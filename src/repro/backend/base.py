@@ -33,6 +33,18 @@ def splitmix64(x: np.ndarray) -> np.ndarray:
     return z ^ (z >> np.uint64(31))
 
 
+# Cardinality-sketch histogram width: the planner's estimates bucket
+# values by splitmix64(v) % SKETCH_BUCKETS, so one sketch is two small
+# int64 vectors (~1KB) regardless of column size.
+SKETCH_BUCKETS = 64
+
+
+def sketch_bucket(v: int) -> int:
+    """Host-side bucket of a single value (planner point estimates)."""
+    return int(splitmix64(np.asarray([v], np.int64))[0]
+               % np.uint64(SKETCH_BUCKETS))
+
+
 class Ops(abc.ABC):
     """The bulk primitives of the inference/query hot path.
 
@@ -395,3 +407,29 @@ class Ops(abc.ABC):
         lo = np.searchsorted(sorted_keys, probes, side="left")
         hi = np.searchsorted(sorted_keys, probes, side="right")
         return lo.astype(np.int64), hi.astype(np.int64)
+
+    def sketch(self, col: np.ndarray, *, cache_key=None,
+               version: int | None = None) -> dict:
+        """Cardinality sketch of one join-key column: distinct count
+        plus two ``SKETCH_BUCKETS``-wide histograms (``hist`` counts rows
+        per ``splitmix64 % B`` bucket, ``dhist`` counts *distinct values*
+        per bucket).  The planner reads ``hist[bucket(c)]`` as the
+        selectivity of an ``== c`` constant and ``n / distinct`` as the
+        mean join fan-out.  ``cache_key``/``version`` identify the column
+        as version-stamped append-only state; device backends compute the
+        sketch over the resident coded buffer and cache the (tiny)
+        result per ``(uid, data_version)`` — a re-plan at an unchanged
+        version touches neither host column nor device.  Host backends
+        ignore the hint."""
+        col = np.asarray(col, np.int64)
+        n = len(col)
+        if n == 0:
+            z = np.zeros(SKETCH_BUCKETS, np.int64)
+            return {"n": 0, "distinct": 0, "hist": z, "dhist": z.copy()}
+        b = (splitmix64(col) % np.uint64(SKETCH_BUCKETS)).astype(np.int64)
+        hist = np.bincount(b, minlength=SKETCH_BUCKETS).astype(np.int64)
+        uniq = np.unique(col)
+        db = (splitmix64(uniq) % np.uint64(SKETCH_BUCKETS)).astype(np.int64)
+        dhist = np.bincount(db, minlength=SKETCH_BUCKETS).astype(np.int64)
+        return {"n": n, "distinct": len(uniq), "hist": hist,
+                "dhist": dhist}

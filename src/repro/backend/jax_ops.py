@@ -212,6 +212,43 @@ def _jitted():
         return jnp.stack([jnp.minimum(lo, n_real),
                           jnp.minimum(hi, n_real)])
 
+    def _mix64(x):
+        """Device twin of ``base.splitmix64`` (sketch bucketing)."""
+        z = jax.lax.bitcast_convert_type(x.astype(jnp.int64), jnp.uint64)
+        z = z + jnp.uint64(0x9E3779B97F4A7C15)
+        z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+        return z ^ (z >> jnp.uint64(31))
+
+    @functools.partial(jax.jit, static_argnames=("buckets",))
+    def sketch_hist(x, n_real, buckets):
+        """Cardinality sketch over one padded int64 column: per-bucket
+        row counts, per-bucket distinct-value counts, and the distinct
+        total.  Pads (>= any real value after the sort) drop out via the
+        lane mask; out-of-range bucket ids drop at the scatter."""
+        cap = x.shape[0]
+        lane = jnp.arange(cap, dtype=jnp.int64)
+        valid = lane < n_real
+        b = (_mix64(x) % jnp.uint64(buckets)).astype(jnp.int64)
+        hist = jnp.zeros(buckets, jnp.int64).at[
+            jnp.where(valid, b, buckets)].add(1, mode="drop")
+        s = jnp.sort(x)  # pads are INT64_MAX: they sort last
+        first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+        newv = first & valid
+        db = (_mix64(s) % jnp.uint64(buckets)).astype(jnp.int64)
+        dhist = jnp.zeros(buckets, jnp.int64).at[
+            jnp.where(newv, db, buckets)].add(1, mode="drop")
+        return hist, dhist, jnp.sum(newv)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def decode_dict_n(codes, dvals, n_real):
+        """Dictionary decode with exact re-pad (sketch input: pads must
+        sort last, so garbage pad lanes are re-filled)."""
+        lane = jnp.arange(codes.shape[0], dtype=jnp.int64)
+        v = dvals[jnp.clip(codes.astype(jnp.int64), 0,
+                           dvals.shape[0] - 1)]
+        return jnp.where(lane < n_real, v, jnp.iinfo(jnp.int64).max)
+
     def _decode_lanes(x, vt):
         """Device twin of ``facts.decode_lane_array``: int64 lanes ->
         comparable value domain (ValueType ints are static)."""
@@ -339,7 +376,8 @@ def _jitted():
             "decode_sorted_for": decode_sorted_for,
             "decode_sorted_dict": decode_sorted_dict,
             "narrow_sorted": narrow_sorted,
-            "dict_crossmap": dict_crossmap, "map_codes": map_codes}
+            "dict_crossmap": dict_crossmap, "map_codes": map_codes,
+            "sketch_hist": sketch_hist, "decode_dict_n": decode_dict_n}
 
 
 class JaxOps(Ops):
@@ -561,6 +599,28 @@ class JaxOps(Ops):
                      "dvals": self._dict_dev(codec)}
         self.cache.put(key, version, value, self._colbuf_nbytes(value))
         return value
+
+    def _raw_colbuf(self, cv: dict, col: np.ndarray, fill: int):
+        """Raw int64 device view of a resident column entry.  A shared
+        cache entry may be *coded* even for a caller that passed
+        ``encode=False`` — that flag only governs a cold build, while a
+        hit (or an append-extend) returns whatever domain another
+        consumer cached (``join_pairs`` dict-codes the packed-key
+        column).  Coded buffers decode on device; pad lanes refill with
+        a sentinel, which is fine for the pad-flag-based consumers
+        here.  Caller holds the lock and the x64 scope."""
+        codec = cv["codec"]
+        if codec is None:
+            return cv["buf"]
+        jt = _jitted()
+        n = cv["n"]
+        if codec.kind == "for":
+            return jt["decode_for_n"](cv["buf"], codec.ref, n, fill)
+        if codec.kind == "dict" and cv["dvals"] is not None:
+            self._res_counts["decode_calls"] += 1
+            return jt["decode_dict_n"](cv["buf"], cv["dvals"], n)
+        # unknown coded shape: transient raw upload
+        return self._to_dev(self._pad(col, self._bucket(len(col)), fill))
 
     # -- primitives -------------------------------------------------------
     def _stable_perm_device(self, buf, n: int, kmin: int, kmax: int):
@@ -1612,20 +1672,25 @@ class JaxOps(Ops):
                        if use_cache else None)
                 if pkv is None:
                     if use_cache:
-                        # forced raw: packed join keys span >= 2^32 (no
-                        # narrowing possible) and the value lane's pad
-                        # fill 0 is a legal *code*, which would alias a
-                        # real row under an encoding
+                        # encode=False governs a *cold build* only: the
+                        # probe side below arrives raw, so a fresh
+                        # upload must stay raw too.  But the ("pk", uid)
+                        # entry is shared with ``join_pairs`` (engine
+                        # dedup / retraction joins), which dict-codes it
+                        # under compression — a hit or an append-extend
+                        # of that entry comes back *coded*, so decode to
+                        # raw on device before sorting.
                         kb = self._resident_column(
                             ("pk", cache_uid), version, old_keys,
                             INT64_MIN, encode=False)
                         vb = self._resident_column(
                             ("vals", cache_uid), version, old_vals, 0,
                             encode=False)
-                        cap_o = max(kb["buf"].shape[0],
-                                    vb["buf"].shape[0])
-                        kbuf = self._fit_cap(kb["buf"], cap_o)
-                        vbuf = self._fit_cap(vb["buf"], cap_o)
+                        kraw = self._raw_colbuf(kb, old_keys, INT64_MIN)
+                        vraw = self._raw_colbuf(vb, old_vals, 0)
+                        cap_o = max(kraw.shape[0], vraw.shape[0])
+                        kbuf = self._fit_cap(kraw, cap_o)
+                        vbuf = self._fit_cap(vraw, cap_o)
                     else:
                         cap_o = self._bucket(len(old_keys))
                         kbuf = self._to_dev(
@@ -1724,3 +1789,53 @@ class JaxOps(Ops):
                 use_pallas=self._use_pallas(),
                 interpret=self.interpret))
         return res[0, :n].copy(), res[1, :n].copy()
+
+    def sketch(self, col, *, cache_key=None, version: int | None = None):
+        """Device cardinality sketch (see ``Ops.sketch``).  The sketch
+        itself is tiny (~1KB) and cached per ``(uid, data_version)``; a
+        miss prefers the *resident coded column* over a fresh upload —
+        decode-on-device, histogram, and one small d2h.  RLE columns
+        (and cache misses without a resident buffer) upload the host
+        column transiently."""
+        from repro.backend.base import SKETCH_BUCKETS
+        col = np.asarray(col, np.int64)
+        n = len(col)
+        use_cache = cache_key is not None and version is not None
+        if n == 0:
+            return super().sketch(col)
+        with self._lock, self._x64():
+            if use_cache:
+                hit = self.cache.get(("sketch", cache_key), version)
+                if hit is not None:
+                    return hit
+            jt = _jitted()
+            buf = None
+            if use_cache:
+                ent = self.cache.get_any(
+                    ("colbuf", (cache_key[0], cache_key[1], ""),
+                     INT64_MAX))
+                cv = ent.value if ent is not None else None
+                if (isinstance(cv, dict) and cv.get("n") == n
+                        and "buf" in cv):
+                    codec = cv["codec"]
+                    if codec is None:
+                        buf = cv["buf"]  # raw, pads already INT64_MAX
+                    elif codec.kind == "for":
+                        buf = jt["decode_for_n"](cv["buf"], codec.ref, n,
+                                                 INT64_MAX)
+                    elif codec.kind == "dict" and cv["dvals"] is not None:
+                        buf = jt["decode_dict_n"](cv["buf"], cv["dvals"],
+                                                  n)
+                        self._res_counts["decode_calls"] += 1
+            if buf is None:
+                buf = self._to_dev(
+                    self._pad(col, self._bucket(n), INT64_MAX))
+            hist, dhist, distinct = jt["sketch_hist"](
+                buf, n, buckets=SKETCH_BUCKETS)
+            out = {"n": n, "distinct": int(self._to_host(distinct)),
+                   "hist": self._to_host(hist).astype(np.int64),
+                   "dhist": self._to_host(dhist).astype(np.int64)}
+            if use_cache:
+                self.cache.put(("sketch", cache_key), version, out,
+                               out["hist"].nbytes + out["dhist"].nbytes)
+        return out

@@ -88,7 +88,9 @@ class EngineConfig:
     sort_mode: str = "sortkeys"   # sortkeys | fixed
     backend: str = "numpy"        # numpy | jax | jax-pallas | jax-interpret
     device_pipeline: str = "auto"  # auto | on | off — handle-tier join core
-    eval_mode: str = "auto"       # full | delta | auto — semi-naive rounds
+    eval_mode: str = "auto"       # full | delta | auto | demand — semi-naive
+    #                               rounds; "demand" additionally restricts
+    #                               query-time inference to the query's cone
     query_cache: bool = False     # rank-2/3 result cache (paper §5 fut. work)
     lazy: bool = False            # Defs. 10/11 active-rule pruning
     max_iterations: int = 1000
@@ -164,6 +166,19 @@ class InferStats:
     # re-gather) vs rebuilds
     gather_hits: int = 0
     gather_misses: int = 0
+    # demand-driven evaluation (eval_mode="demand"): rows materialized
+    # into the query's cone, propagate+evaluate sweeps to the joint
+    # fixpoint, and queries that fell back to a full infer() because the
+    # cone could not be restricted soundly
+    demand_cone_rows: int = 0
+    demand_rounds: int = 0
+    demand_fallbacks: int = 0
+    # sketch-driven adaptive planning (sort_mode="sketch"): mid-rule
+    # re-plans after >4x cardinality drift, and cardinality-sketch cache
+    # hits/misses in the planner
+    replans: int = 0
+    sketch_hits: int = 0
+    sketch_misses: int = 0
 
 
 def _pack_keys(ids: np.ndarray, attrs: np.ndarray) -> np.ndarray:
@@ -263,7 +278,7 @@ class HiperfactEngine:
 
     def __init__(self, config: EngineConfig | None = None) -> None:
         self.config = config or EngineConfig()
-        if self.config.eval_mode not in ("full", "delta", "auto"):
+        if self.config.eval_mode not in ("full", "delta", "auto", "demand"):
             raise ValueError(
                 f"unknown eval_mode: {self.config.eval_mode!r}")
         self.ops = get_backend(self.config.backend,
@@ -284,7 +299,7 @@ class HiperfactEngine:
         # support (outputs of rules that took a non-counting full
         # fallback — deletes reaching them go through the DRed scrub),
         # and how far the scrub detector has read each delete log.
-        self._counting = self.config.eval_mode in ("delta", "auto")
+        self._counting = self.config.eval_mode in ("delta", "auto", "demand")
         self._count_tainted: set[str] = set()
         self._dellog_seen: dict[str, int] = {}
         self._n_compensated = 0
@@ -307,6 +322,13 @@ class HiperfactEngine:
             bool(getattr(self.ops, "prefer_handles", False))
             if self.config.device_pipeline == "auto"
             else self.config.device_pipeline == "on")
+        # demand-mode memo: conditions-tuple -> version token over the
+        # cone's input types at last materialization (a repeat query at
+        # unchanged versions skips propagation entirely)
+        self._demand_done: dict[tuple, tuple] = {}
+        self._demand_skip = False  # shard workers: parent owns the cone
+        self._planner = None  # lazy SketchPlanner (sort_mode="sketch")
+        self._sketch_seen = (0, 0)  # planner counters already drained
 
     # ------------------------------------------------------------------ API
     def _intern_rule_constants(self, rule: Rule) -> None:
@@ -667,7 +689,8 @@ class HiperfactEngine:
         if cap == "no":
             self._taint_rule_outputs(ridx)
             return None
-        if self.config.eval_mode == "auto" and self.config.rnl != "AR":
+        if (self.config.eval_mode in ("auto", "demand")
+                and self.config.rnl != "AR"):
             # without the AR restriction a delta pass still joins the
             # full relations of the other conditions — k passes cost
             # more than one full evaluation, so auto stays full in DR
@@ -693,7 +716,7 @@ class HiperfactEngine:
         if passes is None:
             self._taint_rule_outputs(ridx)
             return None
-        if self.config.eval_mode == "auto" and passes:
+        if self.config.eval_mode in ("auto", "demand") and passes:
             # semi-naive pays when the frontier is small relative to the
             # relations: a dense recursive closure (wordnet-style) grows
             # by ~half the table per round, and k delta-joins against
@@ -800,7 +823,8 @@ class HiperfactEngine:
         kw = dict(join_algo=cfg.join, rnl_mode=cfg.rnl, layout=cfg.layout,
                   sort_mode=cfg.sort_mode, distinct=True,
                   rl_fn=self._rl_fn(), ops=self.ops,
-                  pipeline=self._pipeline, stats=estats)
+                  pipeline=self._pipeline, stats=estats,
+                  planner=self._sketch_planner())
         signed: dict[str, list] = {}
         if plan is None:
             bindings = evaluate_rule(self.store, rule, **kw)
@@ -1072,6 +1096,7 @@ class HiperfactEngine:
                         stats.delta_passes += es.get("delta_passes", 0)
                         stats.full_evals += es.get("full_evals", 0)
                         stats.neg_passes += es.get("neg_passes", 0)
+                        stats.replans += es.get("replans", 0)
                     # Writes: PW = concurrent per disjoint fact type;
                     # SW = sequential in schedule order.  Set-semantics
                     # adds (full fallbacks), explicit deletes, then the
@@ -1129,8 +1154,66 @@ class HiperfactEngine:
         stats.compensated_deletes = self._n_compensated - self._comp_reported
         self._comp_reported = self._n_compensated
         stats.seconds = time.perf_counter() - t0
+        self._drain_sketch_counts(stats)
         self.last_infer = stats
         return stats
+
+    # ------------------------------------------------- sketch planner
+    def _sketch_planner(self):
+        """Lazy cost-based planner (``sort_mode="sketch"``): estimates
+        intermediate-result sizes from per-column cardinality sketches
+        and re-plans the island chain when observations drift >4x.
+        ``None`` under any other sort mode — the static paths stay
+        byte-identical."""
+        if self.config.sort_mode != "sketch":
+            return None
+        if self._planner is None:
+            from repro.core.islands import SketchPlanner
+            self._planner = SketchPlanner(self.ops)
+        return self._planner
+
+    def _drain_sketch_counts(self, stats: InferStats) -> None:
+        p = self._planner
+        if p is None:
+            return
+        h0, m0 = self._sketch_seen
+        stats.sketch_hits += p.hits - h0
+        stats.sketch_misses += p.misses - m0
+        self._sketch_seen = (p.hits, p.misses)
+
+    # ------------------------------------------------- demand evaluation
+    def _demand_materialize(self, conditions: list[Condition]) -> None:
+        """``eval_mode="demand"``: make the store complete *for this
+        query* — interleave demand propagation and restricted evaluation
+        to the joint fixpoint (or run a full ``infer()`` when the cone
+        cannot be restricted soundly).  A repeat query whose cone input
+        versions are unchanged skips propagation via ``_demand_done``."""
+        from repro.core.demand import DemandEvaluator
+        ev = DemandEvaluator(self, conditions)
+        if not ev.cone_rules:
+            return
+        memo_key = self._result_cache.key(conditions, ()) \
+            if self._result_cache is not None else None
+        if memo_key is not None:
+            token = self._query_version_token(ev.cone_types)
+            if self._demand_done.get(memo_key) == token:
+                return
+        stats = self.last_infer
+        if ev.fallback is not None:
+            self.infer()
+            self.last_infer.demand_fallbacks += 1
+        else:
+            rounds = 1
+            while ev.round() and rounds < self.config.max_iterations:
+                rounds += 1
+            stats.demand_rounds += rounds
+            stats.demand_cone_rows += ev.facts_written
+            stats.rows_considered += ev.rows_considered
+            self._drain_sketch_counts(stats)
+        if memo_key is not None:
+            # token recomputed: materialization bumped the versions
+            self._demand_done[memo_key] = self._query_version_token(
+                ev.cone_types)
 
     # --------------------------------------------------------------- query
     def _query_version_token(self, types) -> tuple:
@@ -1154,6 +1237,10 @@ class HiperfactEngine:
         """
         rule = Rule("<adhoc>", tuple(conditions))
         cfg = self.config
+        if cfg.eval_mode == "demand" and self.rules and not self._demand_skip:
+            # undischarged rules: materialize only this query's cone
+            # (or fall back to a full infer()) before evaluation
+            self._demand_materialize(list(conditions))
         key = None
         if decode and self._result_cache is not None:
             key = self._result_cache.key(
@@ -1162,17 +1249,23 @@ class HiperfactEngine:
                 hit = self._result_cache.lookup(key)
                 if hit is not None:
                     self.last_infer.query_cache_hits += 1
+                    # the single copy: cache entries are frozen tuples
                     return [dict(r) for r in hit]
                 self.last_infer.query_cache_misses += 1
+        qstats: dict = {"rows_considered": 0, "replans": 0}
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
             layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-            rl_fn=self._rl_fn(), ops=self.ops, pipeline=self._pipeline)
+            rl_fn=self._rl_fn(), ops=self.ops, pipeline=self._pipeline,
+            stats=qstats, planner=self._sketch_planner())
+        self.last_infer.rows_considered += qstats["rows_considered"]
+        self.last_infer.replans += qstats.get("replans", 0)
+        self._drain_sketch_counts(self.last_infer)
         if not decode:
             return bindings
         rows = decode_bindings(self.store, conditions, bindings)
         if key is not None:
-            self._result_cache.put(key, [dict(r) for r in rows])
+            self._result_cache.put(key, rows)
         return rows
 
 

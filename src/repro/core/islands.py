@@ -204,6 +204,167 @@ def order_conditions_base(isl: Island, bound: set[str],
 
 
 # ---------------------------------------------------------------------------
+# Sketch-driven cost-based planning (sort_mode="sketch")
+
+
+class SketchPlanner:
+    """Cardinality-sketch cost model for adaptive join ordering.
+
+    Static planning uses ``ccar`` — the rank-1 index's per-constant
+    count, frozen into sort keys at rule-add time.  The sketch planner
+    instead estimates *intermediate-result* sizes: per join-key column
+    it keeps a tiny ``Ops.sketch`` (row histogram + distinct count over
+    ``splitmix64 % B`` buckets, computed on device over the resident
+    coded columns and cached per ``(uid, data_version)``), and scores a
+    candidate join as ``|acc| * |cond| / distinct(shared key)`` — the
+    classic independence estimate, but from live data instead of static
+    priors.  A planner instance memoizes sketches per
+    ``(table uid, component)`` and counts ``hits``/``misses`` against
+    the table's ``data_version`` (the engine drains them into
+    ``InferStats.sketch_hits/misses``)."""
+
+    def __init__(self, ops: Ops):
+        self.ops = ops
+        self._memo: dict[tuple, tuple] = {}  # (uid, comp) -> (dv, sketch)
+        self.hits = 0
+        self.misses = 0
+
+    def table_sketch(self, table, comp: Component) -> dict:
+        key = (table.uid, int(comp))
+        cur = self._memo.get(key)
+        if cur is not None and cur[0] == table.data_version:
+            self.hits += 1
+            return cur[1]
+        self.misses += 1
+        sk = self.ops.sketch(
+            np.asarray(table.column(comp)[:table.n], np.int64),
+            cache_key=key, version=table.data_version)
+        self._memo[key] = (table.data_version, sk)
+        return sk
+
+    def cond_card(self, store: FactStore, c: Condition) -> float:
+        """Estimated rows matching the condition's constant slots: the
+        minimum histogram bucket over the constants (vs ``ccar``'s exact
+        per-constant index count, this needs no index and prices *all*
+        constants, not just the cheapest)."""
+        from repro.backend.base import sketch_bucket
+
+        table = store.tables.get(c.fact_type)
+        if table is None or table.n == 0:
+            return 0.0
+        est = float(table.n)
+        for comp, v in c.const_slots(store.strings):
+            if v == -1:
+                return 0.0
+            sk = self.table_sketch(table, comp)
+            est = min(est, float(sk["hist"][sketch_bucket(v)]))
+        return est
+
+
+def _join_estimate(planner: SketchPlanner, store: FactStore, c: Condition,
+                   bound: set[str], est_acc: "float | None") -> float:
+    """Predicted size of ``acc ⋈ c``: per shared variable the
+    condition contributes ``|c| / distinct(key column)`` rows per bound
+    value (take the most selective); no shared variable is a cross
+    product."""
+    base = planner.cond_card(store, c)
+    if est_acc is None:
+        return base
+    table = store.tables.get(c.fact_type)
+    best = None
+    for name, comp in c.variables().items():
+        if name not in bound or table is None:
+            continue
+        sk = planner.table_sketch(table, comp)
+        per_key = base / max(float(sk["distinct"]), 1.0)
+        cand = est_acc * per_key
+        if best is None or cand < best:
+            best = cand
+    return est_acc * base if best is None else best
+
+
+def _plan_order(planner: SketchPlanner, store: FactStore,
+                sts: list[CondStats], bound: set[str],
+                est_acc: "float | None") -> list[tuple[CondStats, float]]:
+    """Greedy order over the remaining conditions by predicted
+    intermediate size (connected conditions before cross products),
+    carrying the running estimate forward.  Returns
+    ``[(stat, predicted size after its join), ...]``."""
+    remaining = list(sts)
+    b = set(bound)
+    est = est_acc
+    out: list[tuple[CondStats, float]] = []
+    while remaining:
+        connected = [s for s in remaining
+                     if b and set(s.cond.variables()) & b] or remaining
+        pred, nxt = min(
+            ((_join_estimate(planner, store, s.cond, b, est), s)
+             for s in connected), key=lambda t: t[0])
+        out.append((nxt, pred))
+        remaining.remove(nxt)
+        b |= set(nxt.cond.variables().keys())
+        est = pred
+    return out
+
+
+def _evaluate_adaptive(store: FactStore, rule: Rule, islands: list[Island],
+                       *, join_algo: str, rnl_mode: str, layout: str,
+                       distinct: bool, rl_fn, ops: "Ops | None",
+                       pipeline: bool, stats: "dict | None",
+                       planner: SketchPlanner) -> Bindings:
+    """Adaptive execution: a sketch-estimated greedy plan, re-planned
+    mid-rule whenever an observed intermediate size drifts more than 4x
+    from its prediction (either direction) and joins remain — the
+    estimate that misled the rest of the plan is replaced by the
+    observation.  Re-plans are counted into ``stats["replans"]``.
+    Full-relation passes only; the engine's delta passes keep the static
+    frontier-pinned order (their intermediates are frontier-sized — the
+    thing the planner exists to predict — by construction)."""
+    sts = [s for isl in islands for s in isl.stats]
+    gates = [s for s in sts if not s.cond.variables()]
+    joins = [s for s in sts if s.cond.variables()]
+    for st in gates:
+        if len((rl_fn or rl)(store, st.cond)) == 0:
+            return make_bindings({"_exists": np.empty(0, np.int64)}, layout)
+    pending = [(t, c.valtype) for c in rule.conditions for t in c.tests]
+    acc: Bindings | None = None
+    bound: set[str] = set()
+    plan = _plan_order(planner, store, joins, bound, None)
+    replans = 0
+    while plan:
+        st, pred = plan.pop(0)
+        rhs = _lookup_condition(store, st.cond, acc, rnl_mode, layout,
+                                rl_fn, ops, pipeline, 0, stats)
+        if acc is None:
+            acc = rhs
+        else:
+            keys = [v for v in st.cond.variables() if v in bound]
+            acc = join_bindings(acc, rhs, keys, join_algo, ops)
+        bound |= set(st.cond.variables().keys())
+        still = []
+        for t, vt in pending:
+            if t.var1 in bound and (t.is_const() or t.var2 in bound):
+                if acc.n > 0:
+                    acc = _apply_test(store, acc, t, vt, ops, pipeline)
+            else:
+                still.append((t, vt))
+        pending = still
+        if acc.n == 0:
+            return acc
+        obs = float(acc.n)
+        lo, hi = max(pred, 1.0) / 4.0, max(pred, 1.0) * 4.0
+        if plan and not (lo <= obs <= hi) and replans < len(joins):
+            replans += 1
+            if stats is not None:
+                stats["replans"] = stats.get("replans", 0) + 1
+            plan = _plan_order(planner, store, [s for s, _ in plan],
+                               bound, obs)
+    if acc is None:  # all conditions were existence checks and all passed
+        acc = make_bindings({"_exists": np.zeros(1, np.int64)}, layout)
+    return dedup_bindings(acc, ops) if distinct else acc
+
+
+# ---------------------------------------------------------------------------
 # Executor (Phases 3-5 of Algorithm 1)
 
 
@@ -437,7 +598,8 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
                   rl_fn=None, ops: Ops | None = None,
                   pipeline: bool | None = None,
                   delta_for: "dict[int, int | np.ndarray] | None" = None,
-                  stats: dict | None = None) -> Bindings:
+                  stats: dict | None = None,
+                  planner: "SketchPlanner | None" = None) -> Bindings:
     """Full island-based evaluation of one rule -> final binding table.
 
     ``islands`` may be passed in pre-built (derivation-tree executor re-sorts
@@ -468,6 +630,13 @@ def evaluate_rule(store: FactStore, rule: Rule, *, join_algo: str = "MJ",
     if delta_for is not None:
         delta_for = {i: s for i, s in delta_for.items()
                      if (len(s) if isinstance(s, np.ndarray) else s) > 0}
+    if planner is not None and not delta_for:
+        # sort_mode="sketch": cost-based adaptive execution replaces the
+        # static island/condition ordering for full-relation passes
+        return _evaluate_adaptive(
+            store, rule, islands, join_algo=join_algo, rnl_mode=rnl_mode,
+            layout=layout, distinct=distinct, rl_fn=rl_fn, ops=ops,
+            pipeline=pipeline, stats=stats, planner=planner)
     prefer = set(delta_for) if delta_for else None
     ordered = order_islands(islands, prefer)
     # A join test (Def. 9) fires as soon as its operands are bound (the

@@ -74,9 +74,13 @@ class QueryResultCache:
     for every input table never re-enters evaluation at all.  The
     version token is computed by the engine (plain per-table for the
     unsharded engine, per-worker for ``shards=N``), so one cache class
-    serves both.  Entries hold decoded dict-rows; callers copy rows on
-    the way in and out, so mutating a returned row cannot poison the
-    cache.  Eviction is bounded LRU, invalidation exact via the token.
+    serves both.  Entries are stored as immutable ``tuple``-of-items
+    rows — ``put`` freezes the caller's rows once, and only the *hit*
+    path pays a copy (``dict(items)`` per row) so a caller mutating a
+    returned row cannot poison the cache.  The old scheme copied every
+    row twice (once into the cache, once out); misses now store the
+    frozen form directly and return the caller's own list untouched.
+    Eviction is bounded LRU, invalidation exact via the token.
     """
 
     def __init__(self, max_entries: int = 1024):
@@ -97,7 +101,9 @@ class QueryResultCache:
             return None
         return k
 
-    def lookup(self, key: tuple) -> list | None:
+    def lookup(self, key: tuple) -> "tuple | None":
+        """Frozen rows (tuple of item-tuples) or None; the caller
+        rehydrates with ``[dict(r) for r in hit]`` — the single copy."""
         hit = self._data.get(key)
         if hit is None:
             self.misses += 1
@@ -107,7 +113,9 @@ class QueryResultCache:
         return hit
 
     def put(self, key: tuple, rows: list) -> None:
-        self._data[key] = rows
+        """Freeze and store decoded rows (the caller's list is not
+        retained, so no defensive copy is needed on the way in)."""
+        self._data[key] = tuple(tuple(r.items()) for r in rows)
         if len(self._data) > self.max_entries:
             self._data.popitem(last=False)
 

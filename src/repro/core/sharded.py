@@ -189,6 +189,10 @@ class _ShardWorker(HiperfactEngine):
         self.shard = shard
         self.n_shards = n_shards
         self.parent = parent
+        # the parent materializes demand cones globally (with frontier
+        # exchange) before delegating a query; a worker-local pass would
+        # be redundant at best, a local full infer() at worst
+        self._demand_skip = True
         # per-shard counters + device-array cache: a fresh Ops instance
         # (get_backend shares one per process; jit caches stay shared)
         self.ops = fresh_backend(config.backend,
@@ -318,6 +322,9 @@ class ShardedEngine(HiperfactEngine):
                 agg.facts_retracted += st.facts_retracted
                 agg.compensated_deletes += st.compensated_deletes
                 agg.dred_scrubs += st.dred_scrubs
+                agg.replans += st.replans
+                agg.sketch_hits += st.sketch_hits
+                agg.sketch_misses += st.sketch_misses
             fresh, changed, log = self._flush_outbox("infer")
             agg.facts_inferred += log["owner_fresh"]
             agg.facts_deleted += log["owner_deleted"]
@@ -345,8 +352,62 @@ class ShardedEngine(HiperfactEngine):
         self.last_infer = agg
         return agg
 
+    def _demand_materialize(self, conditions: list[Condition]) -> None:
+        """Sharded demand cone: one ``DemandEvaluator`` per worker
+        (demand keys through ``base_fact_type``, so the workers'
+        view-rewritten rules restrict like the originals), alternating
+        local propagate+evaluate sweeps with frontier exchanges.  Only
+        cone facts are ever routed, so the exchange rounds carry cone
+        deltas instead of the full closure's frontier."""
+        from repro.core.demand import DemandEvaluator
+        evs = [DemandEvaluator(w, list(conditions)) for w in self.workers]
+        if not any(ev.cone_rules for ev in evs):
+            return
+        memo_key = self._result_cache.key(conditions, ()) \
+            if self._result_cache is not None else None
+        cone_types = set().union(*(ev.cone_types for ev in evs))
+        if memo_key is not None:
+            token = self._query_version_token(cone_types)
+            if self._demand_done.get(memo_key) == token:
+                return
+        stats = self.last_infer
+        fallback = next((ev.fallback for ev in evs
+                         if ev.fallback is not None), None)
+        if fallback is not None:
+            self.infer()
+            self.last_infer.demand_fallbacks += 1
+        else:
+            rounds = 0
+            exchanged = 0
+            while rounds < self.config.max_iterations:
+                rounds += 1
+                changed = sum(ev.round() for ev in evs)
+                # demand frontiers discovered on one shard must reach
+                # the shards owning the next hop's rows
+                for a in evs:
+                    for b in evs:
+                        if a is not b and a.merge_from(b):
+                            changed += 1
+                fresh, applied, _log = self._flush_outbox("demand")
+                exchanged += fresh
+                with self._lock:
+                    pending = any(self._outbox)
+                if changed == 0 and applied == 0 and not pending:
+                    break
+            stats.demand_rounds += rounds
+            stats.demand_cone_rows += (
+                sum(ev.facts_written for ev in evs) + exchanged)
+            stats.rows_considered += sum(ev.rows_considered for ev in evs)
+            for w in self.workers:
+                w._drain_sketch_counts(stats)
+        if memo_key is not None:
+            self._demand_done[memo_key] = self._query_version_token(
+                cone_types)
+
     def query(self, conditions: list[Condition], decode: bool = True):
         rule = Rule("<adhoc>", tuple(conditions))
+        if self.config.eval_mode == "demand" and self.rules:
+            self._demand_materialize(list(conditions))
         key = None
         if decode and self._result_cache is not None:
             key = self._result_cache.key(
@@ -372,12 +433,13 @@ class ShardedEngine(HiperfactEngine):
             bindings = evaluate_rule(
                 gst, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
                 layout=cfg.layout, sort_mode=cfg.sort_mode, distinct=True,
-                ops=self.ops, pipeline=False)
+                ops=self.ops, pipeline=False,
+                planner=self._sketch_planner())
             if not decode:
                 return bindings
             rows = decode_bindings(gst, conditions, bindings)
         if key is not None:
-            self._result_cache.put(key, [dict(r) for r in rows])
+            self._result_cache.put(key, rows)
         return rows
 
     def num_facts(self) -> int:

@@ -269,6 +269,53 @@ def test_engine_matrix_compressed_parity(join, unique, backend):
     assert _run_engine(join, unique, backend, True) == _baseline()
 
 
+def test_write_side_dedup_with_coded_pk_column():
+    """Regression: ``join_pairs`` dict-codes the shared ``("pk", uid)``
+    resident column during insert dedup; ``fresh_mask_h`` then hit (or
+    append-extended) that entry and read the narrow *codes* as raw
+    packed keys, so the write-side anti-join reported existing
+    (key, val) pairs as fresh — duplicate rows under compress=True."""
+    import dataclasses
+    from collections import Counter
+    from repro.core import Rule
+    from repro.core.conditions import AddAction, cond, term
+    from repro.core.sharded import decoded_fact_checksum
+
+    rules = [
+        # re-derives every existing fact: all must be dedup-filtered
+        Rule("echo", (cond("Data", "?x", "link", "?y"),),
+             (AddAction("Data", term("?x"), "link", term("?y")),)),
+        Rule("rec", (cond("Data", "?x", "link", "?y"),
+                     cond("Data", "?y", "link", "?z")),
+             (AddAction("Data", term("?x"), "link", term("?z")),)),
+    ]
+    # hub fan-out: one packed (id, attr) key repeated 60x -> dict codec
+    batch1 = [Fact("Data", "hub", "link", f"s{i}") for i in range(60)]
+    batch2 = [Fact("Data", f"s{i}", "link", f"t{i}") for i in range(60)]
+
+    def run(backend, compress):
+        cfg = dataclasses.replace(EngineConfig.infer1(backend),
+                                  compress=compress)
+        e = HiperfactEngine(cfg)
+        e.add_rules(rules)
+        e.insert_facts(batch1)
+        e.insert_facts(batch2)  # _match_rows codes the pk colbuf
+        e.infer()
+        return e
+
+    want = run("numpy", False)
+    got = run("jax-interpret", True)
+    t = got.store.tables["Data"]
+    rows = Counter(zip(t.ids[:t.n].tolist(), t.attrs[:t.n].tolist(),
+                       t.vals[:t.n].tolist()))
+    assert all(c == 1 for c in rows.values()), "duplicate rows written"
+    assert got.store.num_facts() == want.store.num_facts()
+    assert decoded_fact_checksum(got) == decoded_fact_checksum(want)
+    # the regression path must actually be exercised: a dict codec was
+    # chosen for some resident column (the hub fan-out pk column)
+    assert got.ops._res_counts["dict"] > 0
+
+
 # -- frontier-exchange lane narrowing ---------------------------------------
 
 def test_frontier_exchange_wire_parity():

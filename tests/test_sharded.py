@@ -255,7 +255,9 @@ def test_query_result_cache_lru_and_keys():
     assert k1 != k2  # version token is part of the key
     assert c.lookup(k1) is None
     c.put(k1, [{"x": "a"}])
-    assert c.lookup(k1) == [{"x": "a"}]
+    # entries are frozen tuple-of-items rows; callers rehydrate (the
+    # single copy on the hit path)
+    assert [dict(r) for r in c.lookup(k1)] == [{"x": "a"}]
     c.put(k2, [{"x": "b"}])
     c.put(QueryResultCache.key((("U",),), ("tok", 1)), [])
     assert c.lookup(k2) is not None  # recently used survives

@@ -29,7 +29,17 @@ third-party dependency:
 * ``sections.kernels`` rows: ``{"op", "value"}``;
 * ``sections.compression`` (since PR 8): raw vs coded resident-column
   runs — one decoded checksum across both required (exact
-  compression), coded resident bytes <= raw, per-codec counters.
+  compression), coded resident bytes <= raw, per-codec counters;
+* ``sections.demand`` (since PR 9): cold-store point query through the
+  magic-set cone vs the full closure — identical result checksums
+  required, demand ``rows_considered`` strictly below full (and under
+  10% of it at the non-smoke size), re-query at fixed versions
+  zero-transfer when the counter is present.
+
+Beyond per-file schema checks, the validator cross-checks CHANGES.md:
+every ``BENCH_<n>.json`` a changelog entry references must exist at the
+repo root (PR 8's entry referenced a snapshot that was never committed;
+this closes that hole).
 
 Unknown extra keys are allowed everywhere (snapshots may grow); missing
 required keys fail with a path-qualified message and exit code 1.
@@ -38,6 +48,8 @@ required keys fail with a path-qualified message and exit code 1.
 from __future__ import annotations
 
 import json
+import os
+import re
 import sys
 
 KNOWN_BACKENDS = {"numpy", "jax", "jax-pallas", "jax-interpret"}
@@ -237,6 +249,63 @@ def check_compression(s: dict, where: str) -> None:
                       f"checksums across raw/coded runs — expected 1")
 
 
+def check_demand(s: dict, where: str, smoke: bool) -> None:
+    """Demand-driven evaluation section (PR 9): a cold-store point
+    query answered through the magic-set cone must match the full
+    closure bit-for-bit while considering strictly fewer rows (under
+    10% of full at the non-smoke size), and a re-query at fixed table
+    versions must stay zero-transfer — sketches and the query cache
+    resident, no re-evaluation."""
+    if need(s, "bit_identical", bool, where) is not True:
+        raise Invalid(f"{where}.bit_identical: demand query result "
+                      f"diverged from full evaluation")
+    full = need(s, "full", dict, where)
+    dem = need(s, "demand", dict, where)
+    for k in ("query_s", "rows_considered", "rows", "checksum"):
+        need(full, k, NUM, f"{where}.full")
+        need(dem, k, NUM, f"{where}.demand")
+    for k in ("cone_rows", "rounds", "fallbacks", "replans",
+              "sketch_hits", "sketch_misses"):
+        need(dem, k, NUM, f"{where}.demand")
+    if full["checksum"] != dem["checksum"]:
+        raise Invalid(f"{where}: demand checksum {dem['checksum']} != "
+                      f"full checksum {full['checksum']}")
+    fr, dr = full["rows_considered"], dem["rows_considered"]
+    if dr >= fr:
+        raise Invalid(f"{where}: demand considered {dr} rows, not fewer "
+                      f"than full's {fr} — the cone restriction is not "
+                      f"restricting")
+    ratio = need(s, "rows_considered_ratio", NUM, where)
+    if not smoke and ratio >= 0.10:
+        raise Invalid(f"{where}.rows_considered_ratio: {ratio:.3f} — "
+                      f"the cold point query must touch <10% of the "
+                      f"full closure's rows at bench size")
+    rq = need(s, "requery", dict, where)
+    need(rq, "per_query_s", NUM, f"{where}.requery")
+    if need(rq, "checksum", NUM, f"{where}.requery") != dem["checksum"]:
+        raise Invalid(f"{where}.requery.checksum: cached re-query "
+                      f"result diverged from the first demand query")
+    if "transfer_bytes" in rq and rq["transfer_bytes"] != 0:
+        raise Invalid(f"{where}.requery.transfer_bytes: re-query at "
+                      f"fixed versions moved {rq['transfer_bytes']} "
+                      f"bytes — sketches and cached results must stay "
+                      f"resident")
+
+
+def check_changes_refs(repo_root: str) -> list:
+    """Every ``BENCH_<n>.json`` referenced by CHANGES.md must exist at
+    the repo root — a changelog claiming a snapshot that was never
+    committed breaks the cross-PR perf trajectory."""
+    path = os.path.join(repo_root, "CHANGES.md")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        text = f.read()
+    return [name for name in sorted(set(re.findall(r"BENCH_\d+\.json",
+                                                   text)))
+            if not os.path.exists(os.path.join(repo_root, name))]
+
+
 def validate(path: str) -> None:
     with open(path) as f:
         doc = json.load(f)
@@ -262,6 +331,9 @@ def validate(path: str) -> None:
     if "compression" in sections:
         check_compression(sections["compression"],
                           f"{path}.sections.compression")
+    if "demand" in sections:
+        check_demand(sections["demand"], f"{path}.sections.demand",
+                     smoke=doc["smoke"])
 
 
 def main() -> int:
@@ -280,6 +352,11 @@ def main() -> int:
         except (OSError, json.JSONDecodeError) as e:
             print(f"{p}: UNREADABLE — {e}")
             bad += 1
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for name in check_changes_refs(root):
+        print(f"CHANGES.md: references {name} but it is missing from "
+              f"the repo root")
+        bad += 1
     return 1 if bad else 0
 
 
