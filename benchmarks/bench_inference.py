@@ -606,6 +606,173 @@ def bench_demand(backend: str = "numpy", smoke: bool = False,
     return out
 
 
+def bench_serving(backend: str = "numpy", smoke: bool = False,
+                  shards: int = 1, writers: int = 2,
+                  readers: int = 4) -> dict:
+    """Concurrent fact-serving tier (ISSUE 10): FactServer QPS + parity.
+
+    Three sub-benchmarks over the K-chain closure store:
+
+    * ``mixed`` — ``writers`` append/delete threads against ``readers``
+      query threads; every served result is checked against a
+      single-threaded oracle replay of the write prefix behind its
+      snapshot token (``checksum_ok``), and any served token outside
+      the write history counts as a torn read.
+    * ``requery`` — steady-state delta-aware requery: after the warm
+      build, each append + requery round must run **zero** full
+      evaluations (signed ±frontier folds only).
+    * ``batching`` — cross-request coalescing of rank-1 point queries:
+      queries per device call at p50 must be >= 2.
+    """
+    import dataclasses
+    import threading
+
+    from repro.core.conditions import cond
+    from repro.serve import FactServer
+
+    k_chains, length = (4, 6) if smoke else (8, 8)
+    w_ops, r_ops = (10, 25) if smoke else (25, 60)
+    out = {"backend": backend, "shards": shards,
+           "chains": k_chains, "chain_len": length}
+
+    def build():
+        cfg = dataclasses.replace(EngineConfig.infer1(backend),
+                                  eval_mode="delta", shards=shards)
+        e = HiperfactEngine(cfg)
+        e.add_rules(_closure_rules())
+        e.insert_facts(_chain_facts(k_chains, length))
+        e.infer()
+        return e
+
+    def rows_key(rows):
+        return tuple(sorted(tuple(sorted(r.items())) for r in rows))
+
+    from repro.core.facts import Fact
+    point_q = [cond("edge", "c0_n0", "to", "?y")]          # batched route
+    join_q = [cond("edge", "?x", "to", "?y"),              # eval route
+              cond("path", "?y", "to", "?z")]
+
+    # ---- mixed append+query workload -----------------------------------
+    lat: list = []
+    served: list = []
+    lock = threading.Lock()
+    with FactServer(build(), batch_window=0.001,
+                    record_history=True) as srv:
+        def writer(w):
+            appended = []
+            for i in range(w_ops):
+                if w == 0 and i % 5 == 4 and appended:
+                    srv.delete([appended.pop(0)])
+                else:
+                    f = Fact("edge", f"w{w}_m{i}", "to", f"w{w}_m{i + 1}")
+                    srv.append([f])
+                    appended.append(f)
+
+        def reader(r):
+            for i in range(r_ops):
+                name = "point" if i % 2 else "join"
+                t0 = time.perf_counter()
+                res = srv.serve(point_q if name == "point" else join_q,
+                                tenant=f"t{r}")
+                dt = time.perf_counter() - t0
+                with lock:
+                    lat.append(dt)
+                    served.append((name, res))
+
+        threads = ([threading.Thread(target=writer, args=(w,))
+                    for w in range(writers)] +
+                   [threading.Thread(target=reader, args=(r,))
+                    for r in range(readers)])
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        history = list(srv.history)
+
+    known = {tok for _, _, tok in history}
+    torn = sum(1 for _, res in served if res.token not in known)
+    # oracle: one incremental replay of the history, query at every
+    # distinct served token
+    last_idx = {}
+    for i, (_, _, tok) in enumerate(history):
+        last_idx[tok] = i
+    oracle = HiperfactEngine(dataclasses.replace(
+        EngineConfig.infer1("numpy"), eval_mode="full"))
+    oracle.add_rules(_closure_rules())
+    oracle.insert_facts(_chain_facts(k_chains, length))
+    oracle.infer()
+    expect = {}
+    for i, (kind, facts, tok) in enumerate(history):
+        if facts:
+            if kind == "append":
+                oracle.insert_facts(facts)
+            else:
+                oracle.delete_facts(facts)
+            oracle.infer()
+        if last_idx[tok] == i:
+            expect[(tok, "point")] = rows_key(oracle.query(point_q))
+            expect[(tok, "join")] = rows_key(oracle.query(join_q))
+    checksum_ok = torn == 0 and all(
+        rows_key(res.rows) == expect[(res.token, name)]
+        for name, res in served)
+    ms = sorted(x * 1e3 for x in lat)
+    out["mixed"] = {"writers": writers, "readers": readers,
+                    "ops": writers * w_ops + len(served),
+                    "qps": len(served) / max(wall, 1e-9),
+                    "p50_ms": ms[len(ms) // 2],
+                    "p99_ms": ms[min(len(ms) - 1, int(len(ms) * 0.99))],
+                    "checksum_ok": bool(checksum_ok),
+                    "torn_reads": torn}
+
+    # ---- steady-state delta requery ------------------------------------
+    # single-condition point query: tracked by the engine's query nodes
+    # unsharded, and by the per-worker nodes (union route) sharded —
+    # each append extends the queried chain so every fold changes the
+    # result
+    path_q = [cond("path", "c0_n0", "to", "?z")]
+    rounds = 5 if smoke else 20
+    with FactServer(build(), batching=False) as srv:
+        srv.serve(path_q)                     # warm: the one full build
+        warm = srv.stats()["requery"]["full_evals"]
+        rlat = []
+        for i in range(rounds):
+            srv.append([Fact("edge", f"c0_n{length + i}", "to",
+                             f"c0_n{length + i + 1}")])
+            t0 = time.perf_counter()
+            srv.serve(path_q)
+            rlat.append(time.perf_counter() - t0)
+        st = srv.stats()["requery"]
+        assert len(srv.serve(path_q).rows) == length + rounds
+    rms = sorted(x * 1e3 for x in rlat)
+    out["requery"] = {"rounds": rounds,
+                      "full_evals": st["full_evals"] - warm,
+                      "delta_folds": st["delta_folds"],
+                      "p50_ms": rms[len(rms) // 2],
+                      "p99_ms": rms[min(len(rms) - 1,
+                                        int(len(rms) * 0.99))]}
+
+    # ---- cross-request batching ----------------------------------------
+    n_req = 8 if smoke else 16
+    with FactServer(build(), batch_window=None, max_batch=n_req) as srv:
+        qs = [[cond("edge", f"c{i % k_chains}_n0", "to", "?y")]
+              for i in range(n_req)]
+        threads = [threading.Thread(target=srv.serve,
+                                    args=(qs[i], f"t{i % 4}"))
+                   for i in range(n_req)]
+        for t in threads:
+            t.start()
+        deadline = time.time() + 30
+        while srv._batcher.queued() < n_req and time.time() < deadline:
+            time.sleep(0.001)
+        srv.flush_batches()
+        for t in threads:
+            t.join(timeout=60)
+        out["batching"] = srv.stats()["batch"]
+    return out
+
+
 def main(scale: int = 1, backend: str = "numpy"):
     print("dataset,engine,load_s,infer_s,query_s,facts_inferred")
     for dname, ename, r in bench(scale, backend=backend):

@@ -41,6 +41,13 @@ def main() -> None:
                     choices=["full", "delta", "auto", "demand"],
                     help="force the demand section on under --smoke "
                          "(demand) — non-smoke runs always include it")
+    ap.add_argument("--serve", action="store_true",
+                    help="force the serving section on under --smoke — "
+                         "non-smoke runs always include it")
+    ap.add_argument("--writers", type=int, default=2, metavar="N",
+                    help="writer threads for the serving section")
+    ap.add_argument("--readers", type=int, default=4, metavar="N",
+                    help="reader threads for the serving section")
     ap.add_argument("--shards", type=int, default=0, metavar="N",
                     help="also bench the sharded fixpoint "
                          "(EngineConfig(shards=N) vs shards=1); forces "
@@ -203,6 +210,33 @@ def main() -> None:
               f"{xfer}")
         print(f"bit_identical={dem['bit_identical']},"
               f"rows_considered_ratio={dem['rows_considered_ratio']:.3f}")
+
+    if not args.smoke or args.serve:
+        section(f"Fact serving: concurrent writers + snapshot-isolated "
+                f"readers (backend={args.backend})")
+        # FactServer QPS + oracle parity — see ISSUE 10 /
+        # docs/ARCHITECTURE.md §Serving tier
+        sv = bench_inference.bench_serving(
+            backend=args.backend, smoke=args.smoke,
+            shards=max(1, args.shards), writers=args.writers,
+            readers=args.readers)
+        report["sections"]["serving"] = sv
+        m = sv["mixed"]
+        print(f"mixed,writers={m['writers']},readers={m['readers']},"
+              f"ops={m['ops']},qps={m['qps']:.1f},"
+              f"p50={m['p50_ms']:.2f}ms,p99={m['p99_ms']:.2f}ms,"
+              f"checksum_ok={m['checksum_ok']},"
+              f"torn_reads={m['torn_reads']}")
+        rq = sv["requery"]
+        print(f"requery,rounds={rq['rounds']},"
+              f"full_evals={rq['full_evals']},"
+              f"delta_folds={rq['delta_folds']},"
+              f"p50={rq['p50_ms']:.2f}ms,p99={rq['p99_ms']:.2f}ms")
+        b = sv["batching"]
+        print(f"batching,device_calls={b['device_calls']},"
+              f"batched_queries={b['batched_queries']},"
+              f"coalesce_p50={b['coalesce_p50']:.1f},"
+              f"coalesce_mean={b['coalesce_mean']:.2f}")
 
     if not args.smoke:
         section(f"Table 4 analog: query config matrix "

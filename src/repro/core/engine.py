@@ -322,6 +322,11 @@ class HiperfactEngine:
             bool(getattr(self.ops, "prefer_handles", False))
             if self.config.device_pipeline == "auto"
             else self.config.device_pipeline == "on")
+        # delta-aware query nodes (serving tier, opt-in via
+        # enable_delta_requery): tracked queries keep signed result
+        # counts so a requery at moved watermarks folds only the
+        # ±frontier windows instead of re-evaluating the full join
+        self._requery_nodes = None
         # demand-mode memo: conditions-tuple -> version token over the
         # cone's input types at last materialization (a repeat query at
         # unchanged versions skips propagation entirely)
@@ -1192,6 +1197,11 @@ class HiperfactEngine:
         ev = DemandEvaluator(self, conditions)
         if not ev.cone_rules:
             return
+        # deletes between queries: derived rows materialized by earlier
+        # cones may have lost support — run the death-frontier check
+        # (and scrub, if triggered) that infer() would have run, so a
+        # demand query never serves retracted derivations
+        self._check_death_frontiers(self.last_infer)
         memo_key = self._result_cache.key(conditions, ()) \
             if self._result_cache is not None else None
         if memo_key is not None:
@@ -1252,6 +1262,10 @@ class HiperfactEngine:
                     # the single copy: cache entries are frozen tuples
                     return [dict(r) for r in hit]
                 self.last_infer.query_cache_misses += 1
+        if decode and self._requery_nodes is not None:
+            rows = self._query_tracked(rule, conditions, key)
+            if rows is not None:
+                return rows
         qstats: dict = {"rows_considered": 0, "replans": 0}
         bindings = evaluate_rule(
             self.store, rule, join_algo=cfg.join, rnl_mode=cfg.rnl,
@@ -1264,6 +1278,104 @@ class HiperfactEngine:
         if not decode:
             return bindings
         rows = decode_bindings(self.store, conditions, bindings)
+        if key is not None:
+            self._result_cache.put(key, rows)
+        return rows
+
+    # ------------------------------------------- delta-aware query nodes
+    def enable_delta_requery(self, on: bool = True) -> None:
+        """Opt the engine into delta-aware query nodes (serving tier).
+
+        Tracked decoded queries evaluate ``distinct=False`` once to
+        build per-row derivation counts, then fold only the signed
+        ±frontier windows on requery (see ``DeltaQueryNode``).  Off by
+        default: untracked engines keep the seed single-shot query path
+        byte for byte."""
+        if on and self._requery_nodes is None:
+            from repro.core.querycache import QueryNodeStore
+            self._requery_nodes = QueryNodeStore()
+        elif not on:
+            self._requery_nodes = None
+
+    def requery_stats(self) -> dict:
+        """Cumulative delta-requery counters (empty when tracking is
+        off).  Lives outside ``InferStats`` because ``infer()`` replaces
+        ``last_infer`` and serving interleaves writes with reads."""
+        if self._requery_nodes is None:
+            return {"tracked_queries": 0, "full_evals": 0,
+                    "delta_folds": 0, "delta_passes": 0, "rebuilds": 0}
+        return self._requery_nodes.stats()
+
+    def _query_tracked(self, rule: Rule, conditions, key):
+        """Serve a decoded query through its delta query node.
+
+        Returns the decoded rows, or ``None`` when the query is not
+        trackable (unhashable conditions, or an existence-gate condition
+        whose join contributes no multiplicity — exactly the PR 7
+        counting restriction) — the caller then takes the plain path.
+        Requery folding additionally requires monotone watermarks and a
+        bounded signed expansion; otherwise the node rebuilds."""
+        from repro.core.querycache import DeltaQueryNode
+        nodes = self._requery_nodes
+        nk = tuple(conditions)
+        try:
+            hash(nk)
+        except TypeError:
+            return None
+        if any(not c.variables() for c in rule.conditions):
+            return None
+        cfg = self.config
+        kw = dict(join_algo=cfg.join, rnl_mode=cfg.rnl, layout=cfg.layout,
+                  distinct=False, rl_fn=self._rl_fn(), ops=self.ops,
+                  pipeline=self._pipeline, planner=None)
+        node = nodes.get(nk)
+        new = self._table_marks(rule)
+        if node is not None:
+            monotone = all(
+                n1 >= node.marks.get(t, (0, 0))[0]
+                and d1 >= node.marks.get(t, (0, 0))[1]
+                for t, (n1, d1) in new.items())
+            passes = (self._signed_passes(rule, node.marks, new)
+                      if monotone else None)
+            if passes is not None:
+                qstats: dict = {"rows_considered": 0, "replans": 0}
+                islands = None
+                ran = 0
+                for sign, windows in passes:
+                    if not all(self._window_nonempty(rule.conditions[i], w)
+                               for i, w in windows.items()):
+                        continue
+                    if islands is None:
+                        islands = build_islands(self.store, rule)
+                    bindings = evaluate_rule(
+                        self.store, rule, islands=islands,
+                        delta_for=dict(windows), sort_mode="fixed",
+                        stats=qstats, **kw)
+                    ran += 1
+                    if bindings.n:
+                        node.fold(decode_bindings(self.store, conditions,
+                                                  bindings), sign)
+                node.marks = new
+                self.last_infer.rows_considered += qstats["rows_considered"]
+                nodes.delta_folds += 1
+                nodes.delta_passes += ran
+                rows = node.result()
+                if key is not None:
+                    self._result_cache.put(key, rows)
+                return rows
+            nodes.rebuilds += 1
+        # first sighting (or fold abandoned): full counting build
+        qstats = {"rows_considered": 0, "replans": 0}
+        bindings = evaluate_rule(
+            self.store, rule, sort_mode=cfg.sort_mode, stats=qstats,
+            **kw)
+        self.last_infer.rows_considered += qstats["rows_considered"]
+        self.last_infer.replans += qstats.get("replans", 0)
+        nodes.full_evals += 1
+        node = DeltaQueryNode(new, decode_bindings(self.store, conditions,
+                                                   bindings))
+        nodes.put(nk, node)
+        rows = node.result()
         if key is not None:
             self._result_cache.put(key, rows)
         return rows

@@ -64,6 +64,86 @@ class RankNCache:
                 "hit_rate": self.hits / total if total else 0.0}
 
 
+class DeltaQueryNode:
+    """Per-query signed-count state for delta-aware requery.
+
+    A tracked query keeps, per decoded result row, the number of
+    distinct derivations the query join produced for it — the same
+    counting semantics PR 7 uses for derived-fact support, applied one
+    level up at the query result.  A repeat query at moved watermarks
+    then runs only the signed frontier windows (inclusion–exclusion
+    over δ⁺ append tails and δ⁻ delete-log slices) and *folds* each
+    pass into these counts with its sign; rows whose count reaches zero
+    drop out, rows appearing with positive count join the result.  The
+    rebuilt result is exactly what a full ``distinct=True`` evaluation
+    at the new frontier would return — asserted by the serving parity
+    matrix in ``tests/test_serving.py``.
+    """
+
+    __slots__ = ("marks", "counts")
+
+    def __init__(self, marks: dict, rows: list) -> None:
+        self.marks = marks                  # {ftype: (n, dellog_n)}
+        self.counts: dict[tuple, int] = {}
+        self.fold(rows, 1)
+
+    def fold(self, rows: list, sign: int) -> None:
+        """Apply one evaluation pass (decoded rows with multiplicity)."""
+        counts = self.counts
+        for r in rows:
+            # canonical key: decoded dict ordering follows condition
+            # evaluation order, which differs between full passes and
+            # window-pinned passes — ± contributions must collide
+            k = tuple(sorted(r.items()))
+            c = counts.get(k, 0) + sign
+            if c:
+                counts[k] = c
+            else:
+                counts.pop(k, None)
+
+    def result(self) -> list[dict]:
+        """Distinct rows currently derivable (count > 0)."""
+        return [dict(k) for k, c in self.counts.items() if c > 0]
+
+
+class QueryNodeStore:
+    """Bounded registry of ``DeltaQueryNode``s keyed by the conditions
+    tuple, with the cumulative requery counters the serving tier and the
+    bench validator read (``full_evals`` must go to zero at steady
+    state).  Counters live here — not in ``InferStats`` — because
+    ``infer()`` replaces ``last_infer`` wholesale and a serving writer
+    re-infers between reads."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._nodes: OrderedDict[tuple, DeltaQueryNode] = OrderedDict()
+        self.full_evals = 0     # tracked queries that (re)built from scratch
+        self.delta_folds = 0    # requeries served by signed-window folding
+        self.delta_passes = 0   # signed windows actually evaluated
+        self.rebuilds = 0       # folds abandoned (table replaced / pass blowup)
+
+    def get(self, key: tuple) -> "DeltaQueryNode | None":
+        node = self._nodes.get(key)
+        if node is not None:
+            self._nodes.move_to_end(key)
+        return node
+
+    def put(self, key: tuple, node: DeltaQueryNode) -> None:
+        self._nodes[key] = node
+        if len(self._nodes) > self.max_entries:
+            self._nodes.popitem(last=False)
+
+    def drop(self, key: tuple) -> None:
+        self._nodes.pop(key, None)
+
+    def stats(self) -> dict:
+        return {"tracked_queries": len(self._nodes),
+                "full_evals": self.full_evals,
+                "delta_folds": self.delta_folds,
+                "delta_passes": self.delta_passes,
+                "rebuilds": self.rebuilds}
+
+
 class QueryResultCache:
     """Repeat-query fast path: decoded ``engine.query()`` results keyed
     by (conditions, input-table version token).

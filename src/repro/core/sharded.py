@@ -281,6 +281,7 @@ class ShardedEngine(HiperfactEngine):
         self._gather_memo: dict[tuple, tuple] = {}
         self._scrub_sync = False   # inside _global_scrub: view dels apply
         self._scrub_round = False  # a scrub reset rules this round
+        self._worker_requery = False  # delta query nodes live on workers
 
     # ------------------------------------------------------------------ API
     def add_rule(self, rule: Rule) -> None:
@@ -363,6 +364,11 @@ class ShardedEngine(HiperfactEngine):
         evs = [DemandEvaluator(w, list(conditions)) for w in self.workers]
         if not any(ev.cone_rules for ev in evs):
             return
+        # deletes between queries: mirror the unsharded engine's demand
+        # death-frontier check — a triggered worker escalates to the
+        # global scrub, so no shard serves retracted derivations
+        for w in self.workers:
+            w._check_death_frontiers(self.last_infer)
         memo_key = self._result_cache.key(conditions, ()) \
             if self._result_cache is not None else None
         cone_types = set().union(*(ev.cone_types for ev in evs))
@@ -421,6 +427,13 @@ class ShardedEngine(HiperfactEngine):
         groups = _island_groups(rule)
         single_var_island = (len(groups) == 1 and
                              all(isinstance(k, str) for k in groups))
+        if self._worker_requery and len(rule.conditions) == 1:
+            # a single-condition query hits one owner-partitioned table:
+            # per-shard results are disjoint regardless of island keys,
+            # so the union route is sound — and it is the route that
+            # engages the per-worker delta query nodes (the gathered
+            # snapshot would re-gather on every moved watermark)
+            single_var_island = True
         if decode and single_var_island:
             # one island == one id variable: each id's rows live on one
             # shard, so per-shard results are disjoint — a plain union
@@ -466,6 +479,24 @@ class ShardedEngine(HiperfactEngine):
                 out.append((t, w.shard) + ((tab.version, tab.data_version)
                                            if tab is not None else (-1, -1)))
         return tuple(out)
+
+    def enable_delta_requery(self, on: bool = True) -> None:
+        """Delta query nodes live per worker: the decomposable-query
+        union path delegates to ``HiperfactEngine.query`` on each
+        worker, whose node then folds only that shard's ±frontier
+        windows.  The parent holds no fact tables, so it keeps no nodes
+        of its own (its result cache still serves exact-token repeats)."""
+        self._worker_requery = bool(on)
+        for w in self.workers:
+            w.enable_delta_requery(on)
+
+    def requery_stats(self) -> dict:
+        agg = {"tracked_queries": 0, "full_evals": 0, "delta_folds": 0,
+               "delta_passes": 0, "rebuilds": 0}
+        for w in self.workers:
+            for k, v in w.requery_stats().items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
 
     # ---------------------------------------------------------------- write
     def _insert_columns(self, ftype, ids, attrs, vals, valtypes,

@@ -1,52 +1,89 @@
-"""Serving launcher: batched greedy decoding with continuous batching.
+"""Serving launcher: concurrent writers + readers over a FactServer.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
-        --requests 8 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --backend numpy \\
+        --writers 2 --readers 4 --write-ops 20 --reads 50
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import threading
 import time
-
-import numpy as np
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="yi-6b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--eval-mode", default="delta")
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--chains", type=int, default=8)
+    ap.add_argument("--hops", type=int, default=8)
+    ap.add_argument("--writers", type=int, default=2)
+    ap.add_argument("--readers", type=int, default=4)
+    ap.add_argument("--write-ops", type=int, default=10)
+    ap.add_argument("--reads", type=int, default=25)
     args = ap.parse_args()
 
-    import jax
-    from repro.configs import get_config
-    from repro.models import init_params, build_model
-    from repro.serve import BatchScheduler, Request, ServeEngine
+    from repro.core import EngineConfig, Fact, HiperfactEngine, Rule
+    from repro.core.conditions import AddAction, cond, term
+    from repro.serve import FactServer
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
-    params = init_params(model.spec(), jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=args.max_len, batch=args.batch)
-    sched = BatchScheduler(engine)
+    cfg = dataclasses.replace(EngineConfig.infer1(args.backend),
+                              eval_mode=args.eval_mode, shards=args.shards)
+    e = HiperfactEngine(cfg)
+    e.add_rules([
+        Rule("base", (cond("edge", "?x", "to", "?y"),),
+             (AddAction("path", term("?x"), "to", term("?y")),)),
+        Rule("rec", (cond("edge", "?x", "to", "?y"),
+                     cond("path", "?y", "to", "?z")),
+             (AddAction("path", term("?x"), "to", term("?z")),)),
+    ])
+    e.insert_facts([Fact("edge", f"c{j}_n{i}", "to", f"c{j}_n{i + 1}")
+                    for j in range(args.chains) for i in range(args.hops)])
+    if args.eval_mode != "demand":
+        e.infer()
 
-    rng = np.random.RandomState(0)
-    t0 = time.perf_counter()
-    for i in range(args.requests):
-        plen = int(rng.randint(4, 17))
-        sched.submit(Request(uid=i, prompt=rng.randint(
-            0, cfg.vocab, plen).astype(np.int32), max_new=args.max_new))
-    done = sched.run()
-    dt = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens "
-          f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
-    for r in done[:3]:
-        print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
-              f"-> out[:8]={r.out[:8]}")
+    with FactServer(e) as srv:
+        q = [cond("path", "c0_n0", "to", "?z")]
+        lat: list[float] = []
+        lat_lock = threading.Lock()
+
+        def writer(w: int) -> None:
+            for i in range(args.write_ops):
+                srv.append([Fact("edge", f"w{w}_m{i}", "to",
+                                 f"w{w}_m{i + 1}")])
+
+        def reader(r: int) -> None:
+            for i in range(args.reads):
+                t0 = time.perf_counter()
+                if i % 3 == 0:
+                    srv.serve([cond("edge", f"c{r % args.chains}_n0",
+                                    "to", "?y")], tenant=f"t{r}")
+                else:
+                    srv.serve(q, tenant=f"t{r}")
+                with lat_lock:
+                    lat.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        threads = ([threading.Thread(target=writer, args=(w,))
+                    for w in range(args.writers)] +
+                   [threading.Thread(target=reader, args=(r,))
+                    for r in range(args.readers)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        ms = sorted(x * 1e3 for x in lat)
+        st = srv.stats()
+        print(f"served {len(lat)} reads in {dt:.2f}s "
+              f"({len(lat) / dt:.1f} qps), "
+              f"p50 {ms[len(ms) // 2]:.2f}ms "
+              f"p99 {ms[int(len(ms) * 0.99)]:.2f}ms")
+        print(f"modes {st['served']}  requery {st['requery']}")
+        if "batch" in st:
+            print(f"batch {st['batch']}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
-"""Serving substrate: prefill/decode engine + batched scheduler."""
+"""Serving tier: snapshot-isolated concurrent fact serving."""
 
-from repro.serve.engine import BatchScheduler, Request, ServeEngine
+from repro.serve.engine import FactServer, ServedResult, project_token
 
-__all__ = ["BatchScheduler", "Request", "ServeEngine"]
+__all__ = ["FactServer", "ServedResult", "project_token"]

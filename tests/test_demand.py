@@ -202,3 +202,127 @@ def test_fallback_foreign_delete():
     rows = q_rows(e)
     assert e.last_infer.demand_fallbacks == 1
     assert rows == _reference_rows()
+
+
+# ---------------------------------------------------------------------------
+# Served variants (ISSUE 10): every rung of the fallback ladder answered
+# through a FactServer must stay checksum-identical to full evaluation
+
+
+def _mixed_action_rules():
+    # a cone rule whose actions are not all adds: the "delete-action"
+    # rung (distinct from "foreign-delete": the deleter is *inside* the
+    # producing cone here)
+    return closure_rules() + [
+        Rule("mix", (cond("edge", "?x", "to", "?y"),),
+             (AddAction("path", term("?y"), "to", term("?x")),
+              DeleteAction("Scratch", term("?x"), "dead", "yes")))]
+
+
+_SERVED_FALLBACKS = {
+    "unknown-constant": (
+        closure_rules, chain_facts,
+        [cond("path", "never_interned_served", "to", "?z")]),
+    "no-constants": (
+        closure_rules, chain_facts, [cond("path", "?x", "?a", "?z")]),
+    "existence-gate": (
+        lambda: closure_rules() + [
+            Rule("gated", (cond("Flag", "on", "enabled", "yes"),
+                           cond("edge", "?x", "to", "?y"),),
+                 (AddAction("path", term("?y"), "to", term("?x")),))],
+        lambda: chain_facts() + [Fact("Flag", "on", "enabled", "yes")],
+        POINT_Q),
+    "external-action": (
+        lambda: [Rule("base", (cond("edge", "?x", "to", "?y"),),
+                      (AddAction("path", term("?x"), "to", term("?y")),
+                       ExternalAction(lambda b: None)))],
+        chain_facts, POINT_Q),
+    "delete-action": (_mixed_action_rules, chain_facts, POINT_Q),
+    "foreign-delete": (
+        lambda: closure_rules() + [
+            Rule("purge", (cond("Tomb", "?x", "dead", "yes"),),
+                 (DeleteAction("path", term("?x"), "to", "gone"),))],
+        chain_facts, POINT_Q),
+}
+
+
+@pytest.mark.parametrize("reason", sorted(_SERVED_FALLBACKS))
+def test_served_fallback_parity(reason):
+    from repro.serve import FactServer
+
+    rules_fn, facts_fn, q = _SERVED_FALLBACKS[reason]
+    e = _build(_cfg(eval_mode="demand"), facts=facts_fn(),
+               rules=rules_fn())
+    assert DemandEvaluator(e, q).fallback == reason
+    full = _build(_cfg(eval_mode="full"), facts=facts_fn(),
+                  rules=rules_fn())
+    full.infer()
+    ref = sorted(tuple(sorted(r.items())) for r in full.query(q))
+    with FactServer(e, batching=False) as srv:
+        first = srv.serve(q)
+        assert sorted(tuple(sorted(r.items())) for r in first.rows) == ref
+        assert e.last_infer.demand_fallbacks >= 1
+        again = srv.serve(q)  # repeat at unchanged frontier
+        assert again.checksum() == first.checksum()
+
+
+def test_served_probe_cap_escalation_under_concurrent_append(monkeypatch):
+    """A served query whose demand sets outgrow PROBE_CAP mid-flight —
+    while a writer streams cold appends — must escalate to unrestricted
+    demand and stay checksum-identical to a full-evaluation replay of
+    the exact write prefix behind each served token."""
+    import threading
+
+    import repro.core.demand as demand_mod
+    from repro.serve import FactServer
+
+    monkeypatch.setattr(demand_mod, "PROBE_CAP", 2)
+    e = _build(_cfg(eval_mode="demand"))
+    # sanity: with the tiny cap, this cone really escalates
+    ev = DemandEvaluator(e, POINT_Q)
+    assert ev.fallback is None
+    while ev.round():
+        pass
+    assert any(d.all for d in ev.demand.values()), "no escalation hit"
+
+    e2 = _build(_cfg(eval_mode="demand"))
+    extra = [Fact("edge", f"c0_n{CHAIN_LEN + i}", "to",
+                  f"c0_n{CHAIN_LEN + i + 1}") for i in range(6)]
+    with FactServer(e2, batching=False, record_history=True) as srv:
+        served = []
+
+        def writer():
+            for f in extra:
+                srv.append([f])       # demand default: no infer (cold)
+
+        def reader():
+            for _ in range(8):
+                served.append(srv.serve(POINT_Q))
+
+        ts = [threading.Thread(target=writer),
+              threading.Thread(target=reader)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+        final = srv.serve(POINT_Q)
+        history = srv.history
+
+    # oracle: replay each history prefix on a full engine
+    by_token = {}
+    writes: list = []
+    for kind, facts, tok in history:
+        if facts:
+            writes.append((kind, facts))
+        o = _build(_cfg(eval_mode="full"))
+        o.infer()
+        for kind2, fs in writes:
+            (o.insert_facts if kind2 == "append" else o.delete_facts)(fs)
+            o.infer()
+        by_token[tok] = sorted(tuple(sorted(r.items()))
+                               for r in o.query(POINT_Q))
+    for res in served + [final]:
+        assert res.token in by_token, "torn read: token outside history"
+        got = sorted(tuple(sorted(r.items())) for r in res.rows)
+        assert got == by_token[res.token]
+    assert len(final.rows) == CHAIN_LEN + len(extra)

@@ -1,8 +1,10 @@
-"""Training semantics (accum equivalence, decreasing loss) + serving."""
+"""Training semantics (accum equivalence, decreasing loss) + serving
+(FactServer continuous batching and served-decode determinism)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import build_model, init_params
@@ -51,36 +53,74 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] * 0.8, losses
 
 
-def test_scheduler_continuous_batching():
-    from repro.serve import BatchScheduler, Request, ServeEngine
-    cfg = get_config("yi-6b", smoke=True)
-    model = build_model(cfg)
-    params = init_params(model.spec(), jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=64, batch=3)
-    sched = BatchScheduler(engine)
-    rng = np.random.RandomState(0)
-    for i in range(7):  # 3 waves over batch 3
-        sched.submit(Request(uid=i, prompt=rng.randint(
-            0, cfg.vocab, 8).astype(np.int32), max_new=5))
-    done = sched.run()
-    assert len(done) == 7
-    assert all(len(r.out) == 5 for r in done)
-    assert all(0 <= t < cfg.vocab for r in done for t in r.out)
+def _fact_server(**kw):
+    import dataclasses
+
+    from repro.core import EngineConfig, Fact, HiperfactEngine, Rule
+    from repro.core.conditions import AddAction, cond, term
+    from repro.serve import FactServer
+
+    cfg = dataclasses.replace(EngineConfig.infer1("numpy"),
+                              eval_mode="delta")
+    e = HiperfactEngine(cfg)
+    e.add_rules([
+        Rule("base", (cond("edge", "?x", "to", "?y"),),
+             (AddAction("path", term("?x"), "to", term("?y")),)),
+        Rule("rec", (cond("edge", "?x", "to", "?y"),
+                     cond("path", "?y", "to", "?z")),
+             (AddAction("path", term("?x"), "to", term("?z")),)),
+    ])
+    e.insert_facts([Fact("edge", f"n{i}", "to", f"n{i + 1}")
+                    for i in range(6)])
+    e.infer()
+    return FactServer(e, **kw)
 
 
-def test_greedy_decode_is_deterministic():
-    from repro.serve import BatchScheduler, Request, ServeEngine
-    cfg = get_config("recurrentgemma-9b", smoke=True)
-    model = build_model(cfg)
-    params = init_params(model.spec(), jax.random.PRNGKey(0))
+@pytest.mark.serving_stress
+def test_factserver_continuous_batching():
+    # 7 concurrent point queries over max_batch=3 drain in 3 waves of
+    # sizes [3, 3, 1] — the continuous-batching contract, now on facts
+    import threading
+    import time
+
+    from repro.core.conditions import cond
+
+    with _fact_server(batch_window=None, max_batch=3) as srv:
+        q = [cond("path", "n0", "to", "?z")]
+        results = [None] * 7
+
+        def run(i):
+            results[i] = srv.serve(q, tenant=f"u{i}")
+
+        threads = [threading.Thread(target=run, args=(i,))
+                   for i in range(7)]
+        for t in threads:
+            t.start()
+        deadline = time.time() + 10
+        while srv._batcher.queued() < 7:
+            assert time.time() < deadline, "requests never queued"
+            time.sleep(0.001)
+        assert srv.flush_batches() == 7
+        for t in threads:
+            t.join(timeout=30)
+        assert srv._batcher.flush_sizes == [3, 3, 1]
+        ref = sorted(map(repr, srv.engine.query(q)))
+        for res in results:
+            assert res.mode == "batched"
+            assert sorted(map(repr, res.rows)) == ref
+
+
+def test_served_decode_is_deterministic():
+    from repro.core import Fact
+    from repro.core.conditions import cond
 
     def run():
-        engine = ServeEngine(cfg, params, max_len=64, batch=2)
-        sched = BatchScheduler(engine)
-        for i in range(2):
-            sched.submit(Request(uid=i,
-                                 prompt=np.arange(6, dtype=np.int32) + i,
-                                 max_new=6))
-        return [tuple(r.out) for r in sched.run()]
+        with _fact_server(batching=False) as srv:
+            out = [srv.serve([cond("path", "n0", "to", "?z")]).checksum()]
+            srv.append([Fact("edge", "n6", "to", "n7")])
+            out.append(srv.serve([cond("path", "n0", "to", "?z")]).checksum())
+            out.append(srv.serve([cond("edge", "?x", "to", "?y"),
+                                  cond("path", "?y", "to", "?z")]).checksum())
+            return out
 
     assert run() == run()

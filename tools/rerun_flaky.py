@@ -1,0 +1,59 @@
+"""Flake guard for the threaded serving stress tests.
+
+Runs ``pytest -m serving_stress`` (the marker registered in
+pyproject.toml) N times in fresh subprocesses and fails on the first
+non-deterministic run.  CI's interpret pass invokes this with
+``--runs 20`` so a torn read, a lost batched request, or a
+scheduling-dependent oracle mismatch that only shows up one time in
+twenty still blocks the merge instead of landing as a latent flake.
+
+Usage::
+
+    PYTHONPATH=src python tools/rerun_flaky.py --runs 20 [pytest args...]
+
+Extra arguments after the known flags are passed through to pytest
+verbatim (e.g. a test-file path to narrow the sweep).
+"""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+
+# pytest: no tests collected for the -m expression.  A repo state where
+# the marker matches nothing should fail loudly, not vacuously pass 20x.
+EXIT_NO_TESTS = 5
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--runs", type=int, default=20,
+                    help="number of full pytest passes (default 20)")
+    ap.add_argument("--marker", default="serving_stress",
+                    help="pytest -m expression to select the stress tests")
+    args, passthrough = ap.parse_known_args(argv)
+
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", args.marker,
+           *passthrough]
+    print(f"flake guard: {args.runs}x {' '.join(cmd)}", flush=True)
+    for i in range(1, args.runs + 1):
+        t0 = time.time()
+        proc = subprocess.run(cmd)
+        dt = time.time() - t0
+        if proc.returncode == EXIT_NO_TESTS:
+            print(f"run {i}/{args.runs}: no tests matched "
+                  f"-m {args.marker!r}", file=sys.stderr)
+            return 1
+        if proc.returncode != 0:
+            print(f"run {i}/{args.runs}: FAILED (exit {proc.returncode} "
+                  f"after {dt:.1f}s) -- nondeterministic", file=sys.stderr)
+            return 1
+        print(f"run {i}/{args.runs}: ok ({dt:.1f}s)", flush=True)
+    print(f"flake guard: {args.runs} consecutive green runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

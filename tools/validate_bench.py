@@ -34,7 +34,12 @@ third-party dependency:
   magic-set cone vs the full closure — identical result checksums
   required, demand ``rows_considered`` strictly below full (and under
   10% of it at the non-smoke size), re-query at fixed versions
-  zero-transfer when the counter is present.
+  zero-transfer when the counter is present;
+* ``sections.serving`` (since PR 10): concurrent writers + readers —
+  ``checksum_ok`` (every served result matches the frozen-snapshot
+  oracle) and ``torn_reads == 0`` required, steady-state requery
+  ``full_evals == 0`` (signed-window folds only), and batching
+  ``coalesce_p50 >= 2`` queries per device call.
 
 Beyond per-file schema checks, the validator cross-checks CHANGES.md:
 every ``BENCH_<n>.json`` a changelog entry references must exist at the
@@ -292,6 +297,45 @@ def check_demand(s: dict, where: str, smoke: bool) -> None:
                       f"resident")
 
 
+def check_serving(s: dict, where: str) -> None:
+    """Serving-tier section (PR 10): concurrent writers + readers with
+    every served result checksum-identical to the frozen-snapshot
+    oracle (``checksum_ok``) and zero torn reads; steady-state
+    delta-aware requery must run **zero** full evaluations after the
+    warm build; cross-request batching must coalesce at least 2
+    queries per device call at p50."""
+    m = need(s, "mixed", dict, where)
+    if need(m, "writers", NUM, f"{where}.mixed") < 2:
+        raise Invalid(f"{where}.mixed.writers: need >= 2 concurrent "
+                      f"writers")
+    if need(m, "readers", NUM, f"{where}.mixed") < 4:
+        raise Invalid(f"{where}.mixed.readers: need >= 4 concurrent "
+                      f"readers")
+    for k in ("ops", "qps", "p50_ms", "p99_ms"):
+        need(m, k, NUM, f"{where}.mixed")
+    if need(m, "checksum_ok", bool, f"{where}.mixed") is not True:
+        raise Invalid(f"{where}.mixed.checksum_ok: a served result "
+                      f"diverged from the snapshot oracle replay")
+    if need(m, "torn_reads", NUM, f"{where}.mixed") != 0:
+        raise Invalid(f"{where}.mixed.torn_reads: "
+                      f"{m['torn_reads']} served tokens fell outside "
+                      f"the write history")
+    rq = need(s, "requery", dict, where)
+    for k in ("rounds", "delta_folds", "p50_ms", "p99_ms"):
+        need(rq, k, NUM, f"{where}.requery")
+    if need(rq, "full_evals", NUM, f"{where}.requery") != 0:
+        raise Invalid(f"{where}.requery.full_evals: "
+                      f"{rq['full_evals']} full evaluations at steady "
+                      f"state — requery must fold signed windows only")
+    b = need(s, "batching", dict, where)
+    for k in ("device_calls", "batched_queries", "coalesce_mean"):
+        need(b, k, NUM, f"{where}.batching")
+    if need(b, "coalesce_p50", NUM, f"{where}.batching") < 2:
+        raise Invalid(f"{where}.batching.coalesce_p50: "
+                      f"{b['coalesce_p50']} queries per device call — "
+                      f"coalescing must reach >= 2 at p50")
+
+
 def check_changes_refs(repo_root: str) -> list:
     """Every ``BENCH_<n>.json`` referenced by CHANGES.md must exist at
     the repo root — a changelog claiming a snapshot that was never
@@ -334,6 +378,8 @@ def validate(path: str) -> None:
     if "demand" in sections:
         check_demand(sections["demand"], f"{path}.sections.demand",
                      smoke=doc["smoke"])
+    if "serving" in sections:
+        check_serving(sections["serving"], f"{path}.sections.serving")
 
 
 def main() -> int:
